@@ -1,0 +1,57 @@
+"""Table-2 analogue: fine-tuning quality parity at 50% sparsity.
+
+Variants (small-LM, synthetic task; DESIGN.md §8 note 5):
+  pretrained  -- no adaptation
+  lora_dense  -- dense base + LoRA (the paper's quality ceiling)
+  salr        -- 50% bitmap base + trainable SVD residual + LoRA
+  prune_only  -- 50% base, no residual preservation (LoSA-style floor)
+
+Expected ordering (paper Table 2): salr ~= lora_dense << prune_only,
+with pretrained worst."""
+from __future__ import annotations
+
+from benchmarks.common import csv_line, run_finetune
+
+STEPS = 70
+
+
+def main() -> list:
+    lines = []
+    results = {}
+    # compression-only retention on task A (Figure-1 analogue: does the
+    # SVD residual recover what pruning destroyed, before any training?)
+    retain0 = {}
+    for name in ("lora_dense", "salr", "prune_only"):
+        r0 = run_finetune(name, steps=0)
+        retain0[name] = r0.retain_loss
+        lines.append(csv_line(f"table2_compressed_only_{name}", 0.0,
+                              f"taskA_loss={r0.retain_loss:.4f}"))
+    rec = ((retain0["prune_only"] - retain0["salr"])
+           / max(retain0["prune_only"] - retain0["lora_dense"], 1e-9))
+    lines.append(csv_line(
+        "table2_residual_recovery", 0.0,
+        f"salr_recovers_{100 * rec:.0f}%_of_pruning_damage"))
+
+    for name in ("pretrained", "lora_dense", "salr", "prune_only"):
+        steps = 0 if name == "pretrained" else STEPS
+        r = run_finetune(name, steps=steps)
+        results[name] = r
+        lines.append(csv_line(
+            f"table2_{name}", r.seconds * 1e6 / max(STEPS, 1),
+            f"adapt_loss={r.eval_loss:.4f};retain_loss={r.retain_loss:.4f}"))
+    # adaptation parity (GSM8K-analogue) + retention (MMLU-analogue)
+    gap_salr = results["salr"].eval_loss - results["lora_dense"].eval_loss
+    gap_prune = results["prune_only"].eval_loss - results["lora_dense"].eval_loss
+    ret_salr = results["salr"].retain_loss - results["lora_dense"].retain_loss
+    ret_prune = results["prune_only"].retain_loss - results["lora_dense"].retain_loss
+    lines.append(csv_line(
+        "table2_parity", 0.0,
+        f"adapt:salr_minus_lora={gap_salr:.4f};prune_minus_lora={gap_prune:.4f};"
+        f"retain:salr_minus_lora={ret_salr:.4f};prune_minus_lora={ret_prune:.4f};"
+        f"salr_beats_prune={(gap_salr < gap_prune) and (ret_salr < ret_prune)}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for l in main():
+        print(l)

@@ -1,0 +1,28 @@
+"""Table-7 analogue: sparsity-accuracy trade-off (10% / 30% / 50%).
+
+Paper: SALR holds dense-LoRA accuracy up to 50% sparsity (30% even
+slightly better -- moderate sparsity regularizes)."""
+from __future__ import annotations
+
+from benchmarks.common import csv_line, run_finetune
+
+STEPS = 70
+
+
+def main() -> list:
+    lines = []
+    base = run_finetune("lora_dense", steps=STEPS)
+    lines.append(csv_line("table7_lora_dense", base.seconds * 1e6 / STEPS,
+                          f"eval_loss={base.eval_loss:.4f}"))
+    for p in (0.1, 0.3, 0.5):
+        r = run_finetune("salr", steps=STEPS, sparsity=p)
+        gap = r.eval_loss - base.eval_loss
+        lines.append(csv_line(f"table7_salr_p{int(p * 100)}",
+                              r.seconds * 1e6 / STEPS,
+                              f"eval_loss={r.eval_loss:.4f};gap_to_lora={gap:+.4f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for l in main():
+        print(l)

@@ -1,0 +1,174 @@
+"""Shared harness for the paper-table benchmarks.
+
+Faithful-to-the-paper setup at CPU scale: a dense base model is
+PRETRAINED on task A (so its weights carry real information -- pruning a
+random matrix destroys nothing and would show no effect), then each
+variant compresses the same pretrained base and fine-tunes adapters on
+task B.  Eval on B measures adaptation quality; eval on A measures how
+much pretrained knowledge the compression preserved (the paper's GSM8K/
+MMLU axes, in miniature)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SALRModelConfig
+from repro.core.pytree import combine, partition, path_contains_attr
+from repro.core.salr import SALRConfig, compress_linear
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import model as M
+from repro.optim.adamw import AdamW
+from repro.train.state import TrainState
+from repro.train.step import make_loss_fn, make_train_step
+
+SEQ = 32
+BATCH = 8
+TASK_A_SEED = 7
+TASK_B_SEED = 21
+PRETRAIN_STEPS = 150
+_CACHE: dict = {}
+
+
+def _dense_cfg(base_arch="smollm_135m"):
+    cfg = configs.get(base_arch, smoke=True)
+    return cfg.with_(salr=SALRModelConfig(enabled=False))
+
+
+def _dataset(cfg, seed):
+    return SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ,
+                                  global_batch=BATCH, seed=seed))
+
+
+def pretrain_dense(base_arch="smollm_135m", steps=PRETRAIN_STEPS, lr=5e-3):
+    """Full-parameter pretraining on task A; cached per process."""
+    key = (base_arch, steps)
+    if key in _CACHE:
+        return _CACHE[key]
+    cfg = _dense_cfg(base_arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=lr, clip_norm=1.0)
+    opt_state = opt.init(params)
+    ds = _dataset(cfg, TASK_A_SEED)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            return M.lm_loss_chunked(p["lm_head"],
+                                     M.forward_hidden(p, cfg, batch["tokens"]),
+                                     batch["labels"])
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = opt.update(g, opt_state, params)
+        return params, opt_state, loss
+
+    loss = None
+    for i in range(steps):
+        params, opt_state, loss = step(params, opt_state, ds.batch_at(i))
+    _CACHE[key] = (cfg, params, float(loss))
+    return _CACHE[key]
+
+
+def recompress(params, scfg: SALRConfig, key=None):
+    """Replace every dense linear {"w"} (attn/mlp families) with a
+    SALRLinear compressed from the pretrained weight."""
+    if key is None:
+        key = jax.random.PRNGKey(3)
+    counter = [0]
+    skip = ("router", "embed", "lm_head", "wif")
+
+    def compress_one(w, k):
+        if w.ndim == 3:  # scan-stacked (L, d_in, d_out)
+            keys = jax.random.split(k, w.shape[0])
+            return jax.vmap(lambda kk, ww: compress_linear(
+                kk, ww.astype(jnp.float32), scfg))(keys, w)
+        return compress_linear(k, w.astype(jnp.float32), scfg)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if set(node.keys()) == {"w"} and not any(s in path for s in skip):
+                counter[0] += 1
+                return compress_one(node["w"],
+                                    jax.random.fold_in(key, counter[0]))
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, path + (str(i),))
+                              for i, v in enumerate(node))
+        return node
+    return walk(params, ())
+
+
+@dataclasses.dataclass
+class RunResult:
+    name: str
+    final_train_loss: float
+    eval_loss: float          # task B (adaptation)
+    retain_loss: float        # task A (knowledge retention)
+    seconds: float
+    extra: dict
+
+
+def _salr_cfg(name, sparsity, lora_rank, res_rank, method):
+    if name == "lora_dense":
+        return SALRConfig(sparsity=0.0, method="dense",
+                          lora_rank=lora_rank, res_rank=0, cap_align=8)
+    if name in ("salr", "salr_frozen_res"):
+        return SALRConfig(sparsity=sparsity, method=method,
+                          lora_rank=lora_rank, res_rank=res_rank, cap_align=8)
+    if name == "prune_only":
+        return SALRConfig(sparsity=sparsity, method=method,
+                          lora_rank=lora_rank, res_rank=0, cap_align=8)
+    if name == "pretrained":
+        return SALRConfig(sparsity=0.0, method="dense", lora_rank=0,
+                          res_rank=0, cap_align=8)
+    raise ValueError(name)
+
+
+def run_finetune(name: str, steps: int = 60, lr: float = 5e-3,
+                 sparsity: float = 0.5, method: str = "bitmap",
+                 lora_rank: int = 8, res_rank: int = 16,
+                 base_arch: str = "smollm_135m",
+                 eval_batches: int = 4) -> RunResult:
+    cfg, dense_params, _ = pretrain_dense(base_arch)
+    scfg = _salr_cfg(name, sparsity, lora_rank, res_rank, method)
+    params = recompress(dense_params, scfg)
+
+    from repro.core.pytree import split_trainable
+    trainable, frozen = split_trainable(params)
+    if name == "salr_frozen_res":
+        res_tr, trainable = partition(
+            trainable, lambda p, x: path_contains_attr(p, ("res",)))
+        frozen = combine(frozen, res_tr)
+
+    opt = AdamW(lr=lr, clip_norm=1.0)
+    state = TrainState(step=jnp.zeros((), jnp.int32), trainable=trainable,
+                       frozen=frozen, opt=opt.init(trainable))
+    ds_b = _dataset(cfg, TASK_B_SEED)
+    ds_a = _dataset(cfg, TASK_A_SEED)
+    step = jax.jit(make_train_step(cfg, opt))
+    loss_fn = jax.jit(make_loss_fn(cfg))
+
+    t0 = time.time()
+    last = float("nan")
+    n_leaves = len(jax.tree_util.tree_leaves(trainable))
+    if n_leaves and steps > 0:
+        for i in range(steps):
+            state, metrics = step(state, ds_b.batch_at(i))
+            last = float(metrics["loss"])
+    dt = time.time() - t0
+
+    def ev(ds, base):
+        vals = [float(loss_fn(state.trainable, state.frozen,
+                              ds.batch_at(base + j)))
+                for j in range(eval_batches)]
+        return sum(vals) / len(vals)
+
+    return RunResult(name=name, final_train_loss=last,
+                     eval_loss=ev(ds_b, 10_000), retain_loss=ev(ds_a, 10_000),
+                     seconds=dt, extra={"steps": steps})
+
+
+def csv_line(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.2f},{derived}"

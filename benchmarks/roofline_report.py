@@ -1,0 +1,86 @@
+"""Generate the §Dry-run / §Roofline markdown tables from the JSON
+artifacts written by repro.launch.dryrun.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b / 1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}GB"
+    return f"{b / 1e6:.1f}MB"
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def load(dirname: str, mesh: str):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        parts = name.split("__")
+        if len(parts) != 3 or parts[2] != mesh:
+            continue
+        with open(path) as f:
+            cells[(parts[0], parts[1])] = json.load(f)
+    return cells
+
+
+def dryrun_table(cells: dict) -> str:
+    rows = ["| arch | shape | compile | args/dev | temp/dev | collectives "
+            "(ag/ar/rs/a2a/cp) |",
+            "|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(cells.items()):
+        m = r["memory"]
+        c = r["collectives"]["count_by_kind"]
+        rows.append(
+            f"| {arch} | {shape} | {r['compile_seconds']:.0f}s "
+            f"| {fmt_bytes(m.get('argument_size_in_bytes', 0))} "
+            f"| {fmt_bytes(m.get('temp_size_in_bytes', 0))} "
+            f"| {c.get('all-gather', 0)}/{c.get('all-reduce', 0)}"
+            f"/{c.get('reduce-scatter', 0)}/{c.get('all-to-all', 0)}"
+            f"/{c.get('collective-permute', 0)} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells: dict) -> str:
+    rows = ["| arch | shape | t_comp | t_mem | t_coll | bottleneck "
+            "| MODEL_FLOPS | useful | roofline_frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(cells.items()):
+        t = r["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | {fmt_s(t['t_compute_s'])} "
+            f"| {fmt_s(t['t_memory_s'])} | {fmt_s(t['t_collective_s'])} "
+            f"| **{t['bottleneck']}** | {t['model_flops_global']:.2e} "
+            f"| {t['useful_ratio']:.3f} | {t['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    cells = load(args.dir, args.mesh)
+    print(f"## Dry-run ({args.mesh} mesh, {len(cells)} cells)\n")
+    print(dryrun_table(cells))
+    print(f"\n## Roofline ({args.mesh} mesh)\n")
+    print(roofline_table(cells))
+
+
+if __name__ == "__main__":
+    main()

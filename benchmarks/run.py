@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Run:
+    PYTHONPATH=src python -m benchmarks.run [--only tableN]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("theory", "benchmarks.bench_theory"),
+    ("table2", "benchmarks.bench_table2_parity"),
+    ("table3", "benchmarks.bench_table3_ftcost"),
+    ("table4", "benchmarks.bench_table4_speedup"),
+    ("table5", "benchmarks.bench_table5_residual"),
+    ("table6", "benchmarks.bench_table6_qsalr"),
+    ("table7", "benchmarks.bench_table7_sparsity"),
+    ("fig3", "benchmarks.bench_fig3_spectra"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark (e.g. table4)")
+    args = ap.parse_args()
+
+    import importlib
+    failures = 0
+    print("name,us_per_call,derived")
+    for tag, modname in MODULES:
+        if args.only and args.only != tag:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            for line in mod.main():
+                print(line)
+            print(f"{tag}_total,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception:
+            failures += 1
+            print(f"{tag}_total,0,FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""End-to-end SALR fine-tuning driver example.
+
+Defaults to a CPU-sized model so it finishes in minutes on one core;
+pass ``--full`` to fine-tune the real SmolLM-135M configuration (the
+~100M-class end-to-end run -- feasible on accelerators, slow on a
+single CPU core).
+
+    PYTHONPATH=src python examples/finetune_salr.py
+    PYTHONPATH=src python examples/finetune_salr.py --full --steps 300
+"""
+import argparse
+import sys
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--ckpt-dir", default="/tmp/salr_finetune_ckpt")
+    args = ap.parse_args()
+
+    argv = ["--arch", "smollm_135m",
+            "--steps", str(args.steps),
+            "--batch", "8", "--seq", "64",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "25",
+            "--log-every", "5"]
+    if not args.full:
+        argv.append("--smoke")
+    print("launching:", " ".join(argv))
+    train.main(argv)
+
+    print("\nresume demo: restarting from the latest checkpoint "
+          "(fault-tolerance path)")
+    train.main(argv + ["--resume"])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,5 @@
+"""Fault-tolerant sharded checkpointing with elastic resharding."""
+from repro.checkpoint.ckpt import (all_steps, latest_step, manifest,
+                                   restore, save)
+
+__all__ = ["all_steps", "latest_step", "manifest", "restore", "save"]

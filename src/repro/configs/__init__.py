@@ -1,0 +1,8 @@
+"""Architecture configs: 10 assigned + the paper's own fine-tuning target."""
+from repro.configs.base import (ASSIGNED, PAPER_OWN, SHAPES, ArchConfig,
+                                LayerGroup, MLAConfig, SALRModelConfig,
+                                ShapeSpec, get, names, register, shapes_for)
+
+__all__ = ["ASSIGNED", "PAPER_OWN", "SHAPES", "ArchConfig", "LayerGroup",
+           "MLAConfig", "SALRModelConfig", "ShapeSpec", "get", "names",
+           "register", "shapes_for"]

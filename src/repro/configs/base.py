@@ -1,0 +1,166 @@
+"""Architecture / shape / SALR configuration system and registry.
+
+Every assigned architecture is a ``repro.configs.<id>`` module exposing
+``CONFIG`` (exact published numbers) and ``SMOKE`` (a reduced config of
+the same family for CPU tests).  ``repro.configs.get(name)`` resolves
+either.  Shapes are the four assigned (seq_len, global_batch) cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2/V3)."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SALRModelConfig:
+    """How SALR is applied across a model's linear layers."""
+    enabled: bool = True
+    sparsity: float = 0.5
+    method: str = "bitmap"          # dense | mask | bitmap | nm | bitmap_nf4
+    lora_rank: int = 64
+    res_rank: int = 64
+    # which linear families get compressed (embeddings/norms never are)
+    targets: tuple = ("attn", "mlp", "expert", "recurrent")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGroup:
+    """``pattern`` of block kinds, repeated ``repeats`` times.
+
+    Uniform stacks scan over ``repeats`` with stacked params; the pattern
+    handles hybrid archs (e.g. recurrentgemma's [rglru, rglru, attn]).
+    Block kinds: attn | attn_local | mla | rglru | mlstm | slstm.
+    ``mlp`` kind is attached per-block from ArchConfig.mlp.
+    """
+    pattern: tuple
+    repeats: int
+    mlp: Optional[str] = None        # override ArchConfig.mlp for this group
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | encdec | vlm
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    layer_groups: tuple              # decoder (or only) stack
+    head_dim: Optional[int] = None
+    mlp: str = "swiglu"              # swiglu | relu2 | gelu | none
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    first_dense_layers: int = 0      # leading dense-FFN layers (deepseek)
+    # attention extras
+    mla: Optional[MLAConfig] = None
+    window: int = 0                  # local-attention window (attn_local)
+    rope_theta: float = 1e4
+    # recurrent extras
+    rnn_width: int = 0               # RG-LRU width (0 => d_model)
+    conv_width: int = 4
+    # encoder-decoder
+    encoder_groups: tuple = ()       # non-empty => enc-dec
+    # modality frontend stub (embeddings provided by input_specs)
+    frontend: Optional[str] = None   # vision | audio
+    frontend_len: int = 0            # prefix embedding positions
+    # numerics
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    kv_cache: str = "native"         # native | int8 (quantized decode cache)
+    # compression
+    salr: SALRModelConfig = SALRModelConfig()
+    # which shapes this arch supports (sub-quadratic archs add long_500k)
+    sub_quadratic: bool = False
+
+    @property
+    def n_layers(self) -> int:
+        return sum(g.n_layers for g in self.layer_groups)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def rnn_dim(self) -> int:
+        return self.rnn_width if self.rnn_width else self.d_model
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shapes_for(cfg: ArchConfig) -> list:
+    """Runnable shape cells for an arch (DESIGN.md §5 skip rules)."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        names.append("long_500k")
+    return [SHAPES[n] for n in names]
+
+
+_REGISTRY: dict = {}
+
+
+def register(name: str, config: ArchConfig, smoke: ArchConfig) -> None:
+    _REGISTRY[name] = (config, smoke)
+
+
+def get(name: str, smoke: bool = False) -> ArchConfig:
+    if not _REGISTRY:
+        _load_all()
+    cfg, smk = _REGISTRY[name]
+    return smk if smoke else cfg
+
+
+def names() -> list:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+ASSIGNED = [
+    "mistral_large_123b", "smollm_135m", "nemotron_4_340b", "internlm2_1_8b",
+    "internvl2_76b", "deepseek_v3_671b", "granite_moe_1b_a400m",
+    "recurrentgemma_2b", "seamless_m4t_medium", "xlstm_1_3b",
+]
+
+PAPER_OWN = ["llama3_8b_proxy"]
+
+
+def _load_all() -> None:
+    import importlib
+    for mod in ASSIGNED + PAPER_OWN:
+        importlib.import_module(f"repro.configs.{mod}")

@@ -1,0 +1,22 @@
+"""InternVL2-76B VLM backbone (InternViT frontend stubbed as precomputed
+patch embeddings via input_specs). [arXiv:2404.16821; unverified]"""
+from repro.configs.base import ArchConfig, LayerGroup, SALRModelConfig, register
+
+CONFIG = ArchConfig(
+    name="internvl2_76b", family="vlm",
+    d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab_size=128256, mlp="swiglu",
+    layer_groups=(LayerGroup(("attn",), 80),),
+    frontend="vision", frontend_len=256,
+)
+
+SMOKE = ArchConfig(
+    name="internvl2_76b_smoke", family="vlm",
+    d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=256, vocab_size=512, mlp="swiglu", dtype="float32",
+    layer_groups=(LayerGroup(("attn",), 2),),
+    frontend="vision", frontend_len=8,
+    salr=SALRModelConfig(lora_rank=4, res_rank=4, method="bitmap"),
+)
+
+register("internvl2_76b", CONFIG, SMOKE)

@@ -1,0 +1,25 @@
+"""RecurrentGemma-2B: RG-LRU + local attention, 1 attn : 2 recurrent.
+[arXiv:2402.19427; hf]  Sub-quadratic => runs long_500k."""
+from repro.configs.base import ArchConfig, LayerGroup, SALRModelConfig, register
+
+CONFIG = ArchConfig(
+    name="recurrentgemma_2b", family="hybrid",
+    d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab_size=256000, mlp="swiglu",
+    layer_groups=(LayerGroup(("rglru", "rglru", "attn_local"), 8),
+                  LayerGroup(("rglru", "rglru"), 1)),
+    window=2048, rnn_width=2560, conv_width=4,
+    sub_quadratic=True,
+)
+
+SMOKE = ArchConfig(
+    name="recurrentgemma_2b_smoke", family="hybrid",
+    d_model=128, n_heads=4, n_kv_heads=1, head_dim=32,
+    d_ff=256, vocab_size=512, mlp="swiglu", dtype="float32",
+    layer_groups=(LayerGroup(("rglru", "rglru", "attn_local"), 1),),
+    window=16, rnn_width=128, conv_width=4,
+    sub_quadratic=True,
+    salr=SALRModelConfig(lora_rank=4, res_rank=4, method="bitmap"),
+)
+
+register("recurrentgemma_2b", CONFIG, SMOKE)

@@ -1,0 +1,24 @@
+"""SeamlessM4T-medium text backbone: 12L enc + 12L dec; audio frontend
+stubbed as precomputed frame embeddings. [arXiv:2308.11596; hf]"""
+from repro.configs.base import ArchConfig, LayerGroup, SALRModelConfig, register
+
+CONFIG = ArchConfig(
+    name="seamless_m4t_medium", family="encdec",
+    d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+    d_ff=4096, vocab_size=256206, mlp="gelu",
+    layer_groups=(LayerGroup(("attn",), 12),),
+    encoder_groups=(LayerGroup(("attn",), 12),),
+    frontend="audio", frontend_len=1024,
+)
+
+SMOKE = ArchConfig(
+    name="seamless_m4t_medium_smoke", family="encdec",
+    d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+    d_ff=256, vocab_size=512, mlp="gelu", dtype="float32",
+    layer_groups=(LayerGroup(("attn",), 2),),
+    encoder_groups=(LayerGroup(("attn",), 2),),
+    frontend="audio", frontend_len=16,
+    salr=SALRModelConfig(lora_rank=4, res_rank=4, method="bitmap"),
+)
+
+register("seamless_m4t_medium", CONFIG, SMOKE)

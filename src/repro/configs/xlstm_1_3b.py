@@ -1,0 +1,22 @@
+"""xLSTM-1.3B: mLSTM + sLSTM blocks at 7:1, no separate FFN (d_ff=0).
+[arXiv:2405.04517; unverified]  Sub-quadratic => runs long_500k."""
+from repro.configs.base import ArchConfig, LayerGroup, SALRModelConfig, register
+
+CONFIG = ArchConfig(
+    name="xlstm_1_3b", family="ssm",
+    d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304, mlp="none",
+    layer_groups=(LayerGroup(("mlstm",) * 7 + ("slstm",), 6),),
+    sub_quadratic=True,
+)
+
+SMOKE = ArchConfig(
+    name="xlstm_1_3b_smoke", family="ssm",
+    d_model=128, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=512, mlp="none", dtype="float32",
+    layer_groups=(LayerGroup(("mlstm", "slstm"), 1),),
+    sub_quadratic=True,
+    salr=SALRModelConfig(lora_rank=4, res_rank=4, method="bitmap"),
+)
+
+register("xlstm_1_3b", CONFIG, SMOKE)

@@ -1,0 +1,13 @@
+"""SALR core: the paper's contribution as composable JAX modules."""
+from repro.core import adapters, bitmap, prune, pytree, quant, residual, salr, theory
+from repro.core.adapters import LoRAAdapter, apply_adapters_fused, concat_adapters, init_lora
+from repro.core.bitmap import BitmapWeight, NMWeight, decode, encode, nm_decode, nm_encode
+from repro.core.salr import SALRConfig, SALRLinear, apply_salr, compress_linear
+
+__all__ = [
+    "adapters", "bitmap", "prune", "pytree", "quant", "residual", "salr",
+    "theory", "LoRAAdapter", "apply_adapters_fused", "concat_adapters",
+    "init_lora", "BitmapWeight", "NMWeight", "decode", "encode",
+    "nm_decode", "nm_encode", "SALRConfig", "SALRLinear", "apply_salr",
+    "compress_linear",
+]

@@ -1,0 +1,309 @@
+"""Bitmap encoding of pruned weights (paper §"Mapping Sparse Weights").
+
+Storage format (TPU adaptation, see DESIGN.md §3):
+
+  * ``words``  : uint32 (rows, ceil(cols/32)) -- the bitmap B packed 32
+    columns per word (paper uses byte blocks + a 256-entry LUT on CUDA;
+    on TPU we unpack with vectorized shifts and replace the LUT with an
+    exclusive-popcount prefix = cumulative sum of bits).
+  * ``values`` : (rows, cap) -- compact nonzeros in row-major order,
+    padded per row to a *static* capacity ``cap``.  Rows whose nnz
+    exceeds ``cap`` spill their smallest-magnitude entries; the spill is
+    returned so callers can fold it into the SVD residual E (exactness
+    of W = W_hat + E is preserved).
+
+Also provides the N:M (2:4) semi-structured variant where every group of
+``m`` columns holds exactly ``n`` values -- fully regular, no padding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("words", "values"),
+         meta_fields=("cols", "cap"))
+@dataclasses.dataclass(frozen=True)
+class BitmapWeight:
+    """Bitmap-encoded sparse matrix of logical shape (rows, cols)."""
+    words: jax.Array    # uint32 (rows, n_words)
+    values: jax.Array   # (rows, cap)
+    cols: int           # logical column count (static)
+    cap: int            # per-row value capacity (static)
+
+    @property
+    def rows(self) -> int:
+        return self.words.shape[0]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.rows, self.cols)
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def nbytes(self) -> int:
+        return self.words.size * 4 + self.values.size * self.values.dtype.itemsize
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("group_bits", "values"),
+         meta_fields=("cols", "n", "m"))
+@dataclasses.dataclass(frozen=True)
+class NMWeight:
+    """N:M semi-structured matrix: exactly n nonzeros per m columns."""
+    group_bits: jax.Array   # uint8 (rows, cols//m) -- m-bit pattern per group
+    values: jax.Array       # (rows, cols//m * n)
+    cols: int
+    n: int
+    m: int
+
+    @property
+    def rows(self) -> int:
+        return self.group_bits.shape[0]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.rows, self.cols)
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def nbytes(self) -> int:
+        return self.group_bits.size + self.values.size * self.values.dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# bit pack / unpack
+# ---------------------------------------------------------------------------
+
+def pack_bits(mask: jax.Array) -> jax.Array:
+    """Pack a boolean (rows, cols) mask into uint32 words (rows, ceil(cols/32))."""
+    rows, cols = mask.shape
+    padded = round_up(cols, 32)
+    m = jnp.pad(mask, ((0, 0), (0, padded - cols))).astype(jnp.uint32)
+    m = m.reshape(rows, padded // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(m << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, cols: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns boolean (rows, cols)."""
+    rows, n_words = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(rows, n_words * 32)[:, :cols].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# unstructured bitmap encode / decode
+# ---------------------------------------------------------------------------
+
+def default_capacity(cols: int, p: float, align: int = 128) -> int:
+    """Static per-row value capacity for global sparsity p (DESIGN.md §3)."""
+    cap = round_up(max(int(np.ceil(cols * (1.0 - p))), align), align)
+    return min(cap, cols)
+
+
+def encode(w_hat: jax.Array, mask: jax.Array, cap: int
+           ) -> tuple[BitmapWeight, jax.Array]:
+    """Encode ``w_hat`` (already-masked weights) under ``mask``.
+
+    Returns (BitmapWeight, spill) where ``spill`` is a dense (rows, cols)
+    matrix of entries that did not fit in ``cap`` (smallest-magnitude
+    entries of overflowing rows).  ``decode(bw) + spill == w_hat``.
+    """
+    rows, cols = w_hat.shape
+    mag = jnp.abs(w_hat) * mask
+    # magnitude rank per entry within its row (0 = largest kept)
+    order = jnp.argsort(-mag, axis=1, stable=True)
+    mag_rank = jnp.argsort(order, axis=1, stable=True)
+    kept = mask & (mag_rank < cap)
+    spill = jnp.where(mask & ~kept, w_hat, 0).astype(w_hat.dtype)
+
+    # compact: exclusive prefix popcount along the row = value slot index
+    kept_i = kept.astype(jnp.int32)
+    slot = jnp.cumsum(kept_i, axis=1) - kept_i
+    slot = jnp.minimum(slot, cap - 1)
+    rows_idx = jnp.broadcast_to(jnp.arange(rows)[:, None], (rows, cols))
+    values = jnp.zeros((rows, cap), w_hat.dtype).at[rows_idx, slot].add(
+        jnp.where(kept, w_hat, 0).astype(w_hat.dtype))
+    return BitmapWeight(words=pack_bits(kept), values=values,
+                        cols=cols, cap=cap), spill
+
+
+def decode(bw: BitmapWeight) -> jax.Array:
+    """Pure-jnp reference decode (the oracle for the Pallas kernel)."""
+    bits = unpack_bits(bw.words, bw.cols)
+    b = bits.astype(jnp.int32)
+    slot = jnp.cumsum(b, axis=1) - b                     # exclusive popcount
+    slot = jnp.minimum(slot, bw.cap - 1)
+    gathered = jnp.take_along_axis(bw.values, slot, axis=1)
+    return jnp.where(bits, gathered, 0).astype(bw.values.dtype)
+
+
+def encode_from_dense(w: jax.Array, p: float, cap: int | None = None,
+                      mask: jax.Array | None = None
+                      ) -> tuple[BitmapWeight, jax.Array]:
+    """Convenience: magnitude-prune ``w`` at rate p, then encode.
+
+    Returns (BitmapWeight, residual_total) where residual_total = pruned
+    entries + capacity spill, i.e. exactly  w - decode(bw).
+    """
+    from repro.core import prune  # local import to avoid cycles
+    if mask is None:
+        mask = prune.magnitude_mask(w, p)
+    if cap is None:
+        cap = default_capacity(w.shape[1], p)
+    w_hat = prune.apply_mask(w, mask)
+    bw, spill = encode(w_hat, mask, cap)
+    residual_total = prune.residual(w, mask) + spill
+    return bw, residual_total
+
+
+# ---------------------------------------------------------------------------
+# tiled bitmap (kernel storage format)
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("words", "values"),
+         meta_fields=("cols", "tile", "cap_t"))
+@dataclasses.dataclass(frozen=True)
+class TiledBitmapWeight:
+    """Bitmap matrix tiled along columns for the Pallas decode+GEMM kernel.
+
+    Each (row, column-tile) cell stores its own compact value segment of
+    static capacity ``cap_t``; the kernel's N-block equals the tile width
+    so every grid step reads exactly the compressed bytes of its tile
+    (DESIGN.md §3 -- this is how the paper's ring-buffer pipeline maps to
+    Pallas multi-buffered DMA).
+    """
+    words: jax.Array    # uint32 (rows, n_tiles, tile//32)
+    values: jax.Array   # (rows, n_tiles, cap_t)
+    cols: int
+    tile: int
+    cap_t: int
+
+    @property
+    def rows(self) -> int:
+        return self.words.shape[0]
+
+    @property
+    def n_tiles(self) -> int:
+        return self.words.shape[1]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.rows, self.cols)
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def nbytes(self) -> int:
+        return self.words.size * 4 + self.values.size * self.values.dtype.itemsize
+
+
+def tiled_capacity(tile: int, p: float, slack_sigmas: float = 4.0,
+                   align: int = 8) -> int:
+    """Per-tile capacity: mean + slack_sigmas * binomial std, aligned."""
+    mean = tile * (1.0 - p)
+    std = float(np.sqrt(tile * p * (1.0 - p)))
+    return min(tile, round_up(int(np.ceil(mean + slack_sigmas * std)), align))
+
+
+def tile_encode(w_hat: jax.Array, mask: jax.Array, tile: int, cap_t: int
+                ) -> tuple[TiledBitmapWeight, jax.Array]:
+    """Encode into the tiled format.  Returns (TiledBitmapWeight, spill)."""
+    rows, cols = w_hat.shape
+    assert cols % tile == 0 and tile % 32 == 0
+    n_tiles = cols // tile
+    wr = w_hat.reshape(rows * n_tiles, tile)
+    mr = mask.reshape(rows * n_tiles, tile)
+    bw, spill = encode(wr, mr, cap_t)
+    tbw = TiledBitmapWeight(
+        words=bw.words.reshape(rows, n_tiles, tile // 32),
+        values=bw.values.reshape(rows, n_tiles, cap_t),
+        cols=cols, tile=tile, cap_t=cap_t)
+    return tbw, spill.reshape(rows, cols)
+
+
+def tile_decode(tbw: TiledBitmapWeight) -> jax.Array:
+    """Pure-jnp reference decode of the tiled format."""
+    rows, n_tiles = tbw.rows, tbw.n_tiles
+    bw = BitmapWeight(words=tbw.words.reshape(rows * n_tiles, tbw.tile // 32),
+                      values=tbw.values.reshape(rows * n_tiles, tbw.cap_t),
+                      cols=tbw.tile, cap=tbw.cap_t)
+    return decode(bw).reshape(rows, tbw.cols)
+
+
+def tile_encode_from_dense(w: jax.Array, p: float, tile: int = 256,
+                           cap_t: int | None = None
+                           ) -> tuple[TiledBitmapWeight, jax.Array]:
+    """Prune + tile-encode; returns (TiledBitmapWeight, total residual)."""
+    from repro.core import prune
+    mask = prune.magnitude_mask(w, p)
+    if cap_t is None:
+        cap_t = tiled_capacity(tile, p)
+    w_hat = prune.apply_mask(w, mask)
+    tbw, spill = tile_encode(w_hat, mask, tile, cap_t)
+    return tbw, prune.residual(w, mask) + spill
+
+
+# ---------------------------------------------------------------------------
+# N:M encode / decode
+# ---------------------------------------------------------------------------
+
+def nm_encode(w: jax.Array, n: int = 2, m: int = 4,
+              mask: jax.Array | None = None) -> tuple[NMWeight, jax.Array]:
+    """Encode with an N:M mask.  Returns (NMWeight, residual)."""
+    from repro.core import prune
+    rows, cols = w.shape
+    assert cols % m == 0
+    if mask is None:
+        mask = prune.nm_mask(w, n=n, m=m)
+    g = mask.reshape(rows, cols // m, m)
+    shifts = jnp.arange(m, dtype=jnp.uint32)
+    group_bits = jnp.sum(g.astype(jnp.uint32) << shifts, axis=-1).astype(jnp.uint8)
+
+    wg = w.reshape(rows, cols // m, m)
+    ki = g.astype(jnp.int32)
+    slot = jnp.cumsum(ki, axis=-1) - ki                  # 0..n-1 within group
+    slot = jnp.minimum(slot, n - 1)
+    rows_idx = jnp.broadcast_to(jnp.arange(rows)[:, None, None], g.shape)
+    grp_idx = jnp.broadcast_to(jnp.arange(cols // m)[None, :, None], g.shape)
+    values = jnp.zeros((rows, cols // m, n), w.dtype).at[
+        rows_idx, grp_idx, slot].add(jnp.where(g, wg, 0).astype(w.dtype))
+    nmw = NMWeight(group_bits=group_bits, values=values.reshape(rows, cols // m * n),
+                   cols=cols, n=n, m=m)
+    return nmw, prune.residual(w, mask)
+
+
+def nm_decode(nmw: NMWeight) -> jax.Array:
+    """Pure-jnp reference decode of an N:M matrix."""
+    rows, cols, n, m = nmw.rows, nmw.cols, nmw.n, nmw.m
+    shifts = jnp.arange(m, dtype=jnp.uint8)
+    bits = ((nmw.group_bits[:, :, None] >> shifts) & jnp.uint8(1)).astype(bool)
+    b = bits.astype(jnp.int32)
+    slot = jnp.cumsum(b, axis=-1) - b
+    slot = jnp.minimum(slot, n - 1)
+    vals = nmw.values.reshape(rows, cols // m, n)
+    gathered = jnp.take_along_axis(vals, slot, axis=-1)
+    return jnp.where(bits, gathered, 0).reshape(rows, cols).astype(nmw.dtype)
+
+
+def compression_ratio(dense_shape: tuple[int, int], dtype, encoded_nbytes: int) -> float:
+    """dense bytes / encoded bytes."""
+    dense = int(np.prod(dense_shape)) * jnp.dtype(dtype).itemsize
+    return dense / encoded_nbytes

@@ -1,0 +1,105 @@
+"""Magnitude pruning (Method 1: static mask on the frozen base weights).
+
+Supports:
+  * per-matrix / global magnitude thresholds at a target sparsity ``p``
+  * N:M semi-structured masks (paper Table 4 uses 2:4)
+  * mask application and residual extraction E = W - W_hat
+
+Everything is pure jnp; masks are boolean arrays of the weight shape.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+
+def magnitude_threshold(w: jax.Array, p: float) -> jax.Array:
+    """Threshold T_p so that a fraction ``p`` of |w| entries fall at/below it."""
+    flat = jnp.abs(w).reshape(-1)
+    n = flat.shape[0]
+    k = jnp.clip(jnp.round(p * n).astype(jnp.int32), 0, n)
+    # kth smallest magnitude == quantile threshold; sort is fine at
+    # compression time (one-off, not in the training step).
+    sorted_mag = jnp.sort(flat)
+    # T_p = magnitude of the k-th smallest entry (entries <= T_p pruned).
+    idx = jnp.maximum(k - 1, 0)
+    t = jnp.where(k > 0, sorted_mag[idx], -jnp.inf)
+    return t
+
+
+def magnitude_mask(w: jax.Array, p: float) -> jax.Array:
+    """Static magnitude mask keeping the largest (1-p) fraction of |w|.
+
+    Exactly ``round(p * size)`` entries are pruned (ties broken by index)
+    so downstream capacity planning is deterministic.
+    """
+    flat = jnp.abs(w).reshape(-1)
+    n = flat.shape[0]
+    k_prune = int(round(float(p) * n))
+    if k_prune <= 0:
+        return jnp.ones_like(w, dtype=bool)
+    if k_prune >= n:
+        return jnp.zeros_like(w, dtype=bool)
+    # argsort ascending; the first k_prune indices are pruned.
+    order = jnp.argsort(flat, stable=True)
+    keep = jnp.ones((n,), dtype=bool).at[order[:k_prune]].set(False)
+    return keep.reshape(w.shape)
+
+
+def global_masks(ws: Iterable[jax.Array], p: float) -> list[jax.Array]:
+    """Global-threshold masks across a list of matrices (one shared T_p)."""
+    ws = list(ws)
+    mags = jnp.concatenate([jnp.abs(w).reshape(-1) for w in ws])
+    n = mags.shape[0]
+    k_prune = int(round(float(p) * n))
+    if k_prune <= 0:
+        return [jnp.ones_like(w, dtype=bool) for w in ws]
+    t = jnp.sort(mags)[k_prune - 1]
+    return [jnp.abs(w) > t for w in ws]
+
+
+def nm_mask(w: jax.Array, n: int = 2, m: int = 4) -> jax.Array:
+    """N:M semi-structured mask: keep the n largest of every m consecutive
+    entries along the last axis.  Last dim must be divisible by m."""
+    *lead, cols = w.shape
+    assert cols % m == 0, f"cols={cols} not divisible by m={m}"
+    g = w.reshape(*lead, cols // m, m)
+    mag = jnp.abs(g)
+    # rank within group (0 = largest); keep rank < n
+    order = jnp.argsort(-mag, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    keep = ranks < n
+    return keep.reshape(w.shape)
+
+
+def apply_mask(w: jax.Array, mask: jax.Array) -> jax.Array:
+    """W_hat = W * mask."""
+    return jnp.where(mask, w, jnp.zeros((), dtype=w.dtype))
+
+
+def residual(w: jax.Array, mask: jax.Array) -> jax.Array:
+    """E = W - W_hat = the pruned-away entries."""
+    return jnp.where(mask, jnp.zeros((), dtype=w.dtype), w)
+
+
+def sparsity(mask: jax.Array) -> jax.Array:
+    """Fraction of pruned (False) entries."""
+    return 1.0 - jnp.mean(mask.astype(jnp.float32))
+
+
+# --- dynamic-mask baselines used by benchmarks (Methods 2 & 3) -------------
+
+def method2_prune(w0: jax.Array, delta: jax.Array, p: float) -> jax.Array:
+    """Dynamic mask from U = W0 + Delta, zeroing only W0 (Method 2).
+
+    Returns the effective weight:  mask*W0 + Delta."""
+    mask = magnitude_mask(w0 + delta, p)
+    return apply_mask(w0, mask) + delta
+
+
+def method3_prune(w0: jax.Array, delta: jax.Array, p: float) -> jax.Array:
+    """Dynamic mask on the full U = W0 + Delta (Method 3, LoSA-style)."""
+    u = w0 + delta
+    return apply_mask(u, magnitude_mask(u, p))

@@ -1,0 +1,48 @@
+"""Pytree partition/combine utilities (equinox-style) used to split SALR
+parameters into trainable (LoRA + residual adapters) and frozen (sparse
+base) subtrees, and by the optimizer to build matching state trees.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def path_contains_attr(path, names: tuple[str, ...]) -> bool:
+    for k in path:
+        if isinstance(k, jax.tree_util.GetAttrKey) and k.name in names:
+            return True
+        if isinstance(k, jax.tree_util.DictKey) and str(k.key) in names:
+            return True
+    return False
+
+
+def partition(tree: Any, select: Callable[[tuple, Any], bool]):
+    """Split ``tree`` into (selected, rest); complementary leaves are None."""
+    selected = jax.tree_util.tree_map_with_path(
+        lambda p, x: x if select(p, x) else None, tree)
+    rest = jax.tree_util.tree_map_with_path(
+        lambda p, x: None if select(p, x) else x, tree)
+    return selected, rest
+
+
+def combine(*trees: Any) -> Any:
+    """Merge partitioned trees: at each leaf position take the non-None one."""
+    def pick(*leaves):
+        out = None
+        for l in leaves:
+            if l is not None:
+                if out is not None:
+                    raise ValueError("overlapping leaves in combine()")
+                out = l
+        return out
+    return jax.tree_util.tree_map(pick, *trees, is_leaf=lambda x: x is None)
+
+
+TRAINABLE_ATTRS = ("lora", "res", "trainable")
+
+
+def split_trainable(params: Any):
+    """(trainable, frozen) split: adapters train, sparse base stays frozen."""
+    return partition(params, lambda p, x: path_contains_attr(p, TRAINABLE_ATTRS))

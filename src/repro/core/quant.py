@@ -1,0 +1,69 @@
+"""NF4 (NormalFloat-4) block quantization for QSALR (paper Table 6).
+
+QSALR = static sparsity mask + NF4 quantization of the *kept* values:
+we quantize the compact ``values`` array of a BitmapWeight, so the
+bitmap structure is untouched and compression stacks multiplicatively.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The 16 NF4 levels (QLoRA, Dettmers et al. 2023): quantiles of N(0,1)
+# normalized to [-1, 1].
+NF4_LEVELS = np.array([
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+], dtype=np.float32)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("codes", "scales"),
+         meta_fields=("shape", "block"))
+@dataclasses.dataclass(frozen=True)
+class NF4Tensor:
+    """NF4-quantized tensor: 4-bit codes packed two-per-byte + per-block
+    absmax scales."""
+    codes: jax.Array    # uint8 (n_elems // 2,)
+    scales: jax.Array   # float32 (n_blocks,)
+    shape: tuple        # logical shape (static)
+    block: int          # block size (static)
+
+    def nbytes(self) -> int:
+        return self.codes.size + self.scales.size * self.scales.dtype.itemsize
+
+
+def quantize_nf4(x: jax.Array, block: int = 64) -> NF4Tensor:
+    shape = tuple(x.shape)
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scales = jnp.max(jnp.abs(blocks), axis=1)
+    scales = jnp.maximum(scales, 1e-12)
+    normed = blocks / scales[:, None]
+    levels = jnp.asarray(NF4_LEVELS)
+    # nearest level index
+    idx = jnp.argmin(jnp.abs(normed[..., None] - levels), axis=-1).astype(jnp.uint8)
+    idx = idx.reshape(-1)
+    lo, hi = idx[0::2], idx[1::2]
+    codes = (lo | (hi << 4)).astype(jnp.uint8)
+    return NF4Tensor(codes=codes, scales=scales, shape=shape, block=block)
+
+
+def dequantize_nf4(q: NF4Tensor, dtype=jnp.float32) -> jax.Array:
+    lo = (q.codes & jnp.uint8(0x0F)).astype(jnp.int32)
+    hi = (q.codes >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=1).reshape(-1)
+    levels = jnp.asarray(NF4_LEVELS)
+    vals = levels[idx].reshape(-1, q.block) * q.scales[:, None]
+    n = int(np.prod(q.shape))
+    return vals.reshape(-1)[:n].reshape(q.shape).astype(dtype)

@@ -1,0 +1,54 @@
+"""Sparsity-preservation residual: truncated-SVD low-rank recovery of the
+pruned-away entries (paper §"Sparsity Preservation Pruning", Theorem 3),
+and the Theorem-4 learning-rate machinery for training it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adapters import LoRAAdapter
+from repro.core.theory import eta_svd_star  # re-export for callers
+
+
+def truncated_svd_adapter(e: jax.Array, rank: int,
+                          dtype=None) -> LoRAAdapter:
+    """Best rank-r approximation of the residual E as a LoRA pair.
+
+    E ~= (U_r sqrt(S_r)) (sqrt(S_r) V_r^T) =: A_res @ B_res, balanced so
+    both factors have comparable scale (stable under AdamW fine-tuning).
+    """
+    if dtype is None:
+        dtype = e.dtype
+    ef = e.astype(jnp.float32)
+    u, s, vt = jnp.linalg.svd(ef, full_matrices=False)
+    r = min(rank, s.shape[0])
+    sq = jnp.sqrt(s[:r])
+    a = (u[:, :r] * sq[None, :]).astype(dtype)
+    b = (sq[:, None] * vt[:r, :]).astype(dtype)
+    if r < rank:  # pad to the requested static rank with zeros
+        a = jnp.pad(a, ((0, 0), (0, rank - r)))
+        b = jnp.pad(b, ((0, rank - r), (0, 0)))
+    return LoRAAdapter(a=a, b=b, scale=1.0)
+
+
+def approximation_error(e: jax.Array, adapter: LoRAAdapter) -> jax.Array:
+    """||E - A B||_F^2 / (d*k): per-entry MSE of the recovery."""
+    diff = e.astype(jnp.float32) - adapter.delta_w().astype(jnp.float32)
+    return jnp.mean(jnp.square(diff))
+
+
+def per_entry_mse(e: jax.Array) -> jax.Array:
+    """||E||_F^2 / (d*k)."""
+    return jnp.mean(jnp.square(e.astype(jnp.float32)))
+
+
+def singular_spectrum(e: jax.Array) -> jax.Array:
+    """Singular values of the residual (Figure-3 spectra)."""
+    return jnp.linalg.svd(e.astype(jnp.float32), compute_uv=False)
+
+
+__all__ = [
+    "truncated_svd_adapter", "approximation_error", "per_entry_mse",
+    "singular_spectrum", "eta_svd_star",
+]

@@ -1,0 +1,214 @@
+"""SALRLinear: the paper's contribution as one composable JAX module.
+
+A SALR linear layer is
+    y = x @ W_hat  +  (x @ A_cat) @ B_cat  (+ bias)
+where W_hat is the statically-pruned frozen base (stored dense, bitmap,
+N:M, or NF4-quantized bitmap) and A_cat/B_cat fuse the task LoRA adapter
+with the sparsity-preservation residual adapter into a single GEMM pair.
+
+Only ``lora`` and ``res`` fields are trainable (see repro.core.pytree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core import prune
+from repro.core.adapters import LoRAAdapter, init_lora
+from repro.core.quant import NF4Tensor, dequantize_nf4, quantize_nf4
+from repro.core.residual import truncated_svd_adapter
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("words", "qvalues"), meta_fields=("cols", "cap"))
+@dataclasses.dataclass(frozen=True)
+class QBitmapWeight:
+    """Bitmap sparse matrix whose compact values are NF4-quantized (QSALR)."""
+    words: jax.Array
+    qvalues: NF4Tensor
+    cols: int
+    cap: int
+
+    @property
+    def rows(self) -> int:
+        return self.words.shape[0]
+
+    def nbytes(self) -> int:
+        return self.words.size * 4 + self.qvalues.nbytes()
+
+
+@dataclasses.dataclass(frozen=True)
+class SALRConfig:
+    """Static compression configuration for one family of linear layers."""
+    sparsity: float = 0.5
+    method: str = "bitmap"        # dense | mask | bitmap | nm | bitmap_nf4
+    lora_rank: int = 64
+    res_rank: int = 64
+    nm: tuple = (2, 4)
+    cap_align: int = 128
+    dtype: str = "float32"
+
+    def capacity(self, cols: int) -> int:
+        return bm.default_capacity(cols, self.sparsity, self.cap_align)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("base", "lora", "res", "bias"),
+         meta_fields=("d_in", "d_out", "transposed"))
+@dataclasses.dataclass(frozen=True)
+class SALRLinear:
+    """Frozen sparse base + trainable fused adapters."""
+    base: object                   # Array | BitmapWeight | NMWeight | QBitmapWeight
+    lora: LoRAAdapter
+    res: Optional[LoRAAdapter]
+    bias: Optional[jax.Array]
+    d_in: int
+    d_out: int
+    transposed: bool               # True => base stores W^T (sharded-rows layout)
+
+
+def materialize_base(base) -> jax.Array:
+    """Dense W_hat from any base representation (reference decode path)."""
+    if isinstance(base, bm.BitmapWeight):
+        return bm.decode(base)
+    if isinstance(base, bm.NMWeight):
+        return bm.nm_decode(base)
+    if isinstance(base, QBitmapWeight):
+        vals = dequantize_nf4(base.qvalues)
+        return bm.decode(bm.BitmapWeight(words=base.words,
+                                         values=vals,
+                                         cols=base.cols, cap=base.cap))
+    return base  # dense / masked-dense array
+
+
+def adapter_cat(layer: SALRLinear) -> tuple[jax.Array, jax.Array]:
+    """A_cat/B_cat fusing the LoRA and residual adapters (paper §Concat)."""
+    if layer.res is None:
+        return layer.lora.a, layer.lora.b * layer.lora.scale
+    a_cat = jnp.concatenate([layer.lora.a, layer.res.a], axis=1)
+    b_cat = jnp.concatenate([layer.lora.b * layer.lora.scale,
+                             layer.res.b * layer.res.scale], axis=0)
+    return a_cat, b_cat
+
+
+def apply_salr(x: jax.Array, layer: SALRLinear,
+               precision=None, constrain_fn=None) -> jax.Array:
+    """y = x @ W_hat + (x @ A_cat) @ B_cat (+ bias).  x: (..., d_in).
+
+    ``constrain_fn`` (optional) pins the decoded dense W_hat (rows, cols)
+    to the storage-row sharding under pjit (repro.distributed.sharding)."""
+    w = materialize_base(layer.base)
+    if constrain_fn is not None:
+        w = constrain_fn(w)
+    if layer.transposed:
+        y = jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (1,)), ((), ())), precision=precision)
+    else:
+        y = jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (0,)), ((), ())), precision=precision)
+    a_cat, b_cat = adapter_cat(layer)
+    y = y + (x @ a_cat) @ b_cat
+    if layer.bias is not None:
+        y = y + layer.bias
+    return y
+
+
+def delta_w(layer: SALRLinear) -> jax.Array:
+    """Effective dense update contributed by the fused adapters."""
+    a_cat, b_cat = adapter_cat(layer)
+    return a_cat @ b_cat
+
+
+def effective_weight(layer: SALRLinear) -> jax.Array:
+    """Dense W_hat + A_cat B_cat (for analysis only; defeats compression)."""
+    w = materialize_base(layer.base)
+    if layer.transposed:
+        w = w.T
+    return w + delta_w(layer)
+
+
+# ---------------------------------------------------------------------------
+# compression entry point
+# ---------------------------------------------------------------------------
+
+def compress_linear(key: jax.Array, w: jax.Array, cfg: SALRConfig,
+                    bias: Optional[jax.Array] = None,
+                    transposed: bool = False) -> SALRLinear:
+    """Compress a dense weight W (d_in, d_out) into a SALRLinear.
+
+    Pipeline (paper Fig. 2a): magnitude-prune -> encode base (bitmap/NM/
+    NF4) -> truncated-SVD the total residual (pruned entries + capacity
+    spill) into the trainable ``res`` adapter -> fresh LoRA adapter.
+    If ``transposed``, storage is W^T so the encoded row axis equals the
+    sharded output dimension (DESIGN.md §3 sharding-aware encoding).
+    """
+    d_in, d_out = w.shape
+    store = w.T if transposed else w
+    dtype = jnp.dtype(cfg.dtype)
+    res_ad = None
+
+    if cfg.method == "dense":
+        base = store.astype(dtype)
+    elif cfg.method == "mask":
+        mask = prune.magnitude_mask(store, cfg.sparsity)
+        base = prune.apply_mask(store, mask).astype(dtype)
+        e = prune.residual(store, mask)
+        res_ad = _res_adapter(e, cfg, transposed, dtype)
+    elif cfg.method == "bitmap":
+        bw, e = bm.encode_from_dense(store.astype(dtype), cfg.sparsity,
+                                     cap=cfg.capacity(store.shape[1]))
+        base = bw
+        res_ad = _res_adapter(e, cfg, transposed, dtype)
+    elif cfg.method == "nm":
+        n, m = cfg.nm
+        nmw, e = bm.nm_encode(store.astype(dtype), n=n, m=m)
+        base = nmw
+        res_ad = _res_adapter(e, cfg, transposed, dtype)
+    elif cfg.method == "bitmap_nf4":
+        bw, e = bm.encode_from_dense(store.astype(jnp.float32), cfg.sparsity,
+                                     cap=cfg.capacity(store.shape[1]))
+        q = quantize_nf4(bw.values)
+        # quantization error of kept values joins the residual too
+        qerr_vals = bw.values - dequantize_nf4(q)
+        e = e + bm.decode(bm.BitmapWeight(words=bw.words, values=qerr_vals,
+                                          cols=bw.cols, cap=bw.cap))
+        base = QBitmapWeight(words=bw.words, qvalues=q,
+                             cols=bw.cols, cap=bw.cap)
+        res_ad = _res_adapter(e, cfg, transposed, dtype)
+    else:
+        raise ValueError(f"unknown SALR method {cfg.method!r}")
+
+    lora = init_lora(key, d_in, d_out, cfg.lora_rank, dtype=dtype)
+    return SALRLinear(base=base, lora=lora, res=res_ad,
+                      bias=None if bias is None else bias.astype(dtype),
+                      d_in=d_in, d_out=d_out, transposed=transposed)
+
+
+def _res_adapter(e_store: jax.Array, cfg: SALRConfig, transposed: bool,
+                 dtype) -> Optional[LoRAAdapter]:
+    if cfg.res_rank <= 0:
+        return None
+    e = e_store.T if transposed else e_store   # back to (d_in, d_out)
+    return truncated_svd_adapter(e, cfg.res_rank, dtype=dtype)
+
+
+def base_nbytes(layer: SALRLinear) -> int:
+    base = layer.base
+    if hasattr(base, "nbytes") and callable(base.nbytes):
+        return base.nbytes()
+    return base.size * base.dtype.itemsize
+
+
+def layer_nbytes(layer: SALRLinear) -> int:
+    n = base_nbytes(layer)
+    for ad in (layer.lora, layer.res):
+        if ad is not None:
+            n += ad.a.size * ad.a.dtype.itemsize + ad.b.size * ad.b.dtype.itemsize
+    if layer.bias is not None:
+        n += layer.bias.size * layer.bias.dtype.itemsize
+    return n

@@ -1,0 +1,4 @@
+"""Data pipeline substrate."""
+from repro.data.pipeline import DataConfig, SyntheticLM, pack_documents
+
+__all__ = ["DataConfig", "SyntheticLM", "pack_documents"]

@@ -1,0 +1,4 @@
+"""Distribution: sharding rules, compressed collectives, pipeline."""
+from repro.distributed import collectives, pipeline, sharding
+
+__all__ = ["collectives", "pipeline", "sharding"]

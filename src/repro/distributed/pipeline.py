@@ -1,0 +1,81 @@
+"""GPipe-style pipeline parallelism over the ``pod`` axis (DESIGN.md §4).
+
+The layer stack is split into S contiguous stages (stage s holds
+layers [s*L/S, (s+1)*L/S)); M microbatches stream through; activations
+hop stages via ``ppermute``.  Bubble fraction = (S-1)/(M+S-1).
+
+This is the optional alternative to treating ``pod`` as extra data
+parallelism; the default multi-pod config uses DP over pods (gradient
+all-reduce overlaps with backward), but at very large model scale
+pipeline stages keep the per-pod weight footprint constant.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def gpipe_forward(mesh: Mesh, stage_fn: Callable, stage_params,
+                  x_mbs: jax.Array, axis: str = "pod") -> jax.Array:
+    """Run microbatches through pipeline stages.
+
+    stage_params: pytree whose leaves have a leading stage axis of size
+    S = mesh.shape[axis] (sharded over ``axis``).
+    stage_fn(params_slice, x) -> y, same shape as x.
+    x_mbs: (M, mb, ...) microbatches (replicated).
+    Returns (M, mb, ...) outputs (replicated).
+    """
+    s_total = mesh.shape[axis]
+    m_total = x_mbs.shape[0]
+    ticks = m_total + s_total - 1
+
+    p_specs = jax.tree_util.tree_map(lambda _: P(axis), stage_params)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(p_specs, P()), out_specs=P(),
+             check_vma=False)
+    def run(params, xs):
+        params = jax.tree_util.tree_map(lambda l: l[0], params)  # squeeze stage
+        stage = jax.lax.axis_index(axis)
+        mb_shape = xs.shape[1:]
+        carry_in = jnp.zeros(mb_shape, xs.dtype)
+        out_buf = jnp.zeros_like(xs)
+
+        def tick(t, state):
+            carry, outs = state
+            # stage 0 ingests microbatch t (if any)
+            feed = xs[jnp.minimum(t, m_total - 1)]
+            x_in = jnp.where(stage == 0, feed, carry)
+            y = stage_fn(params, x_in)
+            # last stage emits microbatch t - (S-1)
+            emit_idx = jnp.clip(t - (s_total - 1), 0, m_total - 1)
+            do_emit = (t >= s_total - 1)
+            emit = jnp.where(jnp.logical_and(stage == s_total - 1, do_emit),
+                             y, outs[emit_idx])
+            outs = jax.lax.dynamic_update_index_in_dim(outs, emit, emit_idx, 0)
+            # shift activations to the next stage
+            perm = [(i, (i + 1) % s_total) for i in range(s_total)]
+            carry = jax.lax.ppermute(y, axis, perm)
+            return carry, outs
+
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (carry_in, out_buf))
+        # replicate the last stage's outputs to every pod
+        src = s_total - 1
+        mask = (stage == src).astype(outs.dtype)
+        return jax.lax.psum(outs * mask, axis)
+
+    return run(stage_params, x_mbs)
+
+
+def split_stages(stacked_params, n_stages: int):
+    """Reshape scan-stacked layer params (L, ...) -> (S, L/S, ...)."""
+    def one(l):
+        total = l.shape[0]
+        assert total % n_stages == 0, (total, n_stages)
+        return l.reshape(n_stages, total // n_stages, *l.shape[1:])
+    return jax.tree_util.tree_map(one, stacked_params)

@@ -1,0 +1,353 @@
+"""Sharding rules: map every parameter / activation / cache leaf to a
+NamedSharding over the (pod?, data, model) mesh.
+
+Strategy (DESIGN.md §4):
+  * pod axis  -- extra data parallelism by default (gradient all-reduce
+    over pods overlaps with backward); pipeline stages optionally.
+  * data axis -- batch / token groups.
+  * model axis -- tensor parallelism: attention heads, FFN hidden, MoE
+    experts, vocab; sequence parallelism for the residual stream.
+
+Rules are *name-based* over pytree paths: the structures produced by
+repro.models carry semantically meaningful key names (wq/wk/wv/wo,
+gate/up/down, router, table, words/values, a/b, ...).  For SALR bitmap
+leaves the encoded row axis is the TP-sharded dimension by construction
+(transposed storage), so `words`/`values` shard on rows.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _path_names(path) -> list:
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.GetAttrKey):
+            out.append(k.name)
+        elif isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            out.append(f"[{k.idx}]")
+    return out
+
+
+# linears whose *output* dim is TP-sharded (stored transposed => rows)
+_COL_PAR = {"wq", "wk", "wv", "gate", "up", "in_x", "in_gate", "uq", "uk",
+            "uv", "dq", "dkv", "wz", "wi", "wf", "wo_gate", "q", "k", "v"}
+# linears whose *input* dim is TP-sharded (stored natural => rows)
+_ROW_PAR = {"wo", "down", "out"}
+
+
+def _linear_leaf_spec(names: list, leaf_name: str, ndim: int,
+                      shape) -> P:
+    """Spec for a leaf inside a (possibly SALR) linear param subtree.
+
+    Rules address *trailing* dims only (scan-stacking prepends a layer
+    axis, expert stacks an expert axis); leading axes are padded with
+    None by ``_fit_spec``.  Expert stacks shard the expert axis (dim -3)
+    over model instead (expert parallelism).
+    """
+    owner = None
+    for n in reversed(names[:-1] if names[-1] == leaf_name else names):
+        if n in _COL_PAR or n in _ROW_PAR:
+            owner = n
+            break
+    is_expert = "experts" in names or _is_expert_stack(names)
+
+    if is_expert and leaf_name in ("w", "words", "values", "a", "b"):
+        # (E, x, y): shard experts over data x model (full EP+FSDP storage;
+        # _shardable degrades to model-only when E doesn't divide)
+        return P(("data", "model"), None, None)
+
+    if leaf_name in ("words", "values", "base"):
+        # bitmap / dense-base storage rows (dim -2) == the TP-sharded dim
+        # by construction (transposed storage for column-parallel layers)
+        return P("model", None)
+    if leaf_name == "w":
+        if owner in _ROW_PAR:
+            return P("model", None)
+        if owner in _COL_PAR:
+            return P(None, "model")
+        return P(None, None)
+    if leaf_name == "a":                # (d_in, r): shard the big dim.
+        # AdamW moments are f32; replicating adapters across TP would cost
+        # GBs/device at 100B scale.  The induced comms are rank-sized.
+        return P("model", None)
+    if leaf_name == "b":                # (r, d_out)
+        return P(None, "model")
+    return P(*([None] * min(ndim, 2)))
+
+
+def _is_expert_stack(names: list) -> bool:
+    # stacked expert weights live under moe/{gate,up,down} with a leading
+    # expert dim; distinguished from dense mlp by the 'moe' ancestor
+    if "moe" not in names:
+        return False
+    for n in names:
+        if n in ("gate", "up", "down"):
+            return True
+    return False
+
+
+def param_spec(path, leaf) -> P:
+    names = _path_names(path)
+    ndim = np.ndim(leaf) if not hasattr(leaf, "shape") else len(leaf.shape)
+    shape = getattr(leaf, "shape", ())
+    if not names or ndim == 0:
+        return P()
+    last = names[-1]
+
+    # embeddings / lm head: vocab on model
+    if "embed" in names and last == "table":
+        return P("model", None)
+    if "lm_head" in names and last == "w":
+        return P(None, "model")
+    if last == "table":
+        return P("model", None)
+    # norms / scalars / small gate vectors: replicated
+    if last in ("scale", "lam", "bias", "conv_w"):
+        return P(*([None] * ndim))
+    if "router" in names and last == "w":
+        return P(*([None] * ndim))
+    if last == "r":  # sLSTM block-diag recurrent (4, H, dh, dh)
+        return P(None, "model", None, None) if ndim == 4 else P(*([None] * ndim))
+    if "wif" in names:
+        return P(*([None] * ndim))
+    # scan-stacked layers add ONE leading layer axis; detect via ndim
+    # heuristics handled by the leaf rules below operating on the last
+    # dims -- prepend None for the stack axis.
+    spec = _linear_leaf_spec(names, last, ndim, shape)
+    return spec
+
+
+def _stack_aware(spec_fn):
+    """Wrap a rule so scan-stacked leaves (extra leading layer axis) get
+    a None prepended: we detect stacking by comparing rule arity to leaf
+    ndim at call time inside param_shardings."""
+    return spec_fn
+
+
+def _fit_spec(spec: P, ndim: int) -> P:
+    """Pad/trim a PartitionSpec to exactly ndim axes (leading Nones for
+    scan-stack / expert-stack dims beyond what the rule assumed)."""
+    parts = list(spec)
+    if len(parts) > ndim:
+        # drop leading Nones first
+        while len(parts) > ndim and parts and parts[0] is None:
+            parts.pop(0)
+        parts = parts[-ndim:] if len(parts) > ndim else parts
+    while len(parts) < ndim:
+        parts.insert(0, None)
+    return P(*parts)
+
+
+def _shardable(shape, spec: P, mesh: Mesh) -> P:
+    """Degrade mesh axes that do not divide the dim: for tuple specs try
+    successively smaller suffixes (('pod','data') -> ('data',) -> None);
+    e.g. tiny smoke dims or batch=1 decode fall back to replication."""
+    parts = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            parts.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        chosen = None
+        for start in range(len(axes)):
+            cand = axes[start:]
+            size = int(np.prod([mesh.shape[a] for a in cand]))
+            if size > 1 and shape[i] % size == 0 and shape[i] >= size:
+                chosen = cand if len(cand) > 1 else cand[0]
+                break
+        parts.append(chosen)
+    return P(*parts)
+
+
+def param_shardings(mesh: Mesh, tree, fsdp: bool = False):
+    """NamedSharding pytree for params / train state.
+
+    ``fsdp=True`` upgrades every 'model'-sharded weight dim to
+    ('data', 'model') when it divides -- FSDP-style storage used for the
+    serving cells, where a 340B-class checkpoint must fit next to a 32k
+    KV cache (weights are then all-gathered over 'data' per layer per
+    step: a fit-vs-ICI-traffic trade recorded in EXPERIMENTS.md §Perf)."""
+    def one(path, leaf):
+        ndim = len(leaf.shape)
+        spec = param_spec(path, leaf)
+        spec = _fit_spec(spec, ndim)
+        if fsdp:
+            parts = [("data", "model") if ax == "model" else ax
+                     for ax in spec]
+            spec = P(*parts)
+        spec = _shardable(leaf.shape, spec, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+# ------------------------------------------------------------ batches
+
+def data_axes(mesh: Mesh) -> tuple:
+    """Axes used for batch sharding (pod folds into data parallelism)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_sharding(mesh: Mesh, tree):
+    axes = data_axes(mesh)
+
+    def one(leaf):
+        ndim = len(leaf.shape)
+        spec = _shardable(leaf.shape, P(axes, *([None] * (ndim - 1))), mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(one, tree)
+
+
+_CACHE_TIME_LEAVES = {"k", "v", "ckv", "krope", "k_scale", "v_scale"}
+
+
+def cache_sharding(mesh: Mesh, tree):
+    """KV caches: batch on data(+pod) AND the cache *time* axis on model
+    (context-parallel decode).  GQA kv-head counts are usually below the
+    TP degree, so head sharding can't absorb the cache; time sharding
+    does -- attention's softmax/contraction over the sharded axis costs
+    only (B, H)-sized reductions, and a 32k x 128-batch bf16 cache drops
+    from ~154GB/dev to ~10GB/dev on a 16x16 mesh (EXPERIMENTS.md §Perf)."""
+    axes = data_axes(mesh)
+
+    def one(path, leaf):
+        ndim = len(leaf.shape)
+        names = _path_names(path)
+        # stacked cache leaves have a leading repeats axis; batch is axis 1
+        has_stack = "groups" in names
+        spec = [None] * ndim
+        b_ax = 1 if has_stack and ndim >= 2 else 0
+        if ndim > b_ax:
+            spec[b_ax] = axes
+        t_ax = b_ax + 1
+        if (names and names[-1] in _CACHE_TIME_LEAVES and ndim > t_ax
+                and "memory" not in names):
+            spec[t_ax] = "model"
+        spec = _shardable(leaf.shape, P(*spec), mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, P()), tree)
+
+
+def activation_spec(mesh: Mesh) -> P:
+    """Sequence-parallel residual-stream constraint (B, S, D):
+    batch on data(+pod), sequence on model."""
+    return P(data_axes(mesh), "model", None)
+
+
+# ------------------------------------------------- activation constraint
+# Set by the launcher before tracing; model code calls
+# constrain_activation on the residual stream between blocks.
+
+_ACT_SHARDING: Optional[NamedSharding] = None
+_WROWS_SHARDING: Optional[NamedSharding] = None
+
+
+def set_activation_sharding(sharding: Optional[NamedSharding]) -> None:
+    global _ACT_SHARDING
+    _ACT_SHARDING = sharding
+
+
+def constrain_activation(x):
+    if _ACT_SHARDING is not None and x.ndim == len(_ACT_SHARDING.spec):
+        return jax.lax.with_sharding_constraint(x, _ACT_SHARDING)
+    return x
+
+
+def set_expert_sharding(mesh: Optional[Mesh]) -> None:
+    """Enable expert-parallel compute constraints in apply_moe: the
+    dispatched token buffer (E, T, d) and expert outputs stay sharded on
+    the expert axis exactly like the stored expert weights, so GSPMD
+    routes tokens (all-to-all, O(tokens*d)) instead of all-gathering
+    decoded dense expert weights (observed 188TB/dev on deepseek-v3)."""
+    global _EXPERT_MESH
+    _EXPERT_MESH = mesh
+
+
+_EXPERT_MESH: Optional[Mesh] = None
+
+
+def constrain_expert_stack(h):
+    """h: (E, ...) -> shard E over (data, model) with degradation."""
+    if _EXPERT_MESH is None:
+        return h
+    spec = _shardable(h.shape,
+                      P(("data", "model"), *([None] * (h.ndim - 1))),
+                      _EXPERT_MESH)
+    return jax.lax.with_sharding_constraint(
+        h, NamedSharding(_EXPERT_MESH, spec))
+
+
+def constrain_expert_tokens(buf):
+    """buf: (G, E, cap, d) -> expert axis sharded over (data, model):
+    the g-sharded -> e-sharded reshard is the MoE token all-to-all."""
+    if _EXPERT_MESH is None:
+        return buf
+    spec = _shardable(buf.shape, P(None, ("data", "model"), None, None),
+                      _EXPERT_MESH)
+    return jax.lax.with_sharding_constraint(
+        buf, NamedSharding(_EXPERT_MESH, spec))
+
+
+def constrain_group_tokens(buf):
+    """buf: (G, E, cap, d) -> group axis sharded over the data axes."""
+    if _EXPERT_MESH is None:
+        return buf
+    axes = tuple(a for a in ("pod", "data") if a in _EXPERT_MESH.axis_names)
+    spec = _shardable(buf.shape, P(axes, None, None, None), _EXPERT_MESH)
+    return jax.lax.with_sharding_constraint(
+        buf, NamedSharding(_EXPERT_MESH, spec))
+
+
+_HEADS_MESH: Optional[Mesh] = None
+
+
+def set_heads_sharding(mesh: Optional[Mesh]) -> None:
+    """Enable head-sharded attention layout constraints: q/k/v enter
+    blockwise attention as (B, S, H, hd) with H on model and S full.
+    One all-to-all per layer (seq-shard -> head-shard) replaces per-
+    KV-block all-gathers inside the chunk scan (measured on deepseek:
+    EXPERIMENTS.md §Perf)."""
+    global _HEADS_MESH
+    _HEADS_MESH = mesh
+
+
+def constrain_heads(x):
+    """x: (B, S, H, hd) -> shard batch on data axes, heads on model.
+    No-op when the head count doesn't divide the model axis (forcing a
+    seq-replicated layout there is strictly worse than leaving GSPMD
+    alone -- measured on smollm, 9 heads on a 16-way axis)."""
+    if _HEADS_MESH is None or x.ndim != 4:
+        return x
+    if x.shape[2] % _HEADS_MESH.shape["model"]:
+        return x
+    axes = tuple(a for a in ("pod", "data") if a in _HEADS_MESH.axis_names)
+    spec = _shardable(x.shape, P(axes, None, "model", None), _HEADS_MESH)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_HEADS_MESH, spec))
+
+
+def set_weight_rows_sharding(mesh: Optional[Mesh]) -> None:
+    """Enable the decoded-weight constraint: keep bitmap-decode output
+    (and its slot/bit intermediates) sharded on storage rows.  Without
+    this GSPMD sometimes re-shards the decode column-wise and then
+    all-gathers full s32 slot matrices (observed on decode cells)."""
+    global _WROWS_SHARDING
+    _WROWS_SHARDING = (NamedSharding(mesh, P("model", None))
+                       if mesh is not None else None)
+
+
+def constrain_weight_rows(w):
+    if _WROWS_SHARDING is not None and w.ndim == 2:
+        return jax.lax.with_sharding_constraint(w, _WROWS_SHARDING)
+    return w

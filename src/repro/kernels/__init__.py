@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for SALR's performance-critical compute paths.
+
+Each kernel ships three pieces:
+  * ``<name>.py``  -- pl.pallas_call + explicit BlockSpec VMEM tiling
+  * ``ops.py``     -- jit'd public wrapper (padding, batching, dispatch)
+  * ``ref.py``     -- pure-jnp oracle the kernel is allclose-tested against
+
+Kernels (see DESIGN.md §3 for the GPU->TPU adaptation rationale):
+  bitmap_spmm  -- fused bitmap-decode + GEMM (two-stage pipeline)
+  nm_spmm      -- 2:4 semi-structured decode + GEMM (select-network)
+  salr_spmm    -- bitmap GEMM + concatenated-adapter GEMM in one kernel
+  fused_lora   -- concatenated multi-adapter GEMM (adapter path alone)
+  nf4_spmm     -- NF4 dequant + GEMM (QSALR)
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (bitmap_matmul, lora_matmul, nf4_encode_2d,
+                               nf4_matmul, nm_matmul, salr_matmul)
+
+__all__ = ["ops", "ref", "bitmap_matmul", "lora_matmul", "nf4_encode_2d",
+           "nf4_matmul", "nm_matmul", "salr_matmul"]

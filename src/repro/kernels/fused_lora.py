@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: concatenated multi-adapter GEMM (adapter path only).
+
+    y = (x @ A_cat) @ B_cat
+
+Standalone version of the low-rank path used by ``salr_spmm`` -- this is
+the paper's "adapter concatenation" contribution in isolation: n adapters
+sharing an input are evaluated as two MXU GEMMs with the (tokens, R)
+intermediate kept in VMEM scratch, never written to HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fused_lora_kernel(x_ref, a_ref, b_ref, o_ref, u_ref, *, k_steps: int):
+    ni = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(ni == 0)
+    def _build_u():
+        @pl.when(k == 0)
+        def _zu():
+            u_ref[...] = jnp.zeros_like(u_ref)
+        u_ref[...] += jax.lax.dot_general(
+            x_ref[...], a_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _store():
+        u = u_ref[...].astype(b_ref.dtype)
+        o_ref[...] = jax.lax.dot_general(
+            u, b_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def fused_lora_pallas(x: jax.Array, a_cat: jax.Array, b_cat: jax.Array, *,
+                      block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """x: (M, K), a_cat: (K, R), b_cat: (R, N) -> (M, N)."""
+    m, kdim = x.shape
+    r = a_cat.shape[1]
+    n = b_cat.shape[1]
+    assert a_cat.shape[0] == kdim and b_cat.shape[0] == r
+    assert m % block_m == 0 and kdim % block_k == 0 and n % block_n == 0
+    k_steps = kdim // block_k
+    grid = (m // block_m, n // block_n, k_steps)
+
+    kernel = functools.partial(_fused_lora_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, r), lambda mi, ni, ki: (ki, 0)),
+            pl.BlockSpec((r, block_n), lambda mi, ni, ki: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, r), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(x, a_cat, b_cat)

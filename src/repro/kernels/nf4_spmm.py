@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: NF4 dequantize + GEMM (QSALR serving path).
+
+    y = x @ dequant(codes, scales)
+
+Codes are 4-bit NF4 indices packed two-per-byte along N; scales are
+per-(row, 64-column) absmax block scales.  Dequantization uses a 16-way
+select tree (compare against each NF4 level index) -- pure VPU ops, no
+table gather, Mosaic-friendly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import NF4_LEVELS
+
+QBLOCK = 64  # scale-block width along N
+
+
+def _nf4_spmm_kernel(x_ref, codes_ref, scales_ref, o_ref, acc_ref, *,
+                     k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                  # (Bm, Bk)
+    bk = x.shape[1]
+    codes = codes_ref[...]                          # (Bk, Bn/2) uint8
+    lo = (codes & jnp.uint8(0x0F)).astype(jnp.int32)
+    hi = (codes >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=-1).reshape(bk, -1)   # (Bk, Bn)
+
+    dec = jnp.zeros(idx.shape, jnp.float32)
+    for j in range(16):                              # 16-way select tree
+        dec = dec + jnp.where(idx == j, jnp.float32(NF4_LEVELS[j]), 0.0)
+
+    scales = scales_ref[...]                         # (Bk, Bn/QBLOCK)
+    w_tile = dec * jnp.repeat(scales, QBLOCK, axis=1)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_tile.astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def nf4_spmm_pallas(x: jax.Array, codes: jax.Array, scales: jax.Array, *,
+                    block_m: int = 128, block_n: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """x: (M, K); codes: (K, N/2) uint8; scales: (K, N/QBLOCK) f32."""
+    m, kdim = x.shape
+    rows, half = codes.shape
+    n = half * 2
+    assert rows == kdim and scales.shape == (kdim, n // QBLOCK)
+    assert m % block_m == 0 and kdim % block_k == 0 and n % block_n == 0
+    assert block_n % QBLOCK == 0
+    k_steps = kdim // block_k
+    grid = (m // block_m, n // block_n, k_steps)
+
+    kernel = functools.partial(_nf4_spmm_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n // 2), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((block_k, block_n // QBLOCK), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, codes, scales)

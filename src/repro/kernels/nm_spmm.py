@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: N:M (2:4) semi-structured decode + GEMM.
+
+The paper's Table-4 inference protocol uses 2:4 sparsity.  GPUs get a
+FLOP-side win from Sparse Tensor Cores; the TPU MXU has no sparse mode,
+so the win here is bandwidth-side: exactly n/m of the value bytes plus a
+1-byte group mask are read per tile (DESIGN.md §3).
+
+Decode is a pure select-network -- with n values per m-group the slot of
+each set bit is its exclusive popcount within the group, so the value is
+recovered with (m*n) compares and selects, no gather at all.  This makes
+the kernel fully Mosaic-vectorizable on real TPUs (unlike the general
+bitmap kernel whose row gather is documented as interpret-validated).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _nm_spmm_kernel(x_ref, bits_ref, vals_ref, o_ref, acc_ref, *,
+                    n: int, m: int, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                    # (Bm, Bk)
+    bk = x.shape[1]
+    gbits = bits_ref[...]                             # (Bk, Bn/m) uint8
+    groups = gbits.shape[1]
+    shifts = jnp.arange(m, dtype=jnp.uint8)
+    b = ((gbits[:, :, None] >> shifts) & jnp.uint8(1))  # (Bk, G, m)
+    bi = b.astype(jnp.int32)
+    slot = jnp.cumsum(bi, axis=-1) - bi               # exclusive popcount in-group
+    vals = vals_ref[...].reshape(bk, groups, n)       # (Bk, G, n)
+
+    # select-network: dec[..., t] = vals[..., slot_t] without gather
+    dec = jnp.zeros((bk, groups, m), vals.dtype)
+    for j in range(n):
+        dec = dec + jnp.where(slot == j, vals[:, :, j:j + 1], 0)
+    w_tile = jnp.where(b.astype(bool), dec, 0).reshape(bk, groups * m)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_tile.astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def nm_spmm_pallas(x: jax.Array, group_bits: jax.Array, values: jax.Array,
+                   *, n: int = 2, m: int = 4,
+                   block_m: int = 128, block_n: int = 128,
+                   block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """y = x @ W_hat.  x: (M, K); group_bits: (K, N/m) uint8;
+    values: (K, N/m*n)."""
+    mm, kdim = x.shape
+    rows, ngroups = group_bits.shape
+    ncols = ngroups * m
+    assert rows == kdim
+    assert mm % block_m == 0 and kdim % block_k == 0 and ncols % block_n == 0
+    k_steps = kdim // block_k
+    grid = (mm // block_m, ncols // block_n, k_steps)
+    gn = block_n // m
+
+    kernel = functools.partial(_nm_spmm_kernel, n=n, m=m, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, gn), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((block_k, gn * n), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mm, ncols), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, group_bits, values)

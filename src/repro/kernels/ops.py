@@ -1,0 +1,118 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles leading batch dims, M-padding to block multiples, and the
+interpret-mode switch (this container is CPU-only: kernels execute via
+``interpret=True``; on real TPUs set ``interpret=False``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core.quant import quantize_nf4
+from repro.kernels.bitmap_spmm import bitmap_spmm_pallas
+from repro.kernels.fused_lora import fused_lora_pallas
+from repro.kernels.nf4_spmm import QBLOCK, nf4_spmm_pallas
+from repro.kernels.nm_spmm import nm_spmm_pallas
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _flatten_pad(x: jax.Array, block_m: int):
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    pad = (-m) % block_m
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    return x2, lead, m
+
+
+def _unflatten(y: jax.Array, lead, m: int):
+    return y[:m].reshape(*lead, y.shape[-1])
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def bitmap_matmul(x: jax.Array, tbw: bm.TiledBitmapWeight, *,
+                  block_m: int = 128, block_k: int = 128,
+                  interpret: bool = _INTERPRET) -> jax.Array:
+    """y = x @ W_hat with the fused bitmap-decode GEMM kernel."""
+    x2, lead, m = _flatten_pad(x, block_m)
+    bk = min(block_k, tbw.rows)
+    y = bitmap_spmm_pallas(x2, tbw.words, tbw.values, cols=tbw.cols,
+                           cap_t=tbw.cap_t, block_m=block_m, block_k=bk,
+                           interpret=interpret)
+    return _unflatten(y, lead, m)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def nm_matmul(x: jax.Array, nmw: bm.NMWeight, *,
+              block_m: int = 128, block_n: int = 128, block_k: int = 128,
+              interpret: bool = _INTERPRET) -> jax.Array:
+    """y = x @ W_hat with the 2:4 decode GEMM kernel."""
+    x2, lead, m = _flatten_pad(x, block_m)
+    bk = min(block_k, nmw.rows)
+    bn = min(block_n, nmw.cols)
+    y = nm_spmm_pallas(x2, nmw.group_bits, nmw.values, n=nmw.n, m=nmw.m,
+                       block_m=block_m, block_n=bn, block_k=bk,
+                       interpret=interpret)
+    return _unflatten(y, lead, m)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def salr_matmul(x: jax.Array, tbw: bm.TiledBitmapWeight,
+                a_cat: jax.Array, b_cat: jax.Array, *,
+                block_m: int = 128, block_k: int = 128,
+                interpret: bool = _INTERPRET) -> jax.Array:
+    """y = x @ W_hat + (x @ A_cat) @ B_cat — the full SALR op, one kernel."""
+    x2, lead, m = _flatten_pad(x, block_m)
+    bk = min(block_k, tbw.rows)
+    y = salr_spmm_pallas_dispatch(x2, tbw, a_cat, b_cat, block_m, bk, interpret)
+    return _unflatten(y, lead, m)
+
+
+def salr_spmm_pallas_dispatch(x2, tbw, a_cat, b_cat, block_m, block_k, interpret):
+    from repro.kernels.salr_spmm import salr_spmm_pallas
+    return salr_spmm_pallas(x2, tbw.words, tbw.values, a_cat, b_cat,
+                            cols=tbw.cols, cap_t=tbw.cap_t,
+                            block_m=block_m, block_k=block_k,
+                            interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def lora_matmul(x: jax.Array, a_cat: jax.Array, b_cat: jax.Array, *,
+                block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                interpret: bool = _INTERPRET) -> jax.Array:
+    """y = (x @ A_cat) @ B_cat with the fused concat-adapter kernel."""
+    x2, lead, m = _flatten_pad(x, block_m)
+    bk = min(block_k, a_cat.shape[0])
+    bn = min(block_n, b_cat.shape[1])
+    y = fused_lora_pallas(x2, a_cat, b_cat, block_m=block_m, block_n=bn,
+                          block_k=bk, interpret=interpret)
+    return _unflatten(y, lead, m)
+
+
+def nf4_encode_2d(w: jax.Array):
+    """Quantize a (K, N) weight into the kernel layout:
+    codes (K, N/2) uint8 + scales (K, N/QBLOCK) f32.  N % QBLOCK == 0."""
+    kdim, n = w.shape
+    assert n % QBLOCK == 0
+    q = quantize_nf4(w, block=QBLOCK)
+    return q.codes.reshape(kdim, n // 2), q.scales.reshape(kdim, n // QBLOCK)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def nf4_matmul(x: jax.Array, codes: jax.Array, scales: jax.Array, *,
+               block_m: int = 128, block_n: int = 128, block_k: int = 128,
+               interpret: bool = _INTERPRET) -> jax.Array:
+    """y = x @ dequant(codes, scales) with the NF4 GEMM kernel."""
+    x2, lead, m = _flatten_pad(x, block_m)
+    bk = min(block_k, codes.shape[0])
+    bn = min(block_n, codes.shape[1] * 2)
+    y = nf4_spmm_pallas(x2, codes, scales, block_m=block_m, block_n=bn,
+                        block_k=bk, interpret=interpret)
+    return _unflatten(y, lead, m)

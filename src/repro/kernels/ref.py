@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core.quant import NF4Tensor, dequantize_nf4
+
+
+def bitmap_spmm_ref(x: jax.Array, tbw: bm.TiledBitmapWeight) -> jax.Array:
+    return x @ bm.tile_decode(tbw).astype(x.dtype)
+
+
+def nm_spmm_ref(x: jax.Array, nmw: bm.NMWeight) -> jax.Array:
+    return x @ bm.nm_decode(nmw).astype(x.dtype)
+
+
+def salr_spmm_ref(x: jax.Array, tbw: bm.TiledBitmapWeight,
+                  a_cat: jax.Array, b_cat: jax.Array) -> jax.Array:
+    return bitmap_spmm_ref(x, tbw) + (x @ a_cat) @ b_cat
+
+
+def fused_lora_ref(x: jax.Array, a_cat: jax.Array, b_cat: jax.Array) -> jax.Array:
+    return (x @ a_cat) @ b_cat
+
+
+def nf4_spmm_ref(x: jax.Array, codes: jax.Array, scales: jax.Array,
+                 qblock: int = 64) -> jax.Array:
+    kdim, half = codes.shape
+    n = half * 2
+    q = NF4Tensor(codes=codes.reshape(-1), scales=scales.reshape(-1),
+                  shape=(kdim, n), block=qblock)
+    return x @ dequantize_nf4(q, dtype=x.dtype)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: the full SALR deployment op in one kernel.
+
+    y = x @ W_hat  +  (x @ A_cat) @ B_cat
+
+fusing (a) the bitmap decode + sparse-base GEMM and (b) the concatenated
+multi-adapter low-rank path (paper §"Concatenating Multi-LoRA adapters").
+
+The low-rank intermediate u = x @ A_cat lives entirely in a VMEM scratch
+accumulator: it is built incrementally over K steps during the first
+N-pass (n == 0) and reused for every later N tile, so the adapter costs
+one extra (Bm, Bk)x(Bk, R) MXU pass per K step -- amortized across all N.
+This is the TPU rendition of "2n small GEMMs -> one big GEMM": no HBM
+round-trip for u, no kernel-launch (here: fusion-boundary) overhead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _salr_spmm_kernel(x_ref, words_ref, values_ref, a_ref, b_ref,
+                      o_ref, acc_ref, u_ref, *,
+                      cap_t: int, k_steps: int):
+    ni = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                    # (Bm, Bk)
+    bk = x.shape[1]
+
+    # --- low-rank path: accumulate u = x @ A_cat during the first N pass
+    @pl.when(ni == 0)
+    def _lora_u():
+        @pl.when(k == 0)
+        def _zu():
+            u_ref[...] = jnp.zeros_like(u_ref)
+        u_ref[...] += jax.lax.dot_general(
+            x, a_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # --- sparse base: decode (VPU) + GEMM (MXU)
+    wpt = words_ref.shape[-1]
+    words = words_ref[...].reshape(bk, wpt)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((words[:, :, None] >> shifts) & jnp.uint32(1)).reshape(bk, wpt * 32)
+    bi = bits.astype(jnp.int32)
+    slot = jnp.minimum(jnp.cumsum(bi, axis=1) - bi, cap_t - 1)
+    vals = values_ref[...].reshape(bk, cap_t)
+    dense = jnp.take_along_axis(vals, slot, axis=1)
+    w_tile = jnp.where(bits.astype(bool), dense, 0).astype(x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # --- epilogue: y_tile = acc + u @ B_cat[:, n-tile]
+    @pl.when(k == k_steps - 1)
+    def _store():
+        u = u_ref[...].astype(b_ref.dtype)
+        delta = jax.lax.dot_general(
+            u, b_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + delta).astype(o_ref.dtype)
+
+
+def salr_spmm_pallas(x: jax.Array, words: jax.Array, values: jax.Array,
+                     a_cat: jax.Array, b_cat: jax.Array, *,
+                     cols: int, cap_t: int,
+                     block_m: int = 128, block_k: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """y = x @ W_hat + (x @ a_cat) @ b_cat.
+
+    x: (M, K); words/values: tiled bitmap of W_hat (K rows);
+    a_cat: (K, R); b_cat: (R, N).  N block == encoding tile width."""
+    m, kdim = x.shape
+    rows, n_tiles, wpt = words.shape
+    tile = wpt * 32
+    r = a_cat.shape[1]
+    assert rows == kdim and n_tiles * tile == cols
+    assert b_cat.shape == (r, cols)
+    assert m % block_m == 0 and kdim % block_k == 0
+    k_steps = kdim // block_k
+    grid = (m // block_m, n_tiles, k_steps)
+
+    kernel = functools.partial(_salr_spmm_kernel, cap_t=cap_t,
+                               k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, 1, wpt), lambda mi, ni, ki: (ki, ni, 0)),
+            pl.BlockSpec((block_k, 1, cap_t), lambda mi, ni, ki: (ki, ni, 0)),
+            pl.BlockSpec((block_k, r), lambda mi, ni, ki: (ki, 0)),
+            pl.BlockSpec((r, tile), lambda mi, ni, ki: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, tile), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, cols), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, tile), jnp.float32),
+                        pltpu.VMEM((block_m, r), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(x, words, values, a_cat, b_cat)

@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with production shardings; record memory analysis, cost
+analysis, and the collective schedule for the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm_135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out experiments/dryrun
+
+Hillclimb knobs (recorded into each cell artifact):
+  --no-seq-shard    disable sequence-parallel activation constraint
+  --microbatches N  override gradient-accumulation microbatches
+  --loss-chunk N    chunk size of the big-vocab streaming loss
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.distributed import sharding as shard
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamW
+from repro.roofline import analysis as roof
+from repro.train.state import abstract_train_state
+from repro.train.step import (make_decode_step, make_prefill_step,
+                              make_train_step)
+
+# gradient-accumulation microbatches per arch for train_4k (memory fit);
+# tuned from memory_analysis (EXPERIMENTS.md §Dry-run).
+TRAIN_MICROBATCHES = {
+    "mistral_large_123b": 8,
+    "nemotron_4_340b": 16,
+    "deepseek_v3_671b": 8,
+    "internvl2_76b": 8,
+    "llama3_8b_proxy": 2,
+    "recurrentgemma_2b": 2,
+    "xlstm_1_3b": 2,
+}
+
+
+def build_cell(cfg, shape, mesh, *, seq_shard: bool, microbatches: int,
+               loss_chunk: int):
+    """Lower + compile one cell; returns (record, compiled)."""
+    chips = mesh.devices.size
+    opt = AdamW(lr=1e-4, clip_norm=1.0)
+    ins = S.input_specs(cfg, shape)
+
+    if seq_shard:
+        shard.set_activation_sharding(
+            NamedSharding(mesh, shard.activation_spec(mesh)))
+    else:
+        shard.set_activation_sharding(None)
+    shard.set_weight_rows_sharding(mesh)
+    shard.set_expert_sharding(mesh)
+    shard.set_heads_sharding(mesh)
+
+    if shape.kind == "train":
+        state_abs = abstract_train_state(jax.random.PRNGKey(0), cfg, opt)
+        state_sh = shard.param_shardings(mesh, state_abs)
+        batch_sh = shard.batch_sharding(mesh, ins["batch"])
+        repl = NamedSharding(mesh, P())
+        metrics_sh = {"loss": repl, "grad_norm": repl, "lr": repl}
+        step = make_train_step(cfg, opt, microbatches=microbatches,
+                               loss_chunk=loss_chunk)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, metrics_sh))
+        lowered = jitted.lower(state_abs, ins["batch"])
+    elif shape.kind == "prefill":
+        params_abs = S.abstract_params(cfg)
+        params_sh = shard.param_shardings(mesh, params_abs, fsdp=True)
+        batch_sh = shard.batch_sharding(mesh, ins["batch"])
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
+        lowered = jitted.lower(params_abs, ins["batch"])
+    else:  # decode
+        params_abs = S.abstract_params(cfg)
+        params_sh = shard.param_shardings(mesh, params_abs, fsdp=True)
+        cache_sh = shard.cache_sharding(mesh, ins["cache"])
+        tok_sh = shard.batch_sharding(mesh, ins["tokens"])
+        repl = NamedSharding(mesh, P())
+        step = make_decode_step(cfg)
+        jitted = jax.jit(step, in_shardings=(params_sh, cache_sh, tok_sh,
+                                             repl))
+        lowered = jitted.lower(params_abs, ins["cache"], ins["tokens"],
+                               ins["pos"])
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    hlo = compiled.as_text()
+    terms = roof.analyze(compiled, hlo, S.model_flops(cfg, shape), chips)
+    mem = roof.memory_summary(compiled)
+    raw_cost = compiled.cost_analysis()
+    if isinstance(raw_cost, (list, tuple)):
+        raw_cost = raw_cost[0]
+    record = {
+        "arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "axes": list(mesh.axis_names),
+        "chips": chips,
+        "seq_shard": seq_shard, "microbatches": microbatches,
+        "loss_chunk": loss_chunk,
+        "compile_seconds": compile_s,
+        "memory": mem,
+        "roofline": terms.as_dict(),
+        "collectives": roof.collective_summary(hlo),
+        "xla_cost_analysis_flat": {
+            "flops": float(raw_cost.get("flops", 0.0)),
+            "bytes_accessed": float(raw_cost.get("bytes accessed", 0.0)),
+        },
+        "param_count": S.param_count(cfg),
+    }
+    return record, compiled
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             *, seq_shard=True, microbatches=None, loss_chunk=512,
+             kv_int8=False, tag="", verbose=True) -> dict:
+    cfg = configs.get(arch)
+    if kv_int8:
+        cfg = cfg.with_(kv_cache="int8")
+    shape = configs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    mb = microbatches
+    if mb is None:
+        mb = TRAIN_MICROBATCHES.get(arch, 1) if shape.kind == "train" else 1
+    record, compiled = build_cell(cfg, shape, mesh, seq_shard=seq_shard,
+                                  microbatches=mb, loss_chunk=loss_chunk)
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{arch}__{shape_name}__{mesh_kind}{tag}.json"
+    roof.save_cell(os.path.join(out_dir, name), record)
+    if verbose:
+        r = record["roofline"]
+        m = record["memory"]
+        print(f"[OK] {arch} {shape_name} {mesh_kind}  "
+              f"compile={record['compile_seconds']:.1f}s  "
+              f"args/dev={roof.gbytes(m.get('argument_size_in_bytes', 0))}  "
+              f"temp/dev={roof.gbytes(m.get('temp_size_in_bytes', 0))}  "
+              f"t_comp={r['t_compute_s']:.4f}s t_mem={r['t_memory_s']:.4f}s "
+              f"t_coll={r['t_collective_s']:.4f}s  "
+              f"bottleneck={r['bottleneck']}  "
+              f"roofline_frac={r['roofline_fraction']:.3f}")
+        print("  memory_analysis:", json.dumps(m))
+        print("  collectives:", json.dumps(record["collectives"]["count_by_kind"]))
+    del compiled
+    return record
+
+
+def iter_cells(archs=None):
+    for arch in (archs or configs.ASSIGNED):
+        cfg = configs.get(arch)
+        for shape in configs.shapes_for(cfg):
+            yield arch, shape.name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--microbatches", type=int)
+    ap.add_argument("--loss-chunk", type=int, default=512)
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache (beyond-paper decode optimization)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = (list(iter_cells()) if args.all
+             else [(args.arch, args.shape)])
+    failures = []
+    for arch, shape_name in cells:
+        for mesh_kind in meshes:
+            name = f"{arch}__{shape_name}__{mesh_kind}{args.tag}.json"
+            path = os.path.join(args.out, name)
+            if args.skip_existing and os.path.exists(path):
+                print(f"[SKIP existing] {name}")
+                continue
+            try:
+                run_cell(arch, shape_name, mesh_kind, args.out,
+                         seq_shard=not args.no_seq_shard,
+                         microbatches=args.microbatches,
+                         loss_chunk=args.loss_chunk,
+                         kv_int8=args.kv_int8, tag=args.tag)
+            except Exception as e:  # record failures; they are bugs
+                failures.append((arch, shape_name, mesh_kind, repr(e)))
+                print(f"[FAIL] {arch} {shape_name} {mesh_kind}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f[:3], "->", f[3][:200])
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing never touches jax
+device initialization.  Shapes: single pod = (data=16, model=16) = 256
+chips (one TPU v5e pod-slice class); multi-pod adds a leading pod axis:
+(pod=2, data=16, model=16) = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a (data, model) mesh (tests/examples)."""
+    n = len(jax.devices())
+    d = 1
+    while (d * 2) * (d * 2) <= n or (n % (d * 2) == 0 and d * 2 <= n ** 0.5):
+        d *= 2
+        if n % d:
+            d //= 2
+            break
+    d = max(d, 1)
+    while n % d:
+        d -= 1
+    return jax.make_mesh((d, n // d), ("data", "model"))

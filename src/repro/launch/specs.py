@@ -1,0 +1,124 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run lowering:
+weak-type-correct, shardable, zero allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as M
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Abstract inputs for the step function implied by ``shape.kind``.
+
+    train   -> {"batch": {tokens, labels[, frontend]}}
+    prefill -> {"batch": {tokens[, frontend]}}
+    decode  -> {"cache": <pytree>, "tokens": (B,1), "pos": scalar}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    fe = None
+    if cfg.frontend:
+        fe = SDS((b, cfg.frontend_len, cfg.d_model), dt)
+
+    if shape.kind == "train":
+        batch = {"tokens": SDS((b, s), jnp.int32),
+                 "labels": SDS((b, s), jnp.int32)}
+        if fe is not None:
+            batch["frontend"] = fe
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": SDS((b, s), jnp.int32)}
+        if fe is not None:
+            batch["frontend"] = fe
+        return {"batch": batch}
+
+    if shape.kind == "decode":
+        cache = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+        return {"cache": cache,
+                "tokens": SDS((b, 1), jnp.int32),
+                "pos": SDS((), jnp.int32)}
+
+    raise ValueError(shape.kind)
+
+
+def abstract_params(cfg: ArchConfig, key=None):
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: M.init_params(k, cfg), key)
+
+
+# ------------------------------------------------------- model flops
+
+def param_count(cfg: ArchConfig) -> dict:
+    """Analytic dense-equivalent parameter counts: total and active
+    (MoE: only routed experts actually hit per token count as active)."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kh = cfg.n_heads, cfg.n_kv_heads
+    attn = d * h * hd + 2 * d * kh * hd + h * hd * d
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        attn = (d * m.q_lora_rank + m.q_lora_rank * h * qk
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                + m.kv_lora_rank * h * m.qk_nope_head_dim
+                + m.kv_lora_rank * h * m.v_head_dim
+                + h * m.v_head_dim * d)
+
+    def mlp_params(kind):
+        if kind == "moe":
+            per_exp = 3 * d * cfg.moe_d_ff
+            shared = 3 * d * cfg.moe_d_ff * cfg.n_shared_experts
+            total = cfg.n_experts * per_exp + shared + d * cfg.n_experts
+            active = cfg.experts_per_token * per_exp + shared
+            return total, active
+        if kind == "none":
+            return 0, 0
+        mult = 3 if kind == "swiglu" else 2
+        return mult * d * cfg.d_ff, mult * d * cfg.d_ff
+
+    def mixer_params(kind):
+        if kind in ("attn", "attn_local", "mla"):
+            return attn
+        if kind == "rglru":
+            dr = cfg.rnn_dim
+            return 2 * d * dr + 2 * dr * dr + dr * d + 4 * dr
+        if kind == "mlstm":
+            du = 2 * d
+            return 2 * d * du + 2 * du * (du // 2) + du * du + du * d
+        if kind == "slstm":
+            dh = d // cfg.n_heads
+            return 5 * d * d + 4 * cfg.n_heads * dh * dh
+        raise ValueError(kind)
+
+    total = active = 0
+    groups = list(cfg.layer_groups) + list(cfg.encoder_groups)
+    for g in groups:
+        mlp_kind = g.mlp if g.mlp is not None else cfg.mlp
+        mt, ma = mlp_params(mlp_kind)
+        for kind in g.pattern:
+            mx = mixer_params(kind)
+            total += (mx + mt) * g.repeats
+            active += (mx + ma) * g.repeats
+    emb = cfg.vocab_size * d
+    total += 2 * emb
+    active += 2 * emb
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS reference: 6*N_active*D for train, 2*N_active*D for
+    prefill, 2*N_active per token (+ attention KV reads are bytes, not
+    flops) for decode."""
+    n = param_count(cfg)["active"]
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # one token per sequence

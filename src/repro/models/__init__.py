@@ -1,0 +1,10 @@
+"""Model zoo substrate: one flexible transformer covering all assigned
+architecture families (GQA/MQA, MLA, MoE, RG-LRU hybrid, mLSTM/sLSTM,
+encoder-decoder, modality-frontend stubs)."""
+from repro.models import attention, layers, model, moe, recurrent, xlstm
+from repro.models.model import (decode_step, forward_train, init_cache,
+                                init_params, lm_loss, prefill)
+
+__all__ = ["attention", "layers", "model", "moe", "recurrent", "xlstm",
+           "decode_step", "forward_train", "init_cache", "init_params",
+           "lm_loss", "prefill"]

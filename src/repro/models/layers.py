@@ -1,0 +1,134 @@
+"""Shared model building blocks: SALR-aware linears, norms, RoPE, MLPs.
+
+Every projection goes through ``init_linear``/``apply_linear``: depending
+on the arch's SALRModelConfig and the layer's target family, a linear is
+either a plain dense array or a compressed ``SALRLinear`` (frozen sparse
+base + trainable fused adapters).  ``transposed=True`` stores W^T so the
+encoded row axis is the tensor-parallel-sharded dimension
+(column-parallel projections; DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.salr import SALRConfig, SALRLinear, apply_salr, compress_linear
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def salr_cfg_for(cfg: ArchConfig) -> SALRConfig:
+    s = cfg.salr
+    return SALRConfig(sparsity=s.sparsity, method=s.method,
+                      lora_rank=s.lora_rank, res_rank=s.res_rank,
+                      dtype=cfg.dtype)
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, cfg: ArchConfig,
+                target: str = "attn", transposed: bool = False):
+    """A model linear: SALR-compressed when the target family is enabled."""
+    dt = _dtype(cfg)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) / jnp.sqrt(d_in)
+    if cfg.salr.enabled and target in cfg.salr.targets:
+        return compress_linear(key, w, salr_cfg_for(cfg), transposed=transposed)
+    return {"w": w.astype(dt)}
+
+
+def apply_linear(p, x: jax.Array) -> jax.Array:
+    if isinstance(p, SALRLinear):
+        from repro.distributed.sharding import constrain_weight_rows
+        return apply_salr(x, p, constrain_fn=constrain_weight_rows)
+    return x @ p["w"]
+
+
+def init_rmsnorm(d: int, cfg: ArchConfig):
+    return {"scale": jnp.ones((d,), _dtype(cfg))}
+
+
+def apply_rmsnorm(p, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32.
+
+    Angles/cos/sin are computed in f32 (small: no head axis); the
+    rotation multiplies in the activation dtype so no full-size f32
+    temporaries are materialized (§Perf iteration 2)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------- MLPs
+
+def init_mlp(key: jax.Array, cfg: ArchConfig, kind: str):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"gate": init_linear(ks[0], d, f, cfg, "mlp", transposed=True),
+                "up": init_linear(ks[1], d, f, cfg, "mlp", transposed=True),
+                "down": init_linear(ks[2], f, d, cfg, "mlp")}
+    if kind in ("relu2", "gelu"):
+        return {"up": init_linear(ks[0], d, f, cfg, "mlp", transposed=True),
+                "down": init_linear(ks[1], f, d, cfg, "mlp")}
+    raise ValueError(kind)
+
+
+def apply_mlp(p, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(apply_linear(p["gate"], x)) * apply_linear(p["up"], x)
+        return apply_linear(p["down"], h)
+    if kind == "relu2":
+        h = jnp.square(jax.nn.relu(apply_linear(p["up"], x)))
+        return apply_linear(p["down"], h)
+    if kind == "gelu":
+        h = jax.nn.gelu(apply_linear(p["up"], x))
+        return apply_linear(p["down"], h)
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------- embeddings
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def padded_vocab(cfg: ArchConfig, mult: int = 256) -> int:
+    return round_up(cfg.vocab_size, mult)
+
+
+def init_embedding(key: jax.Array, cfg: ArchConfig):
+    v = padded_vocab(cfg)
+    emb = jax.random.normal(key, (v, cfg.d_model), jnp.float32) * 0.02
+    return {"table": emb.astype(_dtype(cfg))}
+
+
+def apply_embedding(p, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def init_lm_head(key: jax.Array, cfg: ArchConfig):
+    v = padded_vocab(cfg)
+    w = jax.random.normal(key, (cfg.d_model, v), jnp.float32) / jnp.sqrt(cfg.d_model)
+    return {"w": w.astype(_dtype(cfg))}
+
+
+def apply_lm_head(p, x: jax.Array) -> jax.Array:
+    return x @ p["w"]

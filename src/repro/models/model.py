@@ -1,0 +1,327 @@
+"""Model assembly: layer groups (scan + remat over stacked params),
+mixer dispatch, encoder-decoder wiring, modality-frontend stubs, caches,
+and the three entry points: train forward, prefill, decode step.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerGroup
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec
+from repro.models import xlstm as xl
+from repro.models.layers import (apply_embedding, apply_lm_head, apply_mlp,
+                                 apply_rmsnorm, init_embedding, init_lm_head,
+                                 init_mlp, init_rmsnorm, padded_vocab)
+
+MIXER_INIT = {
+    "attn": lambda k, cfg: attn.init_gqa(k, cfg),
+    "attn_local": lambda k, cfg: attn.init_gqa(k, cfg),
+    "mla": lambda k, cfg: attn.init_mla(k, cfg),
+    "rglru": lambda k, cfg: rec.init_rglru(k, cfg),
+    "mlstm": lambda k, cfg: xl.init_mlstm(k, cfg),
+    "slstm": lambda k, cfg: xl.init_slstm(k, cfg),
+}
+
+MIXER_APPLY = {
+    "attn": partial(attn.apply_gqa, local=False),
+    "attn_local": partial(attn.apply_gqa, local=True),
+    "mla": attn.apply_mla,
+    "rglru": rec.apply_rglru,
+    "mlstm": xl.apply_mlstm,
+    "slstm": xl.apply_slstm,
+}
+
+
+def _group_mlp(cfg: ArchConfig, group: LayerGroup) -> str:
+    return group.mlp if group.mlp is not None else cfg.mlp
+
+
+# ------------------------------------------------------------------ init
+
+def init_layer(key: jax.Array, cfg: ArchConfig, kind: str, mlp_kind: str,
+               cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {"mixer": MIXER_INIT[kind](ks[0], cfg)}
+    if cross:
+        p["cross"] = attn.init_gqa(ks[1], cfg)
+    if mlp_kind == "moe":
+        p["moe"] = moe_mod.init_moe(ks[2], cfg)
+    elif mlp_kind != "none":
+        p["mlp_norm"] = init_rmsnorm(cfg.d_model, cfg)
+        p["mlp"] = init_mlp(ks[3], cfg, mlp_kind)
+    return p
+
+
+def init_group(key: jax.Array, cfg: ArchConfig, group: LayerGroup,
+               cross: bool = False):
+    """Per pattern position: params stacked over ``repeats`` (scan axis)."""
+    mlp_kind = _group_mlp(cfg, group)
+    out = []
+    for pi, kind in enumerate(group.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, pi), group.repeats)
+        out.append(jax.vmap(
+            lambda k: init_layer(k, cfg, kind, mlp_kind, cross))(keys))
+    return out
+
+
+def init_params(key: jax.Array, cfg: ArchConfig):
+    ks = jax.random.split(key, 8)
+    is_encdec = bool(cfg.encoder_groups)
+    params = {
+        "embed": init_embedding(ks[0], cfg),
+        "groups": [init_group(jax.random.fold_in(ks[1], gi), cfg, g,
+                              cross=is_encdec)
+                   for gi, g in enumerate(cfg.layer_groups)],
+        "final_norm": init_rmsnorm(cfg.d_model, cfg),
+        "lm_head": init_lm_head(ks[2], cfg),
+    }
+    if is_encdec:
+        params["encoder"] = {
+            "groups": [init_group(jax.random.fold_in(ks[3], gi), cfg, g)
+                       for gi, g in enumerate(cfg.encoder_groups)],
+            "final_norm": init_rmsnorm(cfg.d_model, cfg),
+        }
+    return params
+
+
+# ----------------------------------------------------------------- apply
+
+def apply_layer(p, x, cfg: ArchConfig, kind: str, mlp_kind: str, *,
+                mode: str, positions=None, cache=None, pos=None,
+                memory=None, causal=True):
+    """One block: mixer (+cross-attn) (+mlp).  Returns (x, new_cache)."""
+    mixer_cache = cache.get("mixer") if cache else None
+    x, new_mixer = MIXER_APPLY[kind](
+        p["mixer"], x, cfg, positions=positions, mode=mode,
+        cache=mixer_cache, pos=pos, causal=causal)
+    new_cache = {"mixer": new_mixer}
+    if "cross" in p:
+        cross_cache = cache.get("cross") if cache else None
+        x, new_cross = attn.apply_gqa(
+            p["cross"], x, cfg, local=False, positions=positions, mode=mode,
+            cache=cross_cache, pos=pos, memory=memory, causal=False)
+        new_cache["cross"] = new_cross
+    if mlp_kind == "moe":
+        x = moe_mod.apply_moe(p["moe"], x, cfg)
+    elif mlp_kind != "none":
+        x = x + apply_mlp(p["mlp"], apply_rmsnorm(p["mlp_norm"], x,
+                                                  cfg.norm_eps), mlp_kind)
+    return x, new_cache
+
+
+def apply_group(gp, x, cfg: ArchConfig, group: LayerGroup, *, mode: str,
+                positions=None, caches=None, pos=None, memory=None,
+                causal=True, remat=True):
+    """Scan over ``repeats``; the pattern is applied inside the body."""
+    mlp_kind = _group_mlp(cfg, group)
+
+    def body(xc, sl):
+        params_sl, cache_sl = sl
+        new_caches = []
+        for pi, kind in enumerate(group.pattern):
+            c = cache_sl[pi] if cache_sl is not None else None
+            xc, nc = apply_layer(params_sl[pi], xc, cfg, kind, mlp_kind,
+                                 mode=mode, positions=positions, cache=c,
+                                 pos=pos, memory=memory, causal=causal)
+            new_caches.append(nc)
+        return xc, new_caches
+
+    if mode == "train" and remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    def scan_body(xc, sl):
+        return body(xc, sl)
+
+    xs = (gp, caches if caches is not None else None)
+    x, new_caches = jax.lax.scan(scan_body, x, xs, length=group.repeats)
+    return x, new_caches
+
+
+def _embed_inputs(params, cfg: ArchConfig, tokens, frontend_embeds):
+    x = apply_embedding(params["embed"], tokens)
+    if cfg.frontend and frontend_embeds is not None and cfg.family != "encdec":
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _encode(params, cfg: ArchConfig, frontend_embeds):
+    """Encoder stack over frontend embeddings (enc-dec archs)."""
+    x = frontend_embeds
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    for gi, g in enumerate(cfg.encoder_groups):
+        x, _ = apply_group(params["encoder"]["groups"][gi], x, cfg, g,
+                           mode="train", positions=positions, causal=False,
+                           remat=False)
+    return apply_rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def forward_hidden(params, cfg: ArchConfig, tokens: jax.Array,
+                   frontend_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """Teacher-forced forward up to the final norm (no LM head)."""
+    from repro.distributed.sharding import constrain_activation
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(params, cfg, frontend_embeds)
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    x = constrain_activation(x)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    for gi, g in enumerate(cfg.layer_groups):
+        x, _ = apply_group(params["groups"][gi], x, cfg, g, mode="train",
+                           positions=positions, memory=memory)
+        x = constrain_activation(x)
+    return apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def forward_train(params, cfg: ArchConfig, tokens: jax.Array,
+                  frontend_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence teacher-forced forward.  Returns logits
+    (B, S_total, padded_vocab); for frontend archs S_total includes the
+    prefix positions (caller masks them in the loss)."""
+    x = forward_hidden(params, cfg, tokens, frontend_embeds)
+    return apply_lm_head(params["lm_head"], x)
+
+
+# ----------------------------------------------------------------- cache
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, ctx: int,
+                     dtype, cross: bool, enc_len: int):
+    c = {}
+    if kind in ("attn", "attn_local"):
+        c["mixer"] = attn.init_gqa_cache(cfg, batch, ctx,
+                                         local=(kind == "attn_local"),
+                                         dtype=dtype)
+    elif kind == "mla":
+        c["mixer"] = attn.init_mla_cache(cfg, batch, ctx, dtype)
+    elif kind == "rglru":
+        c["mixer"] = rec.init_rglru_cache(cfg, batch, dtype)
+    elif kind == "mlstm":
+        c["mixer"] = xl.init_mlstm_cache(cfg, batch, dtype)
+    elif kind == "slstm":
+        c["mixer"] = xl.init_slstm_cache(cfg, batch, dtype)
+    if cross:
+        hd = cfg.resolved_head_dim
+        c["cross"] = attn.KVCache(
+            k=jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype),
+            v=jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype))
+    return c
+
+
+def init_cache(cfg: ArchConfig, batch: int, ctx: int):
+    """Decode cache skeleton: per group, per pattern position, stacked
+    over repeats.  For enc-dec also includes the encoder memory."""
+    dtype = jnp.dtype(cfg.dtype)
+    is_encdec = bool(cfg.encoder_groups)
+    enc_len = cfg.frontend_len if is_encdec else 0
+    groups = []
+    for g in cfg.layer_groups:
+        per_pos = []
+        for kind in g.pattern:
+            one = init_block_cache(cfg, kind, batch, ctx, dtype,
+                                   is_encdec, enc_len)
+            per_pos.append(jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (g.repeats,) + a.shape), one))
+        groups.append(per_pos)
+    cache = {"groups": groups}
+    if is_encdec:
+        cache["memory"] = jnp.zeros((batch, enc_len, cfg.d_model), dtype)
+    return cache
+
+
+def prefill(params, cfg: ArchConfig, tokens: jax.Array,
+            frontend_embeds: Optional[jax.Array] = None):
+    """Process the prompt; returns (last-position logits, cache)."""
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encode(params, cfg, frontend_embeds)
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    caches = []
+    for gi, g in enumerate(cfg.layer_groups):
+        x, nc = apply_group(params["groups"][gi], x, cfg, g, mode="prefill",
+                            positions=positions, memory=memory)
+        caches.append(nc)
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = apply_lm_head(params["lm_head"], x[:, -1:])
+    cache = {"groups": caches}
+    if memory is not None:
+        cache["memory"] = memory
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens: jax.Array,
+                pos: jax.Array):
+    """One token step.  tokens: (B, 1); pos: scalar int32 (absolute
+    position of this token).  Returns (logits, new_cache)."""
+    x = apply_embedding(params["embed"], tokens)
+    memory = cache.get("memory")
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    new_groups = []
+    for gi, g in enumerate(cfg.layer_groups):
+        x, nc = apply_group(params["groups"][gi], x, cfg, g, mode="decode",
+                            positions=positions, caches=cache["groups"][gi],
+                            pos=pos, memory=memory)
+        new_groups.append(nc)
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = apply_lm_head(params["lm_head"], x)
+    new_cache = {"groups": new_groups}
+    if memory is not None:
+        new_cache["memory"] = memory
+    return logits, new_cache
+
+
+# ------------------------------------------------------------------ loss
+
+def lm_loss_chunked(head, x: jax.Array, labels: jax.Array,
+                    prefix_len: int = 0, chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing full (B, S, V) logits: scan
+    over sequence chunks; each chunk projects through the LM head and
+    reduces immediately.  Essential at 256k vocab x 1M tokens."""
+    if prefix_len:
+        x = x[:, prefix_len:]
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fall back (smoke shapes)
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, sl):
+        nll_sum, cnt = carry
+        xs, ls = sl
+        logits = apply_lm_head(head, xs).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ls, 0)[..., None], axis=-1)[..., 0]
+        mask = (ls >= 0).astype(jnp.float32)
+        return (nll_sum + jnp.sum((logz - gold) * mask),
+                cnt + jnp.sum(mask)), None
+
+    (nll, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (xc, lc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array,
+            prefix_len: int = 0) -> jax.Array:
+    """Mean next-token cross-entropy; labels < 0 are masked.  For
+    frontend archs the first ``prefix_len`` logit positions are the
+    modality prefix and carry no labels."""
+    if prefix_len:
+        logits = logits[:, prefix_len:]
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(
+        lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,234 @@
+"""Mixture-of-Experts substrate: top-k routing with sort-based grouped
+dispatch (capacity-bounded, static shapes) + SALR-compressed experts.
+
+Design (DESIGN.md §4, EP):
+  * tokens are reshaped into groups; groups shard over the data axis so
+    all routing bookkeeping (sort, cumsum) is group-local -- no
+    cross-device traffic from the dispatch logic itself;
+  * dispatch is gather/scatter (O(tokens*d) bytes), NOT the GShard
+    dispatch-einsum (which costs an extra tokens*d*E*C FLOP term);
+  * expert FFNs run as batched einsums with the expert axis sharded over
+    the model axis (expert parallelism); GSPMD inserts the all-to-alls
+    at the group-sharded <-> expert-sharded boundary;
+  * over-capacity tokens are dropped (slot C is a trash row), standard
+    capacity-factor semantics.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.salr import SALRLinear, apply_salr
+from repro.models.layers import (apply_linear, apply_rmsnorm, init_linear,
+                                 init_rmsnorm, round_up)
+
+
+def moe_capacity(group_size: int, cfg: ArchConfig) -> int:
+    slots = group_size * cfg.experts_per_token
+    cap = int(slots / cfg.n_experts * cfg.moe_capacity_factor)
+    return max(8, round_up(cap, 8))
+
+
+def pick_group_size(n_tokens: int, dp: int = 1, target: int = 4096) -> int:
+    """Group size such that groups shard evenly over ``dp`` data shards."""
+    per = n_tokens // dp if (dp > 1 and n_tokens % dp == 0) else n_tokens
+    gs = max(1, min(target, per))
+    while per % gs:
+        gs -= 1
+    return gs
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+
+    def expert_stack(k, d_in, d_out):
+        """Stacked per-expert weights; SALR-compressed via vmap when the
+        'expert' target is enabled."""
+        keys = jax.random.split(k, e)
+        if cfg.salr.enabled and "expert" in cfg.salr.targets:
+            from repro.core.salr import compress_linear
+            from repro.models.layers import salr_cfg_for
+            scfg = salr_cfg_for(cfg)
+            w = (jax.random.normal(k, (e, d_in, d_out), jnp.float32)
+                 / jnp.sqrt(d_in))
+            return jax.vmap(lambda kk, ww: compress_linear(kk, ww, scfg))(
+                keys, w)
+        w = jax.random.normal(k, (e, d_in, d_out), jnp.float32) / jnp.sqrt(d_in)
+        return {"w": w.astype(dt)}
+
+    p = {"norm": init_rmsnorm(d, cfg),
+         "router": {"w": (jax.random.normal(ks[0], (d, e), jnp.float32)
+                          / jnp.sqrt(d)).astype(jnp.float32)},
+         "gate": expert_stack(ks[1], d, f),
+         "up": expert_stack(ks[2], d, f),
+         "down": expert_stack(ks[3], f, d)}
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared"] = {
+            "gate": init_linear(ks[4], d, fs, cfg, "expert", transposed=True),
+            "up": init_linear(ks[5], d, fs, cfg, "expert", transposed=True),
+            "down": init_linear(jax.random.fold_in(ks[4], 7), fs, d, cfg,
+                                "expert")}
+    return p
+
+
+def _expert_matmul(stack, x: jax.Array) -> jax.Array:
+    """x: (G, E, C, d_in) -> (G, E, C, d_out) with stacked expert
+    weights.  No transposes: resharding g-sharded -> e-sharded on the
+    same layout lowers to a clean all-to-all (a transposed layout made
+    GSPMD fall back to full all-gathers; EXPERIMENTS.md §Perf)."""
+    if isinstance(stack, SALRLinear):
+        return jax.vmap(lambda lin, xe: apply_salr(xe, lin),
+                        in_axes=(0, 1), out_axes=1)(stack, x)
+    return jnp.einsum("gecd,edf->gecf", x, stack["w"].astype(x.dtype))
+
+
+def _dispatch_local(xg, router_w, *, e: int, k: int, cap: int):
+    """Group-local routing + gather-based dispatch.
+
+    xg: (g, gs, d) -- runs per data shard under shard_map (or plainly on
+    one device).  Returns (buf (g,e,cap,d), flat_slot, w_eff, inv_order)
+    where the latter three drive the gather-based combine."""
+    g, gs, d = xg.shape
+    logits = xg.astype(jnp.float32) @ router_w                    # (g, gs, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                        # (g, gs, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(g, gs * k)
+    flat_t = jnp.broadcast_to(jnp.arange(gs)[:, None],
+                              (gs, k)).reshape(gs * k)
+    flat_w = top_p.reshape(g, gs * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    s_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    s_t = flat_t[order]                                           # (g, gs*k)
+    s_w = jnp.take_along_axis(flat_w, order, axis=-1)
+
+    gi_b = jnp.broadcast_to(jnp.arange(g)[:, None], flat_e.shape)
+    counts = jnp.zeros((g, e), jnp.int32).at[gi_b, flat_e].add(1)
+    starts = jnp.cumsum(counts, axis=-1) - counts                 # (g, e)
+    pos = (jnp.arange(gs * k)[None, :]
+           - jnp.take_along_axis(starts, s_e, axis=-1))           # pos in expert
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)                              # cap = trash
+
+    gi = jnp.arange(g)[:, None]
+    # slot -> sorted-assignment index (sentinel gs*k = empty slot)
+    slot_to_j = jnp.full((g, e, cap + 1), gs * k, jnp.int32)
+    slot_to_j = slot_to_j.at[gi, s_e, slot].set(
+        jnp.broadcast_to(jnp.arange(gs * k)[None, :], s_t.shape),
+        mode="drop")
+    slot_to_j = slot_to_j[:, :, :cap].reshape(g, e * cap)
+    s_t_pad = jnp.concatenate([s_t, jnp.full((g, 1), gs, jnp.int32)], axis=1)
+    slot_tok = jnp.take_along_axis(s_t_pad, jnp.minimum(slot_to_j, gs * k),
+                                   axis=1)                        # (g, e*cap)
+    xg_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+    buf = jnp.take_along_axis(xg_pad, slot_tok[..., None], axis=1)
+    buf = buf.reshape(g, e, cap, d)
+
+    flat_slot = s_e * cap + jnp.minimum(slot, cap - 1)            # (g, gs*k)
+    w_eff = (s_w * keep).astype(xg.dtype)
+    inv_order = jnp.argsort(order, axis=-1, stable=True)
+    return buf, flat_slot, w_eff, inv_order
+
+
+def _combine_local(out, flat_slot, w_eff, inv_order, *, k: int):
+    """Gather expert outputs back per assignment; sum over the k
+    choices.  out: (g, e, cap, d) -> (g, gs, d)."""
+    g = out.shape[0]
+    d = out.shape[-1]
+    picked = jnp.take_along_axis(out.reshape(g, -1, d),
+                                 flat_slot[..., None], axis=1)
+    picked = picked * w_eff[..., None]
+    unsorted = jnp.take_along_axis(picked, inv_order[..., None], axis=1)
+    return jnp.sum(unsorted.reshape(g, -1, k, d), axis=2)
+
+
+def _dp_info():
+    """(mesh, data-axis names, dp size) from the launcher hook."""
+    from repro.distributed import sharding as shard
+    mesh = shard._EXPERT_MESH
+    if mesh is None:
+        return None, (), 1
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in axes:
+        dp *= mesh.shape[a]
+    return mesh, axes, dp
+
+
+def apply_moe(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: (B, S, d) -> x + moe(x).
+
+    Dispatch/combine (routing, sort, gathers) run group-locally -- under
+    ``shard_map`` over the data axes when a mesh is active, so GSPMD can
+    never replicate the token-sized index gathers (observed 54TB/dev of
+    all-gather when left to GSPMD; EXPERIMENTS.md §Perf).  Only the
+    expert FFN einsums run in pjit-land, where the (E, tokens, d) buffer
+    resharding is exactly the MoE all-to-all."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
+    tokens = xn.reshape(b * s, d)
+    n = tokens.shape[0]
+    mesh, dp_axes, dp = _dp_info()
+    gs = pick_group_size(n, dp)
+    g = n // gs
+    cap = moe_capacity(gs, cfg)
+    xg = tokens.reshape(g, gs, d)
+    use_shard_map = mesh is not None and g % dp == 0 and dp > 1
+
+    dispatch = partial(_dispatch_local, e=e, k=k, cap=cap)
+    combine = partial(_combine_local, k=k)
+    if use_shard_map:
+        gspec = P(dp_axes)
+        dispatch = shard_map(
+            dispatch, mesh=mesh,
+            in_specs=(P(dp_axes, None, None), P(None, None)),
+            out_specs=(P(dp_axes, None, None, None), gspec, gspec, gspec),
+            check_vma=False)
+        combine = shard_map(
+            combine, mesh=mesh,
+            in_specs=(P(dp_axes, None, None, None), gspec, gspec, gspec),
+            out_specs=P(dp_axes, None, None),
+            check_vma=False)
+
+    buf, flat_slot, w_eff, inv_order = dispatch(xg, p["router"]["w"])
+
+    # --- expert FFN: tokens all-to-all to the expert owners (EP) ---
+    from repro.distributed.sharding import (constrain_expert_tokens,
+                                            constrain_group_tokens)
+    h = constrain_expert_tokens(buf)              # (g,e,cap,d), e-sharded
+    gate = _expert_matmul(p["gate"], h)
+    up = _expert_matmul(p["up"], h)
+    out = _expert_matmul(p["down"], jax.nn.silu(gate) * up)   # (g,e,cap,d)
+    if not use_shard_map:
+        # under shard_map the combine in_spec already forces the g-shard
+        out = constrain_group_tokens(out)
+
+    yg = combine(out, flat_slot, w_eff, inv_order)
+    y = yg.reshape(b, s, d)
+
+    if "shared" in p:
+        hs = jax.nn.silu(apply_linear(p["shared"]["gate"], xn)) * \
+            apply_linear(p["shared"]["up"], xn)
+        y = y + apply_linear(p["shared"]["down"], hs)
+    return x + y
+
+
+def aux_load_balance_loss(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (fraction * probability)."""
+    xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
+    logits = xn.astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_i = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_i, cfg.n_experts), axis=(0, 1))
+    pmean = jnp.mean(probs, axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac * pmean)

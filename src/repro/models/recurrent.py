@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Block: norm -> two input branches (recurrent branch: causal depthwise
+conv1d -> RG-LRU; gate branch: GeLU) -> elementwise product -> out proj.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_r x_t + b_r)          (recurrence gate)
+    i_t = sigmoid(W_i x_t + b_i)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the linear
+recurrence (parallel in time, TPU-friendly); decode carries (h, conv
+tail) state.  Deviation noted in DESIGN.md: the paper uses block-diagonal
+gate matrices; we use full d_rnn x d_rnn gates (SALR-compressible).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (apply_linear, apply_rmsnorm, init_linear,
+                                 init_rmsnorm)
+
+_C = 8.0
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=("h", "conv_tail"),
+         meta_fields=())
+@dataclasses.dataclass
+class RGLRUState:
+    h: jax.Array          # (B, d_rnn)
+    conv_tail: jax.Array  # (B, conv_width-1, d_rnn)
+
+
+def init_rglru(key: jax.Array, cfg: ArchConfig):
+    d, dr = cfg.d_model, cfg.rnn_dim
+    ks = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+    # Lambda init so that a^(1/r) spans ~[0.9, 0.999]
+    lam = jax.random.uniform(ks[5], (dr,), jnp.float32, 2.0, 6.0)
+    return {
+        "norm": init_rmsnorm(d, cfg),
+        "in_x": init_linear(ks[0], d, dr, cfg, "recurrent", transposed=True),
+        "in_gate": init_linear(ks[1], d, dr, cfg, "recurrent", transposed=True),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, dr), jnp.float32)
+                   * 0.1).astype(dt),
+        "w_r": init_linear(ks[3], dr, dr, cfg, "recurrent"),
+        "w_i": init_linear(ks[4], dr, dr, cfg, "recurrent"),
+        "lam": lam,
+        "out": init_linear(ks[6], dr, d, cfg, "recurrent"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv.  x: (B, S, dr); w: (cw, dr);
+    tail: (B, cw-1, dr) previous inputs (decode) or None (train)."""
+    cw = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i:i + s] * w[i]
+    return out
+
+
+def _rglru_gates(p, x: jax.Array):
+    r = jax.nn.sigmoid(apply_linear(p["w_r"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(apply_linear(p["w_i"], x).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_scan(p, x: jax.Array, h0: jax.Array | None = None) -> tuple:
+    """Parallel linear recurrence over (B, S, dr).  Returns (y, h_last)."""
+    a, b = _rglru_gates(p, x)
+    if h0 is not None:
+        # fold initial state into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def apply_rglru(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
+                cache: RGLRUState | None = None, **_):
+    """Returns (x + block(x), new_cache)."""
+    xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
+    gate = jax.nn.gelu(apply_linear(p["in_gate"], xn))
+    xr = apply_linear(p["in_x"], xn)
+
+    if mode in ("train", "prefill"):
+        xc = _causal_conv(xr, p["conv_w"], None)
+        y, h_last = rglru_scan(p, xc)
+        new_cache = None
+        if mode == "prefill":
+            cw = cfg.conv_width
+            tail = xr[:, -(cw - 1):] if xr.shape[1] >= cw - 1 else jnp.pad(
+                xr, ((0, 0), (cw - 1 - xr.shape[1], 0), (0, 0)))
+            new_cache = RGLRUState(h=h_last.astype(x.dtype),
+                                   conv_tail=tail.astype(x.dtype))
+    else:
+        xc = _causal_conv(xr, p["conv_w"], cache.conv_tail)
+        a, b = _rglru_gates(p, xc)
+        h = a[:, 0] * cache.h.astype(jnp.float32) + b[:, 0]
+        y = h[:, None, :].astype(x.dtype)
+        tail = jnp.concatenate([cache.conv_tail[:, 1:],
+                                xr.astype(cache.conv_tail.dtype)], axis=1)
+        new_cache = RGLRUState(h=h.astype(x.dtype), conv_tail=tail)
+
+    out = apply_linear(p["out"], y * gate)
+    return x + out, new_cache
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype) -> RGLRUState:
+    return RGLRUState(
+        h=jnp.zeros((batch, cfg.rnn_dim), dtype),
+        conv_tail=jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_dim), dtype))

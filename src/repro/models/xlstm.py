@@ -1,0 +1,296 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM (matrix memory,
+parallelizable) and sLSTM (scalar memory, sequential recurrence).
+
+mLSTM train/prefill uses the stabilized *parallel* form -- an
+attention-like score matrix modulated by the cumulative forget-gate
+decay D_ij = b_i - b_j + i_j -- evaluated blockwise with the same
+online-max machinery as flash attention (decay replaces softmax max).
+This is the TPU-native chunking: quadratic-within-window compute on the
+MXU, linear memory.  Decode uses the recurrent form with an (dk x dv)
+matrix state per head, O(1) per token (how long_500k stays cheap).
+
+sLSTM has hidden-to-gate recurrence (block-diagonal per head) and is
+inherently sequential: lax.scan over time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (apply_linear, apply_rmsnorm, init_linear,
+                                 init_rmsnorm)
+
+NEG_INF = -1e30
+
+
+# =============================================================== mLSTM
+
+@partial(jax.tree_util.register_dataclass, data_fields=("c", "n", "m"),
+         meta_fields=())
+@dataclasses.dataclass
+class MLSTMState:
+    c: jax.Array   # (B, H, dk, dv)
+    n: jax.Array   # (B, H, dk)
+    m: jax.Array   # (B, H)
+
+
+def _du(cfg: ArchConfig) -> int:
+    return 2 * cfg.d_model
+
+
+def init_mlstm(key: jax.Array, cfg: ArchConfig):
+    d = cfg.d_model
+    du = _du(cfg)
+    dk_tot = du // 2
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": init_rmsnorm(d, cfg),
+        "up": init_linear(ks[0], d, du, cfg, "recurrent", transposed=True),
+        "gate": init_linear(ks[1], d, du, cfg, "recurrent", transposed=True),
+        "wq": init_linear(ks[2], du, dk_tot, cfg, "recurrent", transposed=True),
+        "wk": init_linear(ks[3], du, dk_tot, cfg, "recurrent", transposed=True),
+        "wv": init_linear(ks[4], du, du, cfg, "recurrent", transposed=True),
+        "wif": {"w": (jax.random.normal(ks[5], (du, 2 * h), jnp.float32)
+                      * 0.02).astype(jnp.float32),
+                "b": jnp.concatenate([jnp.zeros((h,)),
+                                      jnp.full((h,), 3.0)]).astype(jnp.float32)},
+        "down": init_linear(ks[6], du, d, cfg, "recurrent"),
+    }
+
+
+def _mlstm_qkvif(p, xu: jax.Array, cfg: ArchConfig):
+    b, s, du = xu.shape
+    h = cfg.n_heads
+    dk = (du // 2) // h
+    dv = du // h
+    q = apply_linear(p["wq"], xu).reshape(b, s, h, dk)
+    k = apply_linear(p["wk"], xu).reshape(b, s, h, dk)
+    v = apply_linear(p["wv"], xu).reshape(b, s, h, dv)
+    gif = xu.astype(jnp.float32) @ p["wif"]["w"] + p["wif"]["b"]
+    ig, fg = jnp.split(gif, 2, axis=-1)                 # (b, s, h)
+    log_f = jax.nn.log_sigmoid(fg)
+    return q, k, v, ig, log_f
+
+
+def mlstm_parallel(q, k, v, ig, log_f, *, q_chunk=512, kv_chunk=512):
+    """Stabilized parallel mLSTM, blockwise.
+
+    q,k: (B,S,H,dk); v: (B,S,H,dv); ig,log_f: (B,S,H) f32.
+    Returns h: (B,S,H,dv)."""
+    from repro.distributed.sharding import constrain_heads
+    q, k, v = constrain_heads(q), constrain_heads(k), constrain_heads(v)
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    from repro.models.attention import _pick_chunk
+    q_chunk = _pick_chunk(s, q_chunk)
+    kv_chunk = _pick_chunk(s, kv_chunk)
+    n_q = s // q_chunk
+    n_kv = s // kv_chunk
+    scale = 1.0 / jnp.sqrt(jnp.float32(dk))
+    bcum = jnp.cumsum(log_f, axis=1)                    # (B,S,H)
+
+    outs = []
+    for qi in range(n_q):
+        lo = qi * q_chunk
+        hi_abs = lo + q_chunk - 1
+        blk_hi = min(n_kv, hi_abs // kv_chunk + 1)
+        qc = q[:, lo:lo + q_chunk].astype(jnp.float32)
+        bq = bcum[:, lo:lo + q_chunk]                   # (B,c,H)
+        q_pos = lo + jnp.arange(q_chunk)
+
+        kb = k[:, :blk_hi * kv_chunk].reshape(b, blk_hi, kv_chunk, h, dk)
+        vb = v[:, :blk_hi * kv_chunk].reshape(b, blk_hi, kv_chunk, h, dv)
+        ib = ig[:, :blk_hi * kv_chunk].reshape(b, blk_hi, kv_chunk, h)
+        bb = bcum[:, :blk_hi * kv_chunk].reshape(b, blk_hi, kv_chunk, h)
+        blks = (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+                ib.transpose(1, 0, 2, 3), bb.transpose(1, 0, 2, 3))
+
+        def body(carry, blk):
+            m, l, acc, bi = carry
+            kc, vc, ic, bc = blk
+            # decay matrix D_ij = b_i - b_j + i_j  (f32, (B,H,c,kc))
+            dmat = (bq.transpose(0, 2, 1)[:, :, :, None]
+                    - bc.transpose(0, 2, 1)[:, :, None, :]
+                    + ic.transpose(0, 2, 1)[:, :, None, :])
+            k_pos = bi * kv_chunk + jnp.arange(kv_chunk)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            dmat = jnp.where(mask[None, None], dmat, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(dmat, axis=-1))
+            w = jnp.exp(dmat - m_new[..., None])
+            sc = jnp.einsum("bqhd,bkhd->bhqk", qc,
+                            kc.astype(jnp.float32)) * scale * w
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(sc, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", sc, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new, bi + 1), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, dv), jnp.float32)
+        (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, 0), blks)
+        denom = jnp.maximum(jnp.abs(l), jnp.exp(-m))
+        out = acc / denom[..., None]
+        outs.append(out.transpose(0, 2, 1, 3))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def mlstm_final_state(k, v, ig, log_f) -> MLSTMState:
+    """Closed-form final recurrent state after a prefill segment."""
+    bcum = jnp.cumsum(log_f, axis=1)
+    b_last = bcum[:, -1]                                 # (B,H)
+    wlog = b_last[:, None] - bcum + ig                   # (B,S,H)
+    m = jnp.max(wlog, axis=1)                            # (B,H)
+    w = jnp.exp(wlog - m[:, None])
+    c = jnp.einsum("bsh,bshd,bshe->bhde", w, k.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshd->bhd", w, k.astype(jnp.float32))
+    return MLSTMState(c=c, n=n, m=m)
+
+
+def mlstm_decode_step(state: MLSTMState, q, k, v, ig, log_f):
+    """One recurrent step.  q,k: (B,H,dk); v: (B,H,dv); ig,log_f: (B,H)."""
+    dk = q.shape[-1]
+    m_new = jnp.maximum(log_f + state.m, ig)
+    fw = jnp.exp(log_f + state.m - m_new)
+    iw = jnp.exp(ig - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c = fw[..., None, None] * state.c + iw[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n = fw[..., None] * state.n + iw[..., None] * kf
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(dk))
+    num = jnp.einsum("bhd,bhde->bhe", qf, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return MLSTMState(c=c, n=n, m=m_new), h
+
+
+def apply_mlstm(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
+                cache: MLSTMState | None = None, **_):
+    xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
+    xu = apply_linear(p["up"], xn)
+    xg = apply_linear(p["gate"], xn)
+    q, k, v, ig, log_f = _mlstm_qkvif(p, xu, cfg)
+    bsz, s = x.shape[0], x.shape[1]
+
+    if mode in ("train", "prefill"):
+        hout = mlstm_parallel(q, k, v, ig, log_f)
+        new_cache = mlstm_final_state(k, v, ig, log_f) if mode == "prefill" else None
+    else:
+        new_cache, hstep = mlstm_decode_step(
+            cache, q[:, 0], k[:, 0], v[:, 0], ig[:, 0], log_f[:, 0])
+        hout = hstep[:, None].astype(x.dtype)
+    hflat = hout.reshape(bsz, s, -1).astype(x.dtype)
+    y = apply_linear(p["down"], hflat * jax.nn.silu(xg))
+    return x + y, new_cache
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype) -> MLSTMState:
+    h = cfg.n_heads
+    du = _du(cfg)
+    dk = (du // 2) // h
+    dv = du // h
+    return MLSTMState(c=jnp.zeros((batch, h, dk, dv), jnp.float32),
+                      n=jnp.zeros((batch, h, dk), jnp.float32),
+                      m=jnp.full((batch, h), NEG_INF, jnp.float32))
+
+
+# =============================================================== sLSTM
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("h", "c", "n", "m"), meta_fields=())
+@dataclasses.dataclass
+class SLSTMState:
+    h: jax.Array   # (B, d)
+    c: jax.Array   # (B, d)
+    n: jax.Array   # (B, d)
+    m: jax.Array   # (B, d)
+
+
+def init_slstm(key: jax.Array, cfg: ArchConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm": init_rmsnorm(d, cfg),
+        "wz": init_linear(ks[0], d, d, cfg, "recurrent", transposed=True),
+        "wi": init_linear(ks[1], d, d, cfg, "recurrent", transposed=True),
+        "wf": init_linear(ks[2], d, d, cfg, "recurrent", transposed=True),
+        "wo": init_linear(ks[3], d, d, cfg, "recurrent", transposed=True),
+        # block-diagonal per-head recurrent matrices
+        "r": (jax.random.normal(ks[4], (4, h, dh, dh), jnp.float32)
+              / jnp.sqrt(dh)).astype(dt),
+        "bias": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ).astype(jnp.float32),
+        "out": init_linear(ks[5], d, d, cfg, "recurrent"),
+    }
+
+
+def _slstm_step(p, cfg: ArchConfig, state: SLSTMState,
+                xz, xi, xf, xo):
+    """One sLSTM time step; x*: (B, d) pre-projected inputs."""
+    h, d = cfg.n_heads, cfg.d_model
+    dh = d // h
+    bsz = xz.shape[0]
+    hh = state.h.reshape(bsz, h, dh).astype(jnp.float32)
+    r = p["r"].astype(jnp.float32)
+    rz = jnp.einsum("bhd,hde->bhe", hh, r[0]).reshape(bsz, d)
+    ri = jnp.einsum("bhd,hde->bhe", hh, r[1]).reshape(bsz, d)
+    rf = jnp.einsum("bhd,hde->bhe", hh, r[2]).reshape(bsz, d)
+    ro = jnp.einsum("bhd,hde->bhe", hh, r[3]).reshape(bsz, d)
+    bias = p["bias"]
+    z = jnp.tanh(xz.astype(jnp.float32) + rz + bias[:d])
+    log_i = xi.astype(jnp.float32) + ri + bias[d:2 * d]
+    log_f = jax.nn.log_sigmoid(xf.astype(jnp.float32) + rf + bias[2 * d:3 * d])
+    o = jax.nn.sigmoid(xo.astype(jnp.float32) + ro + bias[3 * d:])
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state.m - m_new)
+    c = f_s * state.c + i_s * z
+    n = f_s * state.n + i_s
+    hnew = o * (c / jnp.maximum(n, 1.0))
+    return SLSTMState(h=hnew, c=c, n=n, m=m_new), hnew
+
+
+def apply_slstm(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
+                cache: SLSTMState | None = None, **_):
+    xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
+    xz = apply_linear(p["wz"], xn)
+    xi = apply_linear(p["wi"], xn)
+    xf = apply_linear(p["wf"], xn)
+    xo = apply_linear(p["wo"], xn)
+    bsz = x.shape[0]
+
+    if mode in ("train", "prefill"):
+        st0 = init_slstm_cache(cfg, bsz, x.dtype)
+
+        def step(st, xs):
+            st2, h = _slstm_step(p, cfg, st, *xs)
+            return st2, h
+
+        xs = (xz.transpose(1, 0, 2), xi.transpose(1, 0, 2),
+              xf.transpose(1, 0, 2), xo.transpose(1, 0, 2))
+        st_last, hs = jax.lax.scan(step, st0, xs)
+        y = hs.transpose(1, 0, 2).astype(x.dtype)
+        new_cache = st_last if mode == "prefill" else None
+    else:
+        st2, h = _slstm_step(p, cfg, cache, xz[:, 0], xi[:, 0], xf[:, 0],
+                             xo[:, 0])
+        y = h[:, None].astype(x.dtype)
+        new_cache = st2
+    return x + apply_linear(p["out"], y), new_cache
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(h=z, c=z, n=z, m=jnp.full((batch, d), -30.0, jnp.float32))

@@ -1,0 +1,6 @@
+"""Optimizers built in-repo: AdamW + schedules + Theorem-4 residual LR."""
+from repro.optim.adamw import (AdamW, AdamWState, global_norm,
+                               residual_lr_scale_tree, warmup_cosine)
+
+__all__ = ["AdamW", "AdamWState", "global_norm", "residual_lr_scale_tree",
+           "warmup_cosine"]

@@ -1,0 +1,102 @@
+"""AdamW built from scratch (no optax): decoupled weight decay, global
+gradient-norm clipping, warmup+cosine schedule, and per-parameter
+learning-rate scaling trees (used to give SALR residual adapters the
+Theorem-4 step size)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("mu", "nu", "count"), meta_fields=())
+@dataclasses.dataclass
+class AdamWState:
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda t: jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), t)
+        return AdamWState(mu=zeros(params), nu=zeros(params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state: AdamWState, params,
+               lr_scale_tree: Optional[Any] = None):
+        """Returns (new_params, new_state, metrics)."""
+        count = state.count + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+
+        gnorm = global_norm(grads)
+        if self.clip_norm > 0:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p, s):
+            gf = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * gf
+            v2 = self.b2 * v + (1 - self.b2) * jnp.square(gf)
+            step = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * s * step
+            return p2.astype(p.dtype), m2, v2
+
+        scales = (lr_scale_tree if lr_scale_tree is not None
+                  else jax.tree_util.tree_map(lambda _: 1.0, params))
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params,
+                                     scales)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(mu=new_mu, nu=new_nu, count=count), \
+            {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves) + 0.0)
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = peak_lr * c / max(warmup, 1)
+        frac = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(c < warmup, warm, cos)
+    return sched
+
+
+def residual_lr_scale_tree(params, res_scale) -> Any:
+    """lr multiplier tree: SALR residual adapter leaves get ``res_scale``
+    (Theorem 4: eta* = 1/sigma_max(X)^2 normalized by the base lr),
+    everything else 1.0."""
+    def scale_for(path, _):
+        for k in path:
+            if isinstance(k, jax.tree_util.GetAttrKey) and k.name == "res":
+                return res_scale
+        return 1.0
+    return jax.tree_util.tree_map_with_path(scale_for, params)

@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                     RooflineTerms, analyze,
+                                     memory_summary, parse_collectives)
+
+__all__ = ["HBM_BW", "LINK_BW", "PEAK_FLOPS", "RooflineTerms", "analyze",
+           "memory_summary", "parse_collectives"]

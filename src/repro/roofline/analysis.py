@@ -1,0 +1,179 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = wire_bytes_per_device / link_bw
+
+`cost_analysis()` on the SPMD-partitioned module reports *per-device*
+flops/bytes; the spec's global formulation (global / (chips * peak)) is
+identical because global = per-device * chips.
+
+Collective bytes are not in cost_analysis: we parse the optimized HLO
+(shapes there are already per-device) and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, with ring-algorithm wire factors (all-reduce moves
+~2x its payload; the others ~1x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+_COLL_RE = re.compile(
+    r"=\s+(?P<out>[^=]*?)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+
+
+def shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device output bytes of collective ops, by kind.
+
+    ``-done`` ops are skipped (their ``-start`` twin already counted)."""
+    by_kind = {k: 0 for k in _COLL_KINDS}
+    count = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if f"{m.group('kind')}-done" in line:
+            continue
+        kind = m.group("kind")
+        by_kind[kind] += shape_bytes(m.group("out"))
+        count[kind] += 1
+    wire = sum(by_kind[k] * _WIRE_FACTOR[k] for k in _COLL_KINDS)
+    return {"bytes_by_kind": by_kind, "count_by_kind": count,
+            "wire_bytes": wire}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float             # per-device
+    hbm_bytes: float         # per-device
+    wire_bytes: float        # per-device
+    model_flops: float       # global analytic reference
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO flops (remat/redundancy waste)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-model-FLOPs throughput vs peak if the dominant term
+        were the only cost: (model_flops / chips / peak) / t_dominant."""
+        t_dom = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_dom <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / PEAK_FLOPS) / t_dom
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "wire_bytes_per_device": self.wire_bytes,
+            "model_flops_global": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, hlo_text: str, model_flops: float,
+            chips: int) -> RooflineTerms:
+    """Trip-count-aware terms (repro.roofline.hlo_cost): XLA's own
+    cost_analysis counts while bodies once, which undercounts scanned
+    layer stacks by the layer count."""
+    from repro.roofline import hlo_cost
+    c = hlo_cost.analyze_hlo(hlo_text)
+    return RooflineTerms(flops=c.flops, hbm_bytes=c.bytes,
+                         wire_bytes=c.wire_bytes,
+                         model_flops=model_flops, chips=chips)
+
+
+def collective_summary(hlo_text: str) -> dict:
+    from repro.roofline import hlo_cost
+    c = hlo_cost.analyze_hlo(hlo_text)
+    return {"bytes_by_kind": c.coll, "count_by_kind": c.coll_count,
+            "wire_bytes": c.wire_bytes}
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes", "peak_memory_in_bytes"):
+        val = getattr(ma, field, None)
+        if val is not None:
+            out[field] = int(val)
+    args = out.get("argument_size_in_bytes", 0)
+    alias = out.get("alias_size_in_bytes", 0)
+    temp = out.get("temp_size_in_bytes", 0)
+    outb = out.get("output_size_in_bytes", 0)
+    out["resident_estimate_bytes"] = args + temp + outb - alias
+    return out
+
+
+def save_cell(path: str, record: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def gbytes(x: float) -> str:
+    return f"{x / 1e9:.3f}GB"

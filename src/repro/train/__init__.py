@@ -1,0 +1,9 @@
+"""Training / serving steps and state."""
+from repro.train.state import TrainState, abstract_train_state, make_train_state
+from repro.train.step import (greedy_generate, make_decode_step,
+                              make_loss_fn, make_prefill_step,
+                              make_train_step)
+
+__all__ = ["TrainState", "abstract_train_state", "make_train_state",
+           "greedy_generate", "make_decode_step", "make_loss_fn",
+           "make_prefill_step", "make_train_step"]

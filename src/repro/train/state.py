@@ -1,0 +1,47 @@
+"""TrainState: SALR fine-tuning state.
+
+The frozen sparse base lives OUTSIDE the optimizer: AdamW moments exist
+only for the adapter leaves (LoRA + residual), which is the paper's
+fine-tuning memory story (Table 3) and what makes 100B+ fine-tuning
+state small.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.pytree import combine, split_trainable
+from repro.models import model as M
+from repro.optim.adamw import AdamW, AdamWState
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("step", "trainable", "frozen", "opt"),
+         meta_fields=())
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array          # int32 scalar
+    trainable: Any           # adapter leaves (lora/res), others None
+    frozen: Any              # sparse base + embeddings..., adapters None
+    opt: AdamWState
+
+    def params(self):
+        return combine(self.trainable, self.frozen)
+
+
+def make_train_state(key: jax.Array, cfg: ArchConfig, opt: AdamW) -> TrainState:
+    params = M.init_params(key, cfg)
+    trainable, frozen = split_trainable(params)
+    return TrainState(step=jnp.zeros((), jnp.int32),
+                      trainable=trainable, frozen=frozen,
+                      opt=opt.init(trainable))
+
+
+def abstract_train_state(key: jax.Array, cfg: ArchConfig, opt: AdamW):
+    """ShapeDtypeStruct pytree of the state (dry-run: no allocation)."""
+    return jax.eval_shape(lambda k: make_train_state(k, cfg, opt), key)

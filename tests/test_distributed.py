@@ -1,0 +1,147 @@
+"""Distribution tests: sharding rules, compressed all-reduce, pipeline
+parallelism, and a miniature dry-run.  Runs in a subprocess with 8 host
+devices (XLA_FLAGS must be set before jax initializes, which pytest's
+main process already did with 1 device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_param_shardings_cover_state():
+    code = """
+    import jax, jax.numpy as jnp
+    from repro import configs
+    from repro.distributed import sharding as shard
+    from repro.optim.adamw import AdamW
+    from repro.train.state import abstract_train_state
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = configs.get("smollm_135m", smoke=True)
+    state = abstract_train_state(jax.random.PRNGKey(0), cfg, AdamW())
+    sh = shard.param_shardings(mesh, state)
+    n = len(jax.tree_util.tree_leaves(sh))
+    m = len(jax.tree_util.tree_leaves(state))
+    assert n == m, (n, m)
+    print("LEAVES", n)
+    """
+    out = run_py(code)
+    assert "LEAVES" in out
+
+
+def test_mini_dryrun_single_and_multipod():
+    """Miniature end-to-end dry-run: lower+compile a train and a decode
+    step on (2,2) and (2,2,2) meshes with production sharding rules."""
+    code = """
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import configs
+    from repro.distributed import sharding as shard
+    from repro.launch import specs as S
+    from repro.launch.dryrun import build_cell
+    from repro.configs.base import ShapeSpec
+
+    for shape_tuple, axes in (((2, 2), ("data", "model")),
+                              ((2, 2, 2), ("pod", "data", "model"))):
+        mesh = jax.make_mesh(shape_tuple, axes)
+        for arch in ("smollm_135m", "granite_moe_1b_a400m"):
+            cfg = configs.get(arch, smoke=True)
+            tr = ShapeSpec("t", 16, 8, "train")
+            rec, _ = build_cell(cfg, tr, mesh, seq_shard=True,
+                                microbatches=2, loss_chunk=8)
+            assert rec["roofline"]["flops_per_device"] > 0
+            de = ShapeSpec("d", 32, 8, "decode")
+            rec, _ = build_cell(cfg, de, mesh, seq_shard=False,
+                                microbatches=1, loss_chunk=8)
+            print("OK", arch, axes)
+    print("DRYRUN_PASS")
+    """
+    out = run_py(code)
+    assert "DRYRUN_PASS" in out
+
+
+def test_compressed_allreduce_multidevice():
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.distributed import collectives as coll
+    mesh = jax.make_mesh((8,), ("pod",))
+    g = {"w": jnp.arange(32.0).reshape(4, 8)}
+    e = coll.init_error_state(g)
+    mean, e2 = coll.all_reduce_compressed(mesh, g, e, axis="pod")
+    np.testing.assert_allclose(np.asarray(mean["w"]), np.asarray(g["w"]),
+                               rtol=0.02, atol=0.05)
+    print("COMPRESSED_OK")
+    """
+    out = run_py(code)
+    assert "COMPRESSED_OK" in out
+
+
+def test_gpipe_matches_sequential():
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.distributed.pipeline import gpipe_forward, split_stages
+    mesh = jax.make_mesh((4,), ("pod",))
+    L, D, MB, BS = 8, 16, 4, 2
+    key = jax.random.PRNGKey(0)
+    ws = jax.random.normal(key, (L, D, D)) / jnp.sqrt(D)
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (MB, BS, D))
+
+    def layer(w, x):
+        return jnp.tanh(x @ w)
+
+    def stage_fn(params, x):
+        def body(c, w):
+            return layer(w, c), None
+        y, _ = jax.lax.scan(body, x, params)
+        return y
+
+    stages = split_stages(ws, 4)
+    out = gpipe_forward(mesh, stage_fn, stages, xs, axis="pod")
+
+    ref = xs
+    for i in range(L):
+        ref = jax.vmap(lambda x: layer(ws[i], x))(ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    print("GPIPE_OK")
+    """
+    out = run_py(code)
+    assert "GPIPE_OK" in out
+
+
+def test_elastic_checkpoint_reshard():
+    """Save on a (4,) mesh, restore onto a (2,) mesh (elastic scaling)."""
+    code = """
+    import jax, jax.numpy as jnp, numpy as np, tempfile
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import ckpt
+    mesh4 = jax.make_mesh((8,), ("data",))
+    x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                       NamedSharding(mesh4, P("data", None)))
+    d = tempfile.mkdtemp()
+    ckpt.save(d, 1, {"x": x})
+    mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+    tmpl = jax.ShapeDtypeStruct((8, 8), jnp.float32,
+                                sharding=NamedSharding(mesh2, P(None, "model")))
+    back = ckpt.restore(d, 1, {"x": tmpl})
+    np.testing.assert_array_equal(np.asarray(back["x"]), np.asarray(x))
+    assert back["x"].sharding.spec == P(None, "model")
+    print("ELASTIC_OK")
+    """
+    out = run_py(code)
+    assert "ELASTIC_OK" in out

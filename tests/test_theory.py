@@ -1,0 +1,130 @@
+"""Monte-Carlo + property validation of the paper's Theorems 1-4."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prune, theory
+
+
+def mc_prune_mse(sigma, p, n=200_000, seed=0):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0.0, sigma, size=n)
+    t = sigma * float(theory.t_p(p))
+    w_hat = np.where(np.abs(w) > t, w, 0.0)
+    return float(np.mean((w - w_hat) ** 2))
+
+
+def test_theorem1_closed_form_matches_monte_carlo():
+    for p in (0.1, 0.3, 0.5, 0.7):
+        closed = float(theory.mse_prune(p, sigma2=1.0))
+        mc = mc_prune_mse(1.0, p)
+        assert closed == pytest.approx(mc, rel=0.05), (p, closed, mc)
+
+
+def test_theorem1_paper_numeric_example():
+    # Paper: MSE(0.5) ~ 0.072 sigma^2 (they use rounded intermediate values;
+    # the exact closed form gives ~0.0716).
+    val = float(theory.mse_prune(0.5, sigma2=1.0))
+    assert abs(val - 0.072) < 4e-3
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.floats(0.01, 0.95), sigma2=st.floats(0.1, 4.0), tau2=st.floats(0.01, 4.0))
+def test_theorem2_method1_is_minimal(p, sigma2, tau2):
+    """The load-bearing Theorem-2 claim: E1 <= min(E2, E3) for all p.
+
+    (The paper's stated E3 <= E2 sub-ordering fails for large p — see
+    theory.ordering_gaps docstring and EXPERIMENTS.md §Theory.)"""
+    g31, g21 = theory.ordering_gaps(p, sigma2, tau2)
+    assert float(g31) >= -1e-6
+    assert float(g21) >= -1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.floats(0.01, 0.95), sigma2=st.floats(0.1, 4.0), tau2=st.floats(0.01, 4.0))
+def test_theorem2_e2_gap_closed_form(p, sigma2, tau2):
+    """E2 - E1 == 2 s2 t2/(s2+t2) t_p phi(t_p)  (the paper's own algebra,
+    correctly attributed)."""
+    _, g21 = theory.ordering_gaps(p, sigma2, tau2)
+    cf = theory.e2_minus_e1_closed_form(p, sigma2, tau2)
+    assert float(g21) == pytest.approx(float(cf), rel=1e-4, abs=1e-6)
+
+
+def test_theorem2_monte_carlo():
+    rng = np.random.default_rng(1)
+    n = 400_000
+    sigma, tau, p = 1.0, 0.7, 0.5
+    w0 = rng.normal(0, sigma, n)
+    delta = rng.normal(0, tau, n)
+    u = w0 + delta
+    tp = float(theory.t_p(p))
+
+    # method 1: static mask on |W0|
+    e1 = np.mean(np.where(np.abs(w0) <= sigma * tp, w0, 0.0) ** 2)
+    # method 2: mask from U, zero only W0 => error = W0 on masked entries
+    v = np.sqrt(sigma**2 + tau**2)
+    m2 = np.abs(u) <= v * tp
+    e2 = np.mean(np.where(m2, w0, 0.0) ** 2)
+    # method 3: mask and zero full U
+    e3 = np.mean(np.where(m2, u, 0.0) ** 2)
+
+    assert float(theory.e1_static_w0(p, sigma**2)) == pytest.approx(e1, rel=0.05)
+    assert float(theory.e2_dynamic_u_prune_w0(p, sigma**2, tau**2)) == pytest.approx(e2, rel=0.05)
+    assert float(theory.e3_dynamic_full_u(p, sigma**2, tau**2)) == pytest.approx(e3, rel=0.05)
+    assert e1 <= e3 <= e2
+
+
+def test_theorem3_svd_residual_bound():
+    key = jax.random.PRNGKey(0)
+    d, k, p, r = 96, 128, 0.5, 16
+    w = jax.random.normal(key, (d, k))
+    mask = prune.magnitude_mask(w, p)
+    e = prune.residual(w, mask)
+    u, s, vt = jnp.linalg.svd(e, full_matrices=False)
+    er = (u[:, :r] * s[:r]) @ vt[:r]
+    per_entry = float(jnp.mean((e - er) ** 2))
+    # Theorem 3 bound is stated in expectation w/ worst-case uniform
+    # spectrum; check the bound holds for the realized matrix.
+    bound = (1 - r / min(d, k)) * float(jnp.mean(e**2)) * (min(d, k) / min(d, k))
+    assert per_entry <= bound + 1e-6
+    # and the energy-captured identity
+    cap = float(theory.residual_energy_captured(s, r))
+    assert per_entry == pytest.approx((1 - cap) * float(jnp.mean(e**2)), rel=1e-4)
+
+
+def test_energy_index_monotone():
+    s = jnp.array([10.0, 5.0, 2.0, 1.0, 0.5, 0.1])
+    i90 = int(theory.energy_index(s, 0.90))
+    i99 = int(theory.energy_index(s, 0.99))
+    assert 1 <= i90 <= i99 <= s.shape[0]
+
+
+def test_theorem4_eta_star_and_convergence():
+    key = jax.random.PRNGKey(42)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n, d, k = 64, 32, 24
+    x = jax.random.normal(k1, (n, d))
+    m_true = jax.random.normal(k2, (d, k)) * 0.3
+    r = x @ m_true
+
+    smax_pi = float(theory.power_iteration_sigma_max(x, iters=50))
+    smax_true = float(jnp.linalg.svd(x, compute_uv=False)[0])
+    assert smax_pi == pytest.approx(smax_true, rel=1e-3)
+
+    eta = float(theory.eta_svd_star(x, iters=50))
+    m = jax.random.normal(k3, (d, k)) * 0.01
+    def loss(m):
+        return 0.5 * jnp.sum((x @ m - r) ** 2)
+    l0 = float(loss(m))
+    for _ in range(200):
+        m = m - eta * x.T @ (x @ m - r)
+    assert float(loss(m)) < 1e-3 * l0  # converged with the Thm-4 step
+
+    # divergence just above 2/L: gradient descent must NOT converge
+    eta_bad = 2.05 * eta
+    mb = jax.random.normal(k3, (d, k)) * 0.01
+    for _ in range(50):
+        mb = mb - eta_bad * x.T @ (x @ mb - r)
+    assert float(loss(mb)) > l0
