@@ -2,10 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV lines.  Run:
     PYTHONPATH=src python -m benchmarks.run [--only tableN]
+    PYTHONPATH=src python -m benchmarks.run --smoke --out BENCH_smoke.json
+
+``--smoke`` runs the fast subset (CI); ``--out`` additionally writes the
+collected lines as a structured JSON artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -21,29 +26,55 @@ MODULES = [
     ("fig3", "benchmarks.bench_fig3_spectra"),
 ]
 
+# fast, fine-tune-free subset exercised by CI (--smoke)
+SMOKE = ("theory", "table4")
+
+
+def _parse(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single benchmark (e.g. table4)")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"run only the fast subset {SMOKE}")
+    ap.add_argument("--out", default=None,
+                    help="write results as a JSON artifact (BENCH_*.json)")
     args = ap.parse_args()
 
     import importlib
     failures = 0
+    results = []
     print("name,us_per_call,derived")
     for tag, modname in MODULES:
         if args.only and args.only != tag:
+            continue
+        if args.smoke and tag not in SMOKE:
             continue
         t0 = time.time()
         try:
             mod = importlib.import_module(modname)
             for line in mod.main():
                 print(line)
-            print(f"{tag}_total,{(time.time() - t0) * 1e6:.0f},ok")
+                results.append(_parse(line))
+            elapsed_us = (time.time() - t0) * 1e6
+            print(f"{tag}_total,{elapsed_us:.0f},ok")
+            results.append({"name": f"{tag}_total",
+                            "us_per_call": elapsed_us, "derived": "ok"})
         except Exception:
             failures += 1
             print(f"{tag}_total,0,FAILED")
+            results.append({"name": f"{tag}_total", "us_per_call": 0.0,
+                            "derived": "FAILED"})
             traceback.print_exc()
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"smoke": args.smoke, "failures": failures,
+                       "results": results}, f, indent=1)
+        print(f"wrote {args.out} ({len(results)} entries)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -31,6 +31,11 @@ class SALRModelConfig:
     res_rank: int = 64
     # which linear families get compressed (embeddings/norms never are)
     targets: tuple = ("attn", "mlp", "expert", "recurrent")
+    # execution plan for forwards: "kernel" emits kernel-native tiled
+    # storage and routes apply_salr through the fused Pallas ops;
+    # "reference" keeps flat storage and the dense decode+GEMM path.
+    # Gradients always take the reference path (custom VJP).
+    backend: str = "kernel"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,13 +1,17 @@
 """SALR core: the paper's contribution as composable JAX modules."""
 from repro.core import adapters, bitmap, prune, pytree, quant, residual, salr, theory
 from repro.core.adapters import LoRAAdapter, apply_adapters_fused, concat_adapters, init_lora
-from repro.core.bitmap import BitmapWeight, NMWeight, decode, encode, nm_decode, nm_encode
-from repro.core.salr import SALRConfig, SALRLinear, apply_salr, compress_linear
+from repro.core.bitmap import (BitmapWeight, NMWeight, QTiledBitmapWeight,
+                               TiledBitmapWeight, decode, encode, from_tiled,
+                               nm_decode, nm_encode, to_tiled)
+from repro.core.salr import (SALRConfig, SALRLinear, apply_salr,
+                             compress_linear, force_backend, plan)
 
 __all__ = [
     "adapters", "bitmap", "prune", "pytree", "quant", "residual", "salr",
     "theory", "LoRAAdapter", "apply_adapters_fused", "concat_adapters",
-    "init_lora", "BitmapWeight", "NMWeight", "decode", "encode",
+    "init_lora", "BitmapWeight", "NMWeight", "TiledBitmapWeight",
+    "QTiledBitmapWeight", "decode", "encode", "to_tiled", "from_tiled",
     "nm_decode", "nm_encode", "SALRConfig", "SALRLinear", "apply_salr",
-    "compress_linear",
+    "compress_linear", "force_backend", "plan",
 ]

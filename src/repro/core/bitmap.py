@@ -262,6 +262,181 @@ def tile_encode_from_dense(w: jax.Array, p: float, tile: int = 256,
 
 
 # ---------------------------------------------------------------------------
+# flat <-> tiled conversion (execution-plan layer, DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def default_tile(cols: int, tile: int = 256) -> int:
+    """Kernel N-tile for a matrix with ``cols`` columns: a multiple of 32
+    no wider than ``tile``; columns are zero-padded up to a tile multiple
+    by :func:`to_tiled` (padded columns decode to zero and are sliced off
+    by the caller)."""
+    return min(tile, round_up(cols, 32))
+
+
+def _pad_cols(dense: jax.Array, bits: jax.Array, tile: int):
+    cols = dense.shape[1]
+    pad = round_up(cols, tile) - cols
+    if pad:
+        dense = jnp.pad(dense, ((0, 0), (0, pad)))
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    return dense, bits
+
+
+def _check_no_spill(spill: jax.Array, what: str, cap: int) -> None:
+    """Raise if a conversion overflowed its capacity (concrete arrays
+    only — conversions are plan-time ops; compress-time tiled encoding
+    folds spill into the residual instead, see repro.core.salr)."""
+    if isinstance(spill, jax.core.Tracer):
+        return  # cannot check under tracing; caller chose cap explicitly
+    if bool(np.any(np.asarray(jnp.abs(spill) > 0))):
+        raise ValueError(
+            f"{what}={cap} too small: conversion would silently drop "
+            "spilled weights; raise the capacity or encode from dense "
+            "with a residual (tile_encode / encode_from_dense)")
+
+
+def to_tiled(bw: BitmapWeight, tile: int | None = None,
+             cap_t: int | None = None,
+             transpose: bool = False) -> TiledBitmapWeight:
+    """Convert a flat row-encoded :class:`BitmapWeight` to the kernel-
+    native tiled layout, exactly (``tile_decode(to_tiled(bw)) ==
+    decode(bw)`` up to column zero-padding).
+
+    ``transpose=True`` re-encodes the transposed matrix — used by
+    ``repro.core.salr.plan`` to bring ``transposed`` (W^T) storage back
+    to the logical (d_in, d_out) orientation the fused kernels contract
+    over.  ``cap_t=None`` sizes the per-tile capacity to the exact max
+    cell population, which requires concrete (non-traced) arrays; an
+    explicit ``cap_t`` that a cell overflows raises (traced arrays
+    cannot be checked — there the caller owns the bound).
+    """
+    dense = decode(bw)
+    bits = unpack_bits(bw.words, bw.cols)
+    if transpose:
+        dense, bits = dense.T, bits.T
+    if tile is None:
+        tile = default_tile(dense.shape[1])
+    dense, bits = _pad_cols(dense, bits, tile)
+    rows, cols = dense.shape
+    n_tiles = cols // tile
+    if cap_t is None:
+        per_cell = np.asarray(
+            jnp.sum(bits.reshape(rows, n_tiles, tile), axis=-1))
+        cap_t = min(tile, round_up(max(int(per_cell.max()), 1), 8))
+    tbw, spill = tile_encode(dense, bits, tile, cap_t)
+    _check_no_spill(spill, "cap_t", cap_t)
+    return tbw
+
+
+def from_tiled(tbw: TiledBitmapWeight, cols: int | None = None,
+               cap: int | None = None) -> BitmapWeight:
+    """Inverse of :func:`to_tiled`: back to the flat row-encoded layout.
+
+    ``cols`` trims the zero-padded columns added by ``to_tiled`` (default
+    keeps the padded width).  ``cap=None`` sizes the per-row capacity to
+    the exact max row population (concrete arrays only)."""
+    dense = tile_decode(tbw)
+    rows, n_tiles = tbw.rows, tbw.n_tiles
+    bits = unpack_bits(
+        tbw.words.reshape(rows * n_tiles, tbw.tile // 32), tbw.tile
+    ).reshape(rows, tbw.cols)
+    if cols is not None:
+        dense, bits = dense[:, :cols], bits[:, :cols]
+    if cap is None:
+        per_row = np.asarray(jnp.sum(bits, axis=-1))
+        cap = min(bits.shape[1], round_up(max(int(per_row.max()), 1), 8))
+    bw, spill = encode(dense, bits, cap)
+    _check_no_spill(spill, "cap", cap)
+    return bw
+
+
+# ---------------------------------------------------------------------------
+# NF4-quantized tiled bitmap (QSALR kernel storage, DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("words", "codes", "scales"),
+         meta_fields=("cols", "tile", "cap_t"))
+@dataclasses.dataclass(frozen=True)
+class QTiledBitmapWeight:
+    """Tiled bitmap whose compact values are NF4-quantized per cell.
+
+    Same cell structure as :class:`TiledBitmapWeight`, but each (row,
+    column-tile) value segment stores 4-bit NF4 codes packed two per byte
+    plus one f32 absmax scale — the layout the fused dequant-in-kernel
+    Pallas path (repro.kernels.qsalr_spmm) streams from HBM.
+    """
+    words: jax.Array    # uint32 (rows, n_tiles, tile//32)
+    codes: jax.Array    # uint8  (rows, n_tiles, cap_t//2)
+    scales: jax.Array   # f32    (rows, n_tiles, 1)
+    cols: int
+    tile: int
+    cap_t: int
+
+    @property
+    def rows(self) -> int:
+        return self.words.shape[0]
+
+    @property
+    def n_tiles(self) -> int:
+        return self.words.shape[1]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.rows, self.cols)
+
+    def nbytes(self) -> int:
+        return (self.words.size * 4 + self.codes.size
+                + self.scales.size * self.scales.dtype.itemsize)
+
+
+def tile_quantize_nf4(tbw: TiledBitmapWeight
+                      ) -> tuple[QTiledBitmapWeight, jax.Array]:
+    """Per-cell NF4 quantization of a tiled bitmap's compact values.
+
+    Returns (QTiledBitmapWeight, qerr) where ``qerr`` is the dense
+    (rows, cols) quantization error so callers can fold it into the SVD
+    residual (W = decode + E stays exact).  ``cap_t`` must be even."""
+    from repro.core.quant import NF4_LEVELS
+    assert tbw.cap_t % 2 == 0, "cap_t must be even to pack NF4 nibbles"
+    vals = tbw.values.astype(jnp.float32)           # (rows, n_tiles, cap_t)
+    scales = jnp.maximum(jnp.max(jnp.abs(vals), axis=-1, keepdims=True),
+                         1e-12)
+    levels = jnp.asarray(NF4_LEVELS)
+    idx = jnp.argmin(jnp.abs((vals / scales)[..., None] - levels),
+                     axis=-1).astype(jnp.uint8)
+    lo, hi = idx[..., 0::2], idx[..., 1::2]
+    codes = (lo | (hi << 4)).astype(jnp.uint8)
+    q = QTiledBitmapWeight(words=tbw.words, codes=codes, scales=scales,
+                           cols=tbw.cols, tile=tbw.tile, cap_t=tbw.cap_t)
+    deq = levels[idx.astype(jnp.int32)] * scales
+    qerr = tile_decode(TiledBitmapWeight(
+        words=tbw.words, values=(vals - deq).astype(tbw.values.dtype),
+        cols=tbw.cols, tile=tbw.tile, cap_t=tbw.cap_t))
+    return q, qerr
+
+
+def tile_dequantize_nf4(q: QTiledBitmapWeight,
+                        dtype=jnp.float32) -> TiledBitmapWeight:
+    """Reference (plan-time / decode-oracle) dequantization to a value-
+    carrying tiled bitmap.  The kernel path performs the same arithmetic
+    in-kernel and never materializes this."""
+    from repro.core.quant import NF4_LEVELS
+    lo = (q.codes & jnp.uint8(0x0F)).astype(jnp.int32)
+    hi = (q.codes >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=-1).reshape(q.rows, q.n_tiles, q.cap_t)
+    levels = jnp.asarray(NF4_LEVELS)
+    vals = (levels[idx] * q.scales).astype(dtype)
+    return TiledBitmapWeight(words=q.words, values=vals, cols=q.cols,
+                             tile=q.tile, cap_t=q.cap_t)
+
+
+def qtile_decode(q: QTiledBitmapWeight, dtype=jnp.float32) -> jax.Array:
+    """Pure-jnp reference decode of the quantized tiled format."""
+    return tile_decode(tile_dequantize_nf4(q, dtype=dtype))
+
+
+# ---------------------------------------------------------------------------
 # N:M encode / decode
 # ---------------------------------------------------------------------------
 

@@ -7,9 +7,26 @@ N:M, or NF4-quantized bitmap) and A_cat/B_cat fuse the task LoRA adapter
 with the sparsity-preservation residual adapter into a single GEMM pair.
 
 Only ``lora`` and ``res`` fields are trainable (see repro.core.pytree).
+
+Execution plans (DESIGN.md §2): every layer carries a ``backend`` tag
+and, when kernel-ready, stores its base in the kernel-native tiled
+layout (``TiledBitmapWeight`` / ``QTiledBitmapWeight``, always in the
+logical (d_in, d_out) orientation).  ``apply_salr`` dispatches on the
+base representation:
+
+    TiledBitmapWeight   -> ops.salr_matmul   (fused decode+GEMM+adapters)
+    QTiledBitmapWeight  -> ops.qsalr_matmul  (NF4 dequant in-kernel)
+    NMWeight            -> ops.nm_matmul + ops.lora_matmul
+    dense / mask / flat -> reference decode + dense GEMM
+
+``backend="reference"`` (per-call, per-layer, or via ``force_backend``)
+always takes the dense decode path; gradients always do — the kernel
+forward carries a custom VJP whose backward is the reference path, so
+adapters-only fine-tuning works unchanged on kernel-planned layers.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import Optional
@@ -52,6 +69,7 @@ class SALRConfig:
     nm: tuple = (2, 4)
     cap_align: int = 128
     dtype: str = "float32"
+    backend: str = "kernel"       # kernel | reference (execution plan)
 
     def capacity(self, cols: int) -> int:
         return bm.default_capacity(cols, self.sparsity, self.cap_align)
@@ -59,25 +77,48 @@ class SALRConfig:
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=("base", "lora", "res", "bias"),
-         meta_fields=("d_in", "d_out", "transposed"))
+         meta_fields=("d_in", "d_out", "transposed", "backend"))
 @dataclasses.dataclass(frozen=True)
 class SALRLinear:
-    """Frozen sparse base + trainable fused adapters."""
-    base: object                   # Array | BitmapWeight | NMWeight | QBitmapWeight
+    """Frozen sparse base + trainable fused adapters.
+
+    ``transposed=True`` means the (flat) base stores W^T so the encoded
+    row axis equals the TP-sharded output dimension.  Kernel-native tiled
+    bases are ALWAYS stored in the logical (d_in, d_out) orientation
+    (the fused kernels contract over storage rows), so ``transposed`` is
+    False whenever ``base`` is Tiled/QTiledBitmapWeight — DESIGN.md §3.
+    ``backend`` records the layer's default execution path.
+    """
+    base: object                   # Array | BitmapWeight | NMWeight |
+    #                                QBitmapWeight | TiledBitmapWeight |
+    #                                QTiledBitmapWeight
     lora: LoRAAdapter
     res: Optional[LoRAAdapter]
     bias: Optional[jax.Array]
     d_in: int
     d_out: int
-    transposed: bool               # True => base stores W^T (sharded-rows layout)
+    transposed: bool
+    backend: str = "reference"
+
+
+def _is_tiled(base) -> bool:
+    return isinstance(base, (bm.TiledBitmapWeight, bm.QTiledBitmapWeight))
 
 
 def materialize_base(base) -> jax.Array:
-    """Dense W_hat from any base representation (reference decode path)."""
+    """Dense W_hat from any base representation (reference decode path).
+
+    Tiled bases decode in the logical orientation with zero-padded
+    columns up to the tile multiple; callers slice to ``layer.d_out``.
+    """
     if isinstance(base, bm.BitmapWeight):
         return bm.decode(base)
     if isinstance(base, bm.NMWeight):
         return bm.nm_decode(base)
+    if isinstance(base, bm.TiledBitmapWeight):
+        return bm.tile_decode(base)
+    if isinstance(base, bm.QTiledBitmapWeight):
+        return bm.qtile_decode(base)
     if isinstance(base, QBitmapWeight):
         vals = dequantize_nf4(base.qvalues)
         return bm.decode(bm.BitmapWeight(words=base.words,
@@ -96,14 +137,47 @@ def adapter_cat(layer: SALRLinear) -> tuple[jax.Array, jax.Array]:
     return a_cat, b_cat
 
 
-def apply_salr(x: jax.Array, layer: SALRLinear,
-               precision=None, constrain_fn=None) -> jax.Array:
-    """y = x @ W_hat + (x @ A_cat) @ B_cat (+ bias).  x: (..., d_in).
+# ---------------------------------------------------------------------------
+# backend dispatch
+# ---------------------------------------------------------------------------
 
-    ``constrain_fn`` (optional) pins the decoded dense W_hat (rows, cols)
-    to the storage-row sharding under pjit (repro.distributed.sharding)."""
+_BACKEND_OVERRIDE: list[str] = []
+
+
+@contextlib.contextmanager
+def force_backend(backend: str):
+    """Scoped backend override consulted by every ``apply_salr`` call
+    traced inside the block (e.g. the train step forces ``reference``).
+    The override is read at TRACE time: re-used jitted functions keep the
+    backend they were traced with."""
+    _BACKEND_OVERRIDE.append(backend)
+    try:
+        yield
+    finally:
+        _BACKEND_OVERRIDE.pop()
+
+
+def _resolve_backend(layer: SALRLinear, backend: Optional[str]) -> str:
+    b = backend
+    if b is None and _BACKEND_OVERRIDE:
+        b = _BACKEND_OVERRIDE[-1]
+    if b is None:
+        b = layer.backend
+    if b not in ("kernel", "reference"):
+        raise ValueError(f"unknown SALR backend {b!r}")
+    return b
+
+
+def _apply_reference(x: jax.Array, layer: SALRLinear,
+                     precision=None, constrain_fn=None) -> jax.Array:
+    """Dense decode + GEMM (the differentiable oracle path)."""
     w = materialize_base(layer.base)
-    if constrain_fn is not None:
+    if _is_tiled(layer.base):
+        w = w[:, :layer.d_out]            # drop tile zero-padding
+    if w.dtype != x.dtype:
+        w = w.astype(x.dtype)
+    if constrain_fn is not None and not _is_tiled(layer.base):
+        # the storage-rows sharding convention only applies to flat bases
         w = constrain_fn(w)
     if layer.transposed:
         y = jax.lax.dot_general(
@@ -118,6 +192,81 @@ def apply_salr(x: jax.Array, layer: SALRLinear,
     return y
 
 
+def _kernel_capable(layer: SALRLinear) -> bool:
+    """Whether a fused Pallas op exists for this base layout.  Dense /
+    mask / flat (unplanned) storage has none: the reference GEMM is that
+    representation's execution plan — see plan() to convert."""
+    return (_is_tiled(layer.base)
+            or (isinstance(layer.base, bm.NMWeight) and not layer.transposed))
+
+
+def _kernel_dispatch(x: jax.Array, layer: SALRLinear) -> jax.Array:
+    """Route the forward to the fused Pallas op for this base layout."""
+    from repro.kernels import ops  # deferred: kernels import core.bitmap
+    base = layer.base
+    a_cat, b_cat = adapter_cat(layer)
+    if isinstance(base, bm.TiledBitmapWeight):
+        if a_cat.shape[1] == 0:
+            y = ops.bitmap_matmul(x, base)[..., :layer.d_out]
+        else:
+            y = ops.salr_matmul(x, base, a_cat, b_cat)[..., :layer.d_out]
+    elif isinstance(base, bm.QTiledBitmapWeight):
+        y = ops.qsalr_matmul(x, base, a_cat, b_cat)[..., :layer.d_out]
+    elif isinstance(base, bm.NMWeight) and not layer.transposed:
+        y = ops.nm_matmul(x, base)
+        if a_cat.shape[1]:
+            y = y + ops.lora_matmul(x, a_cat, b_cat)
+    else:
+        raise TypeError(f"no fused kernel for base {type(base).__name__} "
+                        f"(transposed={layer.transposed})")
+    if layer.bias is not None:
+        y = y + layer.bias
+    return y
+
+
+@jax.custom_vjp
+def _kernel_forward(x: jax.Array, layer: SALRLinear) -> jax.Array:
+    return _kernel_dispatch(x, layer)
+
+
+def _kernel_forward_fwd(x, layer):
+    return _kernel_dispatch(x, layer), (x, layer)
+
+
+def _kernel_forward_bwd(res, g):
+    # Pallas kernels carry no AD rules; the backward pass runs the exact
+    # reference formulation (ISSUE: reference path for grads, kernel path
+    # keeps the frozen base un-differentiated).
+    x, layer = res
+    _, vjp = jax.vjp(lambda xx, ll: _apply_reference(xx, ll), x, layer)
+    return vjp(g)
+
+
+_kernel_forward.defvjp(_kernel_forward_fwd, _kernel_forward_bwd)
+
+
+def apply_salr(x: jax.Array, layer: SALRLinear,
+               precision=None, constrain_fn=None,
+               backend: Optional[str] = None) -> jax.Array:
+    """y = x @ W_hat + (x @ A_cat) @ B_cat (+ bias).  x: (..., d_in).
+
+    ``backend`` selects the execution path (explicit arg > active
+    ``force_backend`` scope > ``layer.backend``): ``"kernel"`` routes to
+    the fused Pallas op for the layer's base representation,
+    ``"reference"`` decodes dense and runs plain GEMMs.
+
+    ``constrain_fn`` (optional) pins the decoded dense W_hat (rows, cols)
+    to the storage-row sharding under pjit (repro.distributed.sharding);
+    it applies to flat-storage reference decodes only — tiled plans keep
+    the sparse representation live and never materialize W_hat.  Bases
+    without a fused kernel (dense / mask / unplanned flat) always take
+    the reference path with the caller's precision/constrain semantics
+    intact, whatever the requested backend."""
+    if _resolve_backend(layer, backend) == "kernel" and _kernel_capable(layer):
+        return _kernel_forward(x, layer)
+    return _apply_reference(x, layer, precision, constrain_fn)
+
+
 def delta_w(layer: SALRLinear) -> jax.Array:
     """Effective dense update contributed by the fused adapters."""
     a_cat, b_cat = adapter_cat(layer)
@@ -127,6 +276,8 @@ def delta_w(layer: SALRLinear) -> jax.Array:
 def effective_weight(layer: SALRLinear) -> jax.Array:
     """Dense W_hat + A_cat B_cat (for analysis only; defeats compression)."""
     w = materialize_base(layer.base)
+    if _is_tiled(layer.base):
+        w = w[:, :layer.d_out]
     if layer.transposed:
         w = w.T
     return w + delta_w(layer)
@@ -143,14 +294,25 @@ def compress_linear(key: jax.Array, w: jax.Array, cfg: SALRConfig,
 
     Pipeline (paper Fig. 2a): magnitude-prune -> encode base (bitmap/NM/
     NF4) -> truncated-SVD the total residual (pruned entries + capacity
-    spill) into the trainable ``res`` adapter -> fresh LoRA adapter.
-    If ``transposed``, storage is W^T so the encoded row axis equals the
-    sharded output dimension (DESIGN.md §3 sharding-aware encoding).
+    spill [+ quantization error]) into the trainable ``res`` adapter ->
+    fresh LoRA adapter.
+
+    With ``cfg.backend == "kernel"`` the bitmap-family bases are emitted
+    directly in the kernel-native tiled layout (logical orientation, so
+    the resulting layer reports ``transposed=False``); transposed N:M
+    storage — whose kernel contracts over logical rows — is converted to
+    a tiled bitmap as well.  With ``cfg.backend == "reference"``, or if
+    ``transposed`` flat storage is requested, the historical flat layout
+    is kept: storage is W^T so the encoded row axis equals the sharded
+    output dimension (DESIGN.md §3 sharding-aware encoding).  Fully
+    traceable (runs under the model-init vmaps).
     """
     d_in, d_out = w.shape
     store = w.T if transposed else w
     dtype = jnp.dtype(cfg.dtype)
+    kernel_ready = cfg.backend == "kernel"
     res_ad = None
+    out_transposed = transposed
 
     if cfg.method == "dense":
         base = store.astype(dtype)
@@ -160,33 +322,91 @@ def compress_linear(key: jax.Array, w: jax.Array, cfg: SALRConfig,
         e = prune.residual(store, mask)
         res_ad = _res_adapter(e, cfg, transposed, dtype)
     elif cfg.method == "bitmap":
-        bw, e = bm.encode_from_dense(store.astype(dtype), cfg.sparsity,
-                                     cap=cfg.capacity(store.shape[1]))
-        base = bw
-        res_ad = _res_adapter(e, cfg, transposed, dtype)
+        if kernel_ready:
+            base, e = _tiled_bitmap_base(w, cfg, dtype)
+            res_ad = _res_adapter(e, cfg, False, dtype)
+            out_transposed = False
+        else:
+            bw, e = bm.encode_from_dense(store.astype(dtype), cfg.sparsity,
+                                         cap=cfg.capacity(store.shape[1]))
+            base = bw
+            res_ad = _res_adapter(e, cfg, transposed, dtype)
     elif cfg.method == "nm":
         n, m = cfg.nm
-        nmw, e = bm.nm_encode(store.astype(dtype), n=n, m=m)
-        base = nmw
-        res_ad = _res_adapter(e, cfg, transposed, dtype)
+        if kernel_ready and transposed:
+            base, e = _tiled_nm_base(w, cfg, dtype)
+            res_ad = _res_adapter(e, cfg, False, dtype)
+            out_transposed = False
+        else:
+            nmw, e = bm.nm_encode(store.astype(dtype), n=n, m=m)
+            base = nmw
+            res_ad = _res_adapter(e, cfg, transposed, dtype)
     elif cfg.method == "bitmap_nf4":
-        bw, e = bm.encode_from_dense(store.astype(jnp.float32), cfg.sparsity,
-                                     cap=cfg.capacity(store.shape[1]))
-        q = quantize_nf4(bw.values)
-        # quantization error of kept values joins the residual too
-        qerr_vals = bw.values - dequantize_nf4(q)
-        e = e + bm.decode(bm.BitmapWeight(words=bw.words, values=qerr_vals,
-                                          cols=bw.cols, cap=bw.cap))
-        base = QBitmapWeight(words=bw.words, qvalues=q,
-                             cols=bw.cols, cap=bw.cap)
-        res_ad = _res_adapter(e, cfg, transposed, dtype)
+        if kernel_ready:
+            tbw, e = _tiled_encode(w.astype(jnp.float32), cfg)
+            q, qerr = bm.tile_quantize_nf4(tbw)
+            e = e + qerr[:, :d_out]
+            base = q
+            res_ad = _res_adapter(e, cfg, False, dtype)
+            out_transposed = False
+        else:
+            bw, e = bm.encode_from_dense(store.astype(jnp.float32),
+                                         cfg.sparsity,
+                                         cap=cfg.capacity(store.shape[1]))
+            q = quantize_nf4(bw.values)
+            # quantization error of kept values joins the residual too
+            qerr_vals = bw.values - dequantize_nf4(q)
+            e = e + bm.decode(bm.BitmapWeight(words=bw.words,
+                                              values=qerr_vals,
+                                              cols=bw.cols, cap=bw.cap))
+            base = QBitmapWeight(words=bw.words, qvalues=q,
+                                 cols=bw.cols, cap=bw.cap)
+            res_ad = _res_adapter(e, cfg, transposed, dtype)
     else:
         raise ValueError(f"unknown SALR method {cfg.method!r}")
 
     lora = init_lora(key, d_in, d_out, cfg.lora_rank, dtype=dtype)
     return SALRLinear(base=base, lora=lora, res=res_ad,
                       bias=None if bias is None else bias.astype(dtype),
-                      d_in=d_in, d_out=d_out, transposed=transposed)
+                      d_in=d_in, d_out=d_out, transposed=out_transposed,
+                      backend=cfg.backend)
+
+
+def _tiled_encode(w: jax.Array, cfg: SALRConfig,
+                  mask: Optional[jax.Array] = None,
+                  cap_t: Optional[int] = None):
+    """Tile-encode a logical (d_in, d_out) weight with static capacity
+    (traceable).  Returns (TiledBitmapWeight, residual incl. spill)."""
+    d_in, d_out = w.shape
+    tile = bm.default_tile(d_out)
+    if mask is None:
+        mask = prune.magnitude_mask(w, cfg.sparsity)
+    if cap_t is None:
+        cap_t = bm.tiled_capacity(tile, cfg.sparsity)
+    w_hat = prune.apply_mask(w, mask)
+    pad = bm.round_up(d_out, tile) - d_out
+    if pad:
+        w_hat = jnp.pad(w_hat, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    tbw, spill = bm.tile_encode(w_hat, mask, tile, cap_t)
+    e = prune.residual(w, mask[:, :d_out] if pad else mask)
+    return tbw, e + spill[:, :d_out]
+
+
+def _tiled_bitmap_base(w: jax.Array, cfg: SALRConfig, dtype):
+    return _tiled_encode(w.astype(dtype), cfg)
+
+
+def _tiled_nm_base(w: jax.Array, cfg: SALRConfig, dtype):
+    """Transposed N:M storage, kernel-ready: the N:M mask is computed in
+    the storage orientation (groups along d_in, the sharding/encoding
+    convention), then the masked weight is re-encoded as a logical tiled
+    bitmap the fused kernel can contract over."""
+    n, m = cfg.nm
+    mask_store = prune.nm_mask(w.astype(dtype).T, n=n, m=m)
+    cap_t = bm.tiled_capacity(bm.default_tile(w.shape[1]), 1.0 - n / m)
+    return _tiled_encode(w.astype(dtype), cfg, mask=mask_store.T,
+                         cap_t=cap_t)
 
 
 def _res_adapter(e_store: jax.Array, cfg: SALRConfig, transposed: bool,
@@ -195,6 +415,57 @@ def _res_adapter(e_store: jax.Array, cfg: SALRConfig, transposed: bool,
         return None
     e = e_store.T if transposed else e_store   # back to (d_in, d_out)
     return truncated_svd_adapter(e, cfg.res_rank, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# execution-plan conversion for existing layers
+# ---------------------------------------------------------------------------
+
+def plan(layer: SALRLinear, mode: str = "kernel") -> SALRLinear:
+    """Convert a layer's base storage to the given execution plan.
+
+    ``mode="kernel"`` re-encodes flat bitmap-family bases into the
+    kernel-native tiled layout (exact — decode is unchanged; flat
+    NF4-quantized values are dequantized and re-quantized per tile cell,
+    a one-time drift comparable to the original quantization error).
+    ``mode="reference"`` converts tiled bases back to flat row encodings.
+    Dense / mask bases are untouched by either mode.
+
+    Runs on concrete arrays (it sizes capacities from the actual
+    populations); call it outside jit — ``compress_linear`` already
+    emits kernel-ready storage when ``cfg.backend == "kernel"``.
+    """
+    if mode not in ("kernel", "reference"):
+        raise ValueError(f"unknown plan mode {mode!r}")
+    base, transposed = layer.base, layer.transposed
+
+    if mode == "kernel":
+        if isinstance(base, bm.BitmapWeight):
+            base = bm.to_tiled(base, transpose=transposed)
+            transposed = False
+        elif isinstance(base, QBitmapWeight):
+            flat = bm.BitmapWeight(words=base.words,
+                                   values=dequantize_nf4(base.qvalues),
+                                   cols=base.cols, cap=base.cap)
+            tbw = bm.to_tiled(flat, transpose=transposed)
+            base, _ = bm.tile_quantize_nf4(tbw)
+            transposed = False
+        elif isinstance(base, bm.NMWeight) and transposed:
+            dense = bm.nm_decode(base).T            # logical (d_in, d_out)
+            flat, _ = bm.encode_from_dense(dense, 0.0,
+                                           mask=dense != 0,
+                                           cap=dense.shape[1])
+            base = bm.to_tiled(flat)
+            transposed = False
+    else:  # reference
+        if isinstance(base, bm.QTiledBitmapWeight):
+            base = bm.tile_dequantize_nf4(base)
+        if isinstance(base, bm.TiledBitmapWeight):
+            base = bm.from_tiled(base, cols=layer.d_out)
+            transposed = False
+
+    return dataclasses.replace(layer, base=base, transposed=transposed,
+                               backend=mode)
 
 
 def base_nbytes(layer: SALRLinear) -> int:

@@ -15,7 +15,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
-from jax import shard_map
+from repro.distributed.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 

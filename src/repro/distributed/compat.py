@@ -1,0 +1,26 @@
+"""Version compatibility for shard_map across jax releases.
+
+Newer jax exports ``jax.shard_map`` and spells the replication-check
+kwarg ``check_vma``; jax 0.4.x ships it under
+``jax.experimental.shard_map`` with the kwarg named ``check_rep``.
+Callers use the modern spelling; this wrapper translates when needed.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.5 re-exports shard_map at the top level
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(*args, **kwargs):
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(*args, **kwargs)
+
+
+__all__ = ["shard_map"]

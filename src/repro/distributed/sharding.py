@@ -58,14 +58,36 @@ def _linear_leaf_spec(names: list, leaf_name: str, ndim: int,
             break
     is_expert = "experts" in names or _is_expert_stack(names)
 
-    if is_expert and leaf_name in ("w", "words", "values", "a", "b"):
-        # (E, x, y): shard experts over data x model (full EP+FSDP storage;
-        # _shardable degrades to model-only when E doesn't divide)
-        return P(("data", "model"), None, None)
+    if is_expert and leaf_name in ("w", "words", "values", "codes",
+                                   "scales", "a", "b"):
+        # (E, x, ...): shard experts over data x model (full EP+FSDP
+        # storage; _shardable degrades to model-only when E doesn't
+        # divide).  Spelled out to the leaf's rank so _fit_spec never
+        # shifts the expert axis (tiled bases have 4D leaves).
+        return P(("data", "model"), *([None] * max(ndim - 1, 0)))
+
+    # kernel-plan tiled leaves, model-stacked (4D+: stack, rows, n_tiles,
+    # seg) -- storage rows live at dim -3.  Flat `codes`/`scales`
+    # (QBitmapWeight's NF4 payload) are 1D/2D and never reach here.
+    if (leaf_name in ("words", "values", "codes", "scales")
+            and ndim >= 4):
+        return P(*([None] * (ndim - 3)), "model", None, None)
+    if leaf_name in ("codes", "scales") and ndim == 3:
+        # UNSTACKED tiled weight: shard the column-tile axis, matching
+        # what _fit_spec produces for its 3D words/values below, so every
+        # leaf of one weight partitions along the same axis (column-tile
+        # parallelism; _shardable degrades to replication when n_tiles
+        # doesn't divide the mesh axis).
+        return P(None, "model", None)
 
     if leaf_name in ("words", "values", "base"):
-        # bitmap / dense-base storage rows (dim -2) == the TP-sharded dim
-        # by construction (transposed storage for column-parallel layers)
+        # flat bitmap / dense-base storage rows (dim -2) == the
+        # TP-sharded dim by construction (transposed storage for
+        # column-parallel layers).  A scan-stacked flat leaf (3D) gets a
+        # leading None from _fit_spec and still shards rows; an unstacked
+        # *tiled* leaf is also 3D and then shards n_tiles -- consistent
+        # with the codes/scales rule above (model stacks are always 4D
+        # and take the rows rule).
         return P("model", None)
     if leaf_name == "w":
         if owner in _ROW_PAR:

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _bitmap_spmm_kernel(x_ref, words_ref, values_ref, o_ref, acc_ref, *,
                         cap_t: int, k_steps: int):
@@ -91,7 +93,7 @@ def bitmap_spmm_pallas(x: jax.Array, words: jax.Array, values: jax.Array,
         out_specs=pl.BlockSpec((block_m, tile), lambda mi, ni, ki: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((m, cols), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, tile), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, words, values)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _fused_lora_kernel(x_ref, a_ref, b_ref, o_ref, u_ref, *, k_steps: int):
     ni = pl.program_id(1)
@@ -62,7 +64,7 @@ def fused_lora_pallas(x: jax.Array, a_cat: jax.Array, b_cat: jax.Array, *,
         out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, r), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(x, a_cat, b_cat)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _nm_spmm_kernel(x_ref, bits_ref, vals_ref, o_ref, acc_ref, *,
                     n: int, m: int, k_steps: int):
@@ -81,7 +83,7 @@ def nm_spmm_pallas(x: jax.Array, group_bits: jax.Array, values: jax.Array,
         out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
         out_shape=jax.ShapeDtypeStruct((mm, ncols), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, group_bits, values)

@@ -1,8 +1,13 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Handles leading batch dims, M-padding to block multiples, and the
+Handles leading batch dims, M-padding to block multiples, block-size
+legalization (blocks must divide the padded operand dims), and the
 interpret-mode switch (this container is CPU-only: kernels execute via
 ``interpret=True``; on real TPUs set ``interpret=False``).
+
+All wrappers share one decorator (:func:`_batched_matmul`) for the
+flatten/pad/unflatten boilerplate; kernel imports are hoisted to module
+scope so dispatch never pays a per-trace import.
 """
 from __future__ import annotations
 
@@ -17,6 +22,8 @@ from repro.kernels.bitmap_spmm import bitmap_spmm_pallas
 from repro.kernels.fused_lora import fused_lora_pallas
 from repro.kernels.nf4_spmm import QBLOCK, nf4_spmm_pallas
 from repro.kernels.nm_spmm import nm_spmm_pallas
+from repro.kernels.qsalr_spmm import qsalr_spmm_pallas
+from repro.kernels.salr_spmm import salr_spmm_pallas
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -36,64 +43,107 @@ def _unflatten(y: jax.Array, lead, m: int):
     return y[:m].reshape(*lead, y.shape[-1])
 
 
-@partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def _divisor_block(dim: int, block: int, mult: int = 1) -> int:
+    """Largest legal block size: divides ``dim``, is a multiple of
+    ``mult``, and does not exceed ``block`` (kernels require blocks to
+    divide their operand dims exactly)."""
+    d = max(mult, min(block, dim))
+    d -= d % mult
+    while d > mult and dim % d:
+        d -= mult
+    return d
+
+
+def _batched_matmul(*static_argnames):
+    """Decorator unifying the five wrappers' boilerplate: jit with the
+    given static names, flatten leading batch dims of x, pad M up to the
+    block multiple, run the kernel body on the 2D view, unpad."""
+    def deco(body):
+        def op(x, *args, block_m: int = 128, **kw):
+            x2, lead, m = _flatten_pad(x, block_m)
+            y = body(x2, *args, block_m=block_m, **kw)
+            return _unflatten(y, lead, m)
+        op.__name__ = body.__name__
+        op.__qualname__ = body.__qualname__
+        op.__doc__ = body.__doc__
+        return jax.jit(op, static_argnames=("block_m",) + static_argnames)
+    return deco
+
+
+def _pad_bcat(b_cat: jax.Array, cols: int) -> jax.Array:
+    """Zero-pad B_cat's output dim up to the (tile-padded) encoded width;
+    padded columns produce zeros the caller slices off."""
+    if b_cat.shape[1] < cols:
+        b_cat = jnp.pad(b_cat, ((0, 0), (0, cols - b_cat.shape[1])))
+    return b_cat
+
+
+@_batched_matmul("block_k", "interpret")
 def bitmap_matmul(x: jax.Array, tbw: bm.TiledBitmapWeight, *,
                   block_m: int = 128, block_k: int = 128,
                   interpret: bool = _INTERPRET) -> jax.Array:
     """y = x @ W_hat with the fused bitmap-decode GEMM kernel."""
-    x2, lead, m = _flatten_pad(x, block_m)
-    bk = min(block_k, tbw.rows)
-    y = bitmap_spmm_pallas(x2, tbw.words, tbw.values, cols=tbw.cols,
-                           cap_t=tbw.cap_t, block_m=block_m, block_k=bk,
-                           interpret=interpret)
-    return _unflatten(y, lead, m)
+    bk = _divisor_block(tbw.rows, block_k)
+    return bitmap_spmm_pallas(x, tbw.words, tbw.values, cols=tbw.cols,
+                              cap_t=tbw.cap_t, block_m=block_m, block_k=bk,
+                              interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+@_batched_matmul("block_n", "block_k", "interpret")
 def nm_matmul(x: jax.Array, nmw: bm.NMWeight, *,
               block_m: int = 128, block_n: int = 128, block_k: int = 128,
               interpret: bool = _INTERPRET) -> jax.Array:
     """y = x @ W_hat with the 2:4 decode GEMM kernel."""
-    x2, lead, m = _flatten_pad(x, block_m)
-    bk = min(block_k, nmw.rows)
-    bn = min(block_n, nmw.cols)
-    y = nm_spmm_pallas(x2, nmw.group_bits, nmw.values, n=nmw.n, m=nmw.m,
-                       block_m=block_m, block_n=bn, block_k=bk,
-                       interpret=interpret)
-    return _unflatten(y, lead, m)
+    bk = _divisor_block(nmw.rows, block_k)
+    bn = _divisor_block(nmw.cols, block_n, mult=nmw.m)
+    return nm_spmm_pallas(x, nmw.group_bits, nmw.values, n=nmw.n, m=nmw.m,
+                          block_m=block_m, block_n=bn, block_k=bk,
+                          interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+@_batched_matmul("block_k", "interpret")
 def salr_matmul(x: jax.Array, tbw: bm.TiledBitmapWeight,
                 a_cat: jax.Array, b_cat: jax.Array, *,
                 block_m: int = 128, block_k: int = 128,
                 interpret: bool = _INTERPRET) -> jax.Array:
     """y = x @ W_hat + (x @ A_cat) @ B_cat — the full SALR op, one kernel."""
-    x2, lead, m = _flatten_pad(x, block_m)
-    bk = min(block_k, tbw.rows)
-    y = salr_spmm_pallas_dispatch(x2, tbw, a_cat, b_cat, block_m, bk, interpret)
-    return _unflatten(y, lead, m)
-
-
-def salr_spmm_pallas_dispatch(x2, tbw, a_cat, b_cat, block_m, block_k, interpret):
-    from repro.kernels.salr_spmm import salr_spmm_pallas
-    return salr_spmm_pallas(x2, tbw.words, tbw.values, a_cat, b_cat,
+    bk = _divisor_block(tbw.rows, block_k)
+    return salr_spmm_pallas(x, tbw.words, tbw.values, a_cat,
+                            _pad_bcat(b_cat, tbw.cols),
                             cols=tbw.cols, cap_t=tbw.cap_t,
-                            block_m=block_m, block_k=block_k,
+                            block_m=block_m, block_k=bk,
                             interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+@_batched_matmul("block_k", "interpret")
+def qsalr_matmul(x: jax.Array, qtbw: bm.QTiledBitmapWeight,
+                 a_cat: jax.Array, b_cat: jax.Array, *,
+                 block_m: int = 128, block_k: int = 128,
+                 interpret: bool = _INTERPRET) -> jax.Array:
+    """y = x @ dequant(W_hat) + (x @ A_cat) @ B_cat with NF4 dequant,
+    bitmap decode, GEMM, and the concat-adapter path fused in-kernel."""
+    bk = _divisor_block(qtbw.rows, block_k)
+    if a_cat.shape[1] == 0:
+        # degenerate base-only layer: the kernel's low-rank pass needs a
+        # nonzero rank; a zero adapter contributes exactly nothing.
+        a_cat = jnp.zeros((qtbw.rows, 8), x.dtype)
+        b_cat = jnp.zeros((8, qtbw.cols), x.dtype)
+    return qsalr_spmm_pallas(x, qtbw.words, qtbw.codes, qtbw.scales,
+                             a_cat, _pad_bcat(b_cat, qtbw.cols),
+                             cols=qtbw.cols, cap_t=qtbw.cap_t,
+                             block_m=block_m, block_k=bk,
+                             interpret=interpret)
+
+
+@_batched_matmul("block_n", "block_k", "interpret")
 def lora_matmul(x: jax.Array, a_cat: jax.Array, b_cat: jax.Array, *,
                 block_m: int = 128, block_n: int = 128, block_k: int = 128,
                 interpret: bool = _INTERPRET) -> jax.Array:
     """y = (x @ A_cat) @ B_cat with the fused concat-adapter kernel."""
-    x2, lead, m = _flatten_pad(x, block_m)
-    bk = min(block_k, a_cat.shape[0])
-    bn = min(block_n, b_cat.shape[1])
-    y = fused_lora_pallas(x2, a_cat, b_cat, block_m=block_m, block_n=bn,
-                          block_k=bk, interpret=interpret)
-    return _unflatten(y, lead, m)
+    bk = _divisor_block(a_cat.shape[0], block_k)
+    bn = _divisor_block(b_cat.shape[1], block_n)
+    return fused_lora_pallas(x, a_cat, b_cat, block_m=block_m, block_n=bn,
+                             block_k=bk, interpret=interpret)
 
 
 def nf4_encode_2d(w: jax.Array):
@@ -105,14 +155,13 @@ def nf4_encode_2d(w: jax.Array):
     return q.codes.reshape(kdim, n // 2), q.scales.reshape(kdim, n // QBLOCK)
 
 
-@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+@_batched_matmul("block_n", "block_k", "interpret")
 def nf4_matmul(x: jax.Array, codes: jax.Array, scales: jax.Array, *,
                block_m: int = 128, block_n: int = 128, block_k: int = 128,
                interpret: bool = _INTERPRET) -> jax.Array:
     """y = x @ dequant(codes, scales) with the NF4 GEMM kernel."""
-    x2, lead, m = _flatten_pad(x, block_m)
-    bk = min(block_k, codes.shape[0])
-    bn = min(block_n, codes.shape[1] * 2)
-    y = nf4_spmm_pallas(x2, codes, scales, block_m=block_m, block_n=bn,
-                        block_k=bk, interpret=interpret)
-    return _unflatten(y, lead, m)
+    bk = _divisor_block(codes.shape[0], block_k)
+    # the kernel requires block_n to cover whole scale blocks
+    bn = _divisor_block(codes.shape[1] * 2, block_n, mult=QBLOCK)
+    return nf4_spmm_pallas(x, codes, scales, block_m=block_m, block_n=bn,
+                           block_k=bk, interpret=interpret)

@@ -1,16 +1,24 @@
-"""Pallas TPU kernel: the full SALR deployment op in one kernel.
+"""Pallas TPU kernel: the QSALR deployment op in one kernel.
 
     y = x @ W_hat  +  (x @ A_cat) @ B_cat
 
-fusing (a) the bitmap decode + sparse-base GEMM and (b) the concatenated
-multi-adapter low-rank path (paper §"Concatenating Multi-LoRA adapters").
+where W_hat is stored as an NF4-quantized tiled bitmap
+(`repro.core.bitmap.QTiledBitmapWeight`): per (row, column-tile) cell a
+uint32 bitmask, a packed 4-bit NF4 code segment of static capacity
+``cap_t``, and one f32 absmax scale.  Three stages per grid step:
 
-The low-rank intermediate u = x @ A_cat lives entirely in a VMEM scratch
-accumulator: it is built incrementally over K steps during the first
-N-pass (n == 0) and reused for every later N tile, so the adapter costs
-one extra (Bm, Bk)x(Bk, R) MXU pass per K step -- amortized across all N.
-This is the TPU rendition of "2n small GEMMs -> one big GEMM": no HBM
-round-trip for u, no kernel-launch (here: fusion-boundary) overhead.
+  stage 0 (dequant) -- unpack the two nibbles per byte and reconstruct
+    values with a 16-way select tree against the NF4 level table (pure
+    VPU compares/selects, no gather), times the cell scale;
+  stage 1 (decode)  -- bitmap unpack + exclusive prefix popcount slots,
+    gather the dequantized compact values into a dense (Bk, Bn) tile;
+  stage 2 (compute) -- MXU matmul into the f32 VMEM accumulator, with
+    the concat-adapter low-rank path accumulated exactly as in
+    repro.kernels.salr_spmm (u = x @ A_cat built during the first N pass
+    and reused for every N tile).
+
+HBM traffic per (n, k) step is the quantized compressed bytes of the
+tile — bitmap compression and NF4 stack multiplicatively (paper Table 6).
 """
 from __future__ import annotations
 
@@ -21,12 +29,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.quant import NF4_LEVELS
 from repro.kernels import compat
 
 
-def _salr_spmm_kernel(x_ref, words_ref, values_ref, a_ref, b_ref,
-                      o_ref, acc_ref, u_ref, *,
-                      cap_t: int, k_steps: int):
+def _dequant_nf4(codes, scales, cap_t: int):
+    """(Bk, cap_t//2) uint8 codes + (Bk, 1) scales -> (Bk, cap_t) f32."""
+    bk = codes.shape[0]
+    lo = (codes & jnp.uint8(0x0F)).astype(jnp.int32)
+    hi = (codes >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=-1).reshape(bk, cap_t)
+    dec = jnp.zeros(idx.shape, jnp.float32)
+    for j in range(16):                         # 16-way select tree
+        dec = jnp.where(idx == j, float(NF4_LEVELS[j]), dec)
+    return dec * scales
+
+
+def _qsalr_spmm_kernel(x_ref, words_ref, codes_ref, scales_ref, a_ref,
+                       b_ref, o_ref, acc_ref, u_ref, *,
+                       cap_t: int, k_steps: int):
     ni = pl.program_id(1)
     k = pl.program_id(2)
 
@@ -47,16 +68,22 @@ def _salr_spmm_kernel(x_ref, words_ref, values_ref, a_ref, b_ref,
             x, a_ref[...], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
 
-    # --- sparse base: decode (VPU) + GEMM (MXU)
+    # --- stage 0: NF4 dequant of the compact segment (VPU)
+    codes = codes_ref[...].reshape(bk, cap_t // 2)
+    scales = scales_ref[...].reshape(bk, 1)
+    vals = _dequant_nf4(codes, scales, cap_t)
+
+    # --- stage 1: bitmap decode (VPU)
     wpt = words_ref.shape[-1]
     words = words_ref[...].reshape(bk, wpt)
     shifts = jnp.arange(32, dtype=jnp.uint32)
     bits = ((words[:, :, None] >> shifts) & jnp.uint32(1)).reshape(bk, wpt * 32)
     bi = bits.astype(jnp.int32)
     slot = jnp.minimum(jnp.cumsum(bi, axis=1) - bi, cap_t - 1)
-    vals = values_ref[...].reshape(bk, cap_t)
     dense = jnp.take_along_axis(vals, slot, axis=1)
     w_tile = jnp.where(bits.astype(bool), dense, 0).astype(x.dtype)
+
+    # --- stage 2: compute (MXU)
     acc_ref[...] += jax.lax.dot_general(
         x, w_tile, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
@@ -71,26 +98,28 @@ def _salr_spmm_kernel(x_ref, words_ref, values_ref, a_ref, b_ref,
         o_ref[...] = (acc_ref[...] + delta).astype(o_ref.dtype)
 
 
-def salr_spmm_pallas(x: jax.Array, words: jax.Array, values: jax.Array,
-                     a_cat: jax.Array, b_cat: jax.Array, *,
-                     cols: int, cap_t: int,
-                     block_m: int = 128, block_k: int = 128,
-                     interpret: bool = True) -> jax.Array:
-    """y = x @ W_hat + (x @ a_cat) @ b_cat.
+def qsalr_spmm_pallas(x: jax.Array, words: jax.Array, codes: jax.Array,
+                      scales: jax.Array, a_cat: jax.Array,
+                      b_cat: jax.Array, *, cols: int, cap_t: int,
+                      block_m: int = 128, block_k: int = 128,
+                      interpret: bool = True) -> jax.Array:
+    """y = x @ dequant(W_hat) + (x @ a_cat) @ b_cat.
 
-    x: (M, K); words/values: tiled bitmap of W_hat (K rows);
+    x: (M, K); words/codes/scales: NF4 tiled bitmap of W_hat (K rows);
     a_cat: (K, R); b_cat: (R, N).  N block == encoding tile width."""
     m, kdim = x.shape
     rows, n_tiles, wpt = words.shape
     tile = wpt * 32
     r = a_cat.shape[1]
     assert rows == kdim and n_tiles * tile == cols
+    assert codes.shape == (rows, n_tiles, cap_t // 2)
+    assert scales.shape == (rows, n_tiles, 1)
     assert b_cat.shape == (r, cols)
     assert m % block_m == 0 and kdim % block_k == 0
     k_steps = kdim // block_k
     grid = (m // block_m, n_tiles, k_steps)
 
-    kernel = functools.partial(_salr_spmm_kernel, cap_t=cap_t,
+    kernel = functools.partial(_qsalr_spmm_kernel, cap_t=cap_t,
                                k_steps=k_steps)
     return pl.pallas_call(
         kernel,
@@ -98,7 +127,9 @@ def salr_spmm_pallas(x: jax.Array, words: jax.Array, values: jax.Array,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
             pl.BlockSpec((block_k, 1, wpt), lambda mi, ni, ki: (ki, ni, 0)),
-            pl.BlockSpec((block_k, 1, cap_t), lambda mi, ni, ki: (ki, ni, 0)),
+            pl.BlockSpec((block_k, 1, cap_t // 2),
+                         lambda mi, ni, ki: (ki, ni, 0)),
+            pl.BlockSpec((block_k, 1, 1), lambda mi, ni, ki: (ki, ni, 0)),
             pl.BlockSpec((block_k, r), lambda mi, ni, ki: (ki, 0)),
             pl.BlockSpec((r, tile), lambda mi, ni, ki: (0, ni)),
         ],
@@ -109,4 +140,4 @@ def salr_spmm_pallas(x: jax.Array, words: jax.Array, values: jax.Array,
         compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(x, words, values, a_cat, b_cat)
+    )(x, words, codes, scales, a_cat, b_cat)

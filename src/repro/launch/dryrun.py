@@ -26,7 +26,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+import contextlib
+
 from repro import configs
+from repro.core.salr import force_backend
 from repro.distributed import sharding as shard
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
@@ -49,12 +52,32 @@ TRAIN_MICROBATCHES = {
 }
 
 
+def _analysis_backend(kernel_plan_cell: bool):
+    """Reference-path tracing scope for kernel-plan serving cells (see
+    build_cell docstring); a no-op everywhere else."""
+    return (force_backend("reference") if kernel_plan_cell
+            else contextlib.nullcontext())
+
+
 def build_cell(cfg, shape, mesh, *, seq_shard: bool, microbatches: int,
                loss_chunk: int):
-    """Lower + compile one cell; returns (record, compiled)."""
+    """Lower + compile one cell; returns (record, compiled).
+
+    Serving cells on the kernel execution plan are LOWERED under
+    ``force_backend("reference")``: interpret-mode Pallas unrolls the
+    decode into HLO loops whose byte counts swamp the roofline, so the
+    analyzable program is the dense-reference path, and the kernel
+    plan's compressed-weight traffic is recorded as the adjusted
+    ``roofline_kernel_plan`` on top of it (DESIGN.md §5).  On a real TPU
+    the kernel custom-call's operand bytes could be read off the HLO
+    directly instead.
+    """
     chips = mesh.devices.size
     opt = AdamW(lr=1e-4, clip_norm=1.0)
     ins = S.input_specs(cfg, shape)
+
+    kernel_plan_cell = (shape.kind != "train" and cfg.salr.enabled
+                        and cfg.salr.backend == "kernel")
 
     if seq_shard:
         shard.set_activation_sharding(
@@ -82,7 +105,8 @@ def build_cell(cfg, shape, mesh, *, seq_shard: bool, microbatches: int,
         batch_sh = shard.batch_sharding(mesh, ins["batch"])
         step = make_prefill_step(cfg)
         jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
-        lowered = jitted.lower(params_abs, ins["batch"])
+        with _analysis_backend(kernel_plan_cell):
+            lowered = jitted.lower(params_abs, ins["batch"])
     else:  # decode
         params_abs = S.abstract_params(cfg)
         params_sh = shard.param_shardings(mesh, params_abs, fsdp=True)
@@ -92,8 +116,9 @@ def build_cell(cfg, shape, mesh, *, seq_shard: bool, microbatches: int,
         step = make_decode_step(cfg)
         jitted = jax.jit(step, in_shardings=(params_sh, cache_sh, tok_sh,
                                              repl))
-        lowered = jitted.lower(params_abs, ins["cache"], ins["tokens"],
-                               ins["pos"])
+        with _analysis_backend(kernel_plan_cell):
+            lowered = jitted.lower(params_abs, ins["cache"], ins["tokens"],
+                                   ins["pos"])
 
     t0 = time.time()
     compiled = lowered.compile()
@@ -105,6 +130,23 @@ def build_cell(cfg, shape, mesh, *, seq_shard: bool, microbatches: int,
     raw_cost = compiled.cost_analysis()
     if isinstance(raw_cost, (list, tuple)):
         raw_cost = raw_cost[0]
+
+    # Serving cells on the kernel execution plan stream compressed base
+    # bytes instead of decoded dense weights: the compiled terms above
+    # are the reference path (see docstring), so the dense weight stream
+    # they contain can be swapped for the encoded bytes.
+    kernel_roofline = None
+    if kernel_plan_cell:
+        # params_abs is in scope: kernel_plan_cell implies a serving kind
+        dense_b, enc_b = roof.salr_weight_bytes(params_abs)
+        adj = roof.with_kernel_weight_traffic(terms, dense_b / chips,
+                                              enc_b / chips)
+        kernel_roofline = {
+            **adj.as_dict(),
+            "salr_dense_equiv_bytes_global": dense_b,
+            "salr_encoded_bytes_global": enc_b,
+        }
+
     record = {
         "arch": cfg.name, "shape": shape.name, "kind": shape.kind,
         "mesh": "x".join(map(str, mesh.devices.shape)),
@@ -122,6 +164,8 @@ def build_cell(cfg, shape, mesh, *, seq_shard: bool, microbatches: int,
         },
         "param_count": S.param_count(cfg),
     }
+    if kernel_roofline is not None:
+        record["roofline_kernel_plan"] = kernel_roofline
     return record, compiled
 
 

@@ -24,7 +24,7 @@ def salr_cfg_for(cfg: ArchConfig) -> SALRConfig:
     s = cfg.salr
     return SALRConfig(sparsity=s.sparsity, method=s.method,
                       lora_rank=s.lora_rank, res_rank=s.res_rank,
-                      dtype=cfg.dtype)
+                      dtype=cfg.dtype, backend=s.backend)
 
 
 def init_linear(key: jax.Array, d_in: int, d_out: int, cfg: ArchConfig,
@@ -37,10 +37,15 @@ def init_linear(key: jax.Array, d_in: int, d_out: int, cfg: ArchConfig,
     return {"w": w.astype(dt)}
 
 
-def apply_linear(p, x: jax.Array) -> jax.Array:
+def apply_linear(p, x: jax.Array, backend: str = None) -> jax.Array:
+    """SALR layers dispatch on their execution plan: explicit ``backend``
+    wins, then any active ``salr.force_backend`` scope (the train step
+    forces "reference" for differentiability), then the plan the layer
+    was compressed with (``SALRModelConfig.backend``)."""
     if isinstance(p, SALRLinear):
         from repro.distributed.sharding import constrain_weight_rows
-        return apply_salr(x, p, constrain_fn=constrain_weight_rows)
+        return apply_salr(x, p, constrain_fn=constrain_weight_rows,
+                          backend=backend)
     return x @ p["w"]
 
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.pytree import combine
+from repro.core.salr import force_backend
 from repro.models import model as M
 from repro.optim.adamw import AdamW, residual_lr_scale_tree
 from repro.train.state import TrainState
@@ -29,12 +30,17 @@ def make_loss_fn(cfg: ArchConfig, loss_chunk: int = 512):
     prefix = _prefix_len(cfg)
 
     def loss_fn(trainable, frozen, batch):
-        params = combine(trainable, frozen)
-        x = M.forward_hidden(params, cfg, batch["tokens"],
-                             batch.get("frontend"))
-        # frontend prefix positions carry no labels
-        return M.lm_loss_chunked(params["lm_head"], x, batch["labels"],
-                                 prefix_len=prefix, chunk=loss_chunk)
+        # Gradient computation always traces the reference SALR path:
+        # the dense-decode GEMMs differentiate natively, while the frozen
+        # base would add nothing but kernel-VJP plumbing here.  Serving
+        # steps below keep each layer's own (kernel) execution plan.
+        with force_backend("reference"):
+            params = combine(trainable, frozen)
+            x = M.forward_hidden(params, cfg, batch["tokens"],
+                                 batch.get("frontend"))
+            # frontend prefix positions carry no labels
+            return M.lm_loss_chunked(params["lm_head"], x, batch["labels"],
+                                     prefix_len=prefix, chunk=loss_chunk)
 
     return loss_fn
 

@@ -1,0 +1,64 @@
+"""Import hypothesis with a graceful degradation path.
+
+The property-based tests prefer real hypothesis (shrinking, example
+database, coverage-guided generation).  This container image does not
+ship it, and the tier-1 suite must still collect and exercise the same
+properties, so when the import fails we fall back to a deterministic
+mini-runner: ``@given`` draws a fixed number of pseudo-random samples
+from the declared strategies and runs the test body on each.  Only the
+strategy combinators actually used by this repo's tests are provided
+(integers / floats / sampled_from).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in hypothesis-less CI
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, sample_fn):
+            self._sample_fn = sample_fn
+
+        def sample(self, rng: random.Random):
+            return self._sample_fn(rng)
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            choices = list(elements)
+            return _Strategy(lambda rng: rng.choice(choices))
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        # NB: the wrapper must expose a zero-argument signature, otherwise
+        # pytest treats the strategy parameters as fixtures.
+        def deco(fn):
+            def wrapper():
+                rng = random.Random(0x5A17)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    drawn = {name: s.sample(rng)
+                             for name, s in strategies.items()}
+                    fn(**drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
