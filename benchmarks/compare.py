@@ -1,0 +1,122 @@
+"""Benchmark regression gate: diff a fresh BENCH json against the
+committed baseline and fail on timing regressions.
+
+    PYTHONPATH=src python -m benchmarks.run --smoke --out BENCH_smoke.json
+    PYTHONPATH=src python -m benchmarks.compare \
+        experiments/baselines/BENCH_smoke.json BENCH_smoke.json
+
+Gate rules:
+  * any entry whose ``derived`` is FAILED fails the gate;
+  * every baseline entry must be present in the fresh run (a silently
+    dropped benchmark is a regression too);
+  * a timed entry regresses when fresh us_per_call exceeds baseline by
+    more than ``--threshold`` (default 25%) after machine-speed
+    normalization: both runs carry a ``calib_gemm`` entry (a fixed
+    512x512 GEMM) and, when the calibration ratio falls outside a
+    deadband (clearly different runner speed), timings are scaled by it
+    so a slower CI runner does not read as a code regression;
+  * entries faster than ``--min-us`` in the baseline (or untimed, us=0)
+    are listed in a skip-count line but not gated; ``*_total`` module
+    wall times (import + first-compile noise) are never gated.
+
+``--update`` rewrites the baseline from the fresh run instead of gating
+(commit the result when a deliberate perf change moves the numbers).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+GATE_EXCLUDE_SUFFIX = "_total"
+CALIB = "calib_gemm"
+CALIB_DEADBAND = 1.35    # |speed delta| below this is same-machine jitter
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {e["name"]: e for e in data.get("results", [])}
+
+
+def compare(baseline: dict, fresh: dict, threshold: float,
+            min_us: float) -> list:
+    """Returns a list of failure strings (empty = gate passes)."""
+    failures = []
+    for name, e in fresh.items():
+        if e.get("derived") == "FAILED":
+            failures.append(f"{name}: FAILED in fresh run")
+    for name in baseline:
+        if name not in fresh:
+            failures.append(f"{name}: present in baseline but missing "
+                            "from fresh run")
+
+    scale = 1.0
+    if CALIB in baseline and CALIB in fresh and baseline[CALIB][
+            "us_per_call"] > 0:
+        ratio = fresh[CALIB]["us_per_call"] / baseline[CALIB]["us_per_call"]
+        # Normalize only for clear machine-speed differences (baseline
+        # recorded on a different class of runner).  Inside the deadband
+        # the calibration delta is same-machine jitter, and dividing by
+        # it would *add* variance to every gated ratio.
+        if ratio > CALIB_DEADBAND or ratio < 1.0 / CALIB_DEADBAND:
+            scale = ratio
+        print(f"calibration: fresh/baseline GEMM = {ratio:.2f}x "
+              f"-> normalization scale {scale:.2f}x")
+
+    ungated = []
+    for name, base in sorted(baseline.items()):
+        if name == CALIB or name.endswith(GATE_EXCLUDE_SUFFIX):
+            continue
+        if name not in fresh:
+            continue
+        b_us, f_us = base["us_per_call"], fresh[name]["us_per_call"]
+        if b_us < min_us or f_us <= 0:
+            ungated.append(name)
+            continue
+        ratio = f_us / (b_us * scale)
+        status = "ok"
+        if ratio > 1.0 + threshold:
+            status = "REGRESSION"
+            failures.append(f"{name}: {b_us:.1f}us -> {f_us:.1f}us "
+                            f"({ratio:.2f}x normalized, threshold "
+                            f"{1.0 + threshold:.2f}x)")
+        print(f"{name}: baseline {b_us:.1f}us fresh {f_us:.1f}us "
+              f"normalized {ratio:.2f}x [{status}]")
+    if ungated:
+        print(f"{len(ungated)} entries present but not gated (below "
+              f"--min-us={min_us:g} or untimed): {', '.join(ungated)}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional us_per_call regression")
+    ap.add_argument("--min-us", type=float, default=20.0,
+                    help="baseline timings below this are not gated")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the baseline with the fresh run")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"baseline updated: {args.fresh} -> {args.baseline}")
+        return 0
+
+    failures = compare(load(args.baseline), load(args.fresh),
+                       args.threshold, args.min_us)
+    if failures:
+        print("\nBENCH GATE FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nbench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,10 +24,35 @@ MODULES = [
     ("table6", "benchmarks.bench_table6_qsalr"),
     ("table7", "benchmarks.bench_table7_sparsity"),
     ("fig3", "benchmarks.bench_fig3_spectra"),
+    ("serve", "benchmarks.bench_serve_engine"),
 ]
 
-# fast, fine-tune-free subset exercised by CI (--smoke)
-SMOKE = ("theory", "table4")
+# fast, fine-tune-free subset exercised by CI (--smoke); gated against
+# experiments/baselines/BENCH_smoke.json by benchmarks/compare.py
+SMOKE = ("theory", "table4", "serve")
+
+
+def _calibrate(iters: int = 10, batches: int = 5) -> float:
+    """us per fixed 512x512 f32 GEMM on this machine (median over
+    ``batches`` timing batches — ms-scale work, robust to scheduler
+    jitter).  compare.py uses the baseline-vs-fresh calibration ratio to
+    normalize timings when the runners clearly differ in speed, so the
+    regression gate measures code slowdowns, not runner-speed deltas."""
+    import statistics
+
+    import jax
+    import jax.numpy as jnp
+    a = jnp.ones((512, 512), jnp.float32)
+    f = jax.jit(lambda a: a @ a)
+    f(a).block_until_ready()
+    samples = []
+    for _ in range(batches):
+        t0 = time.time()
+        for _ in range(iters):
+            out = f(a)
+        out.block_until_ready()
+        samples.append((time.time() - t0) / iters * 1e6)
+    return statistics.median(samples)
 
 
 def _parse(line: str) -> dict:
@@ -49,6 +74,10 @@ def main() -> None:
     failures = 0
     results = []
     print("name,us_per_call,derived")
+    calib = _calibrate()
+    print(f"calib_gemm,{calib:.2f},machine-speed calibration (512x512 GEMM)")
+    results.append({"name": "calib_gemm", "us_per_call": calib,
+                    "derived": "machine-speed calibration (512x512 GEMM)"})
     for tag, modname in MODULES:
         if args.only and args.only != tag:
             continue

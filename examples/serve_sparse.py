@@ -1,16 +1,20 @@
-"""Serve a SALR-compressed model over batched requests (prefill +
-greedy decode with KV caches), plus the kernel-level serving op.
+"""Serve a SALR-compressed model: the kernel-level serving op, then the
+continuous-batching engine API over a small request stream.
 
     PYTHONPATH=src python examples/serve_sparse.py
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import configs
 from repro.core import bitmap as bm
 from repro.core.adapters import concat_adapters, init_lora
 from repro.core.residual import truncated_svd_adapter
 from repro.kernels import ops
-from repro.launch import serve
+from repro.launch.engine import (ContinuousBatchingEngine, EngineConfig,
+                                 Request)
+from repro.models import model as M
 
 
 def kernel_demo():
@@ -32,11 +36,38 @@ def kernel_demo():
     print(f"weight bytes: {tbw.nbytes()} vs dense f32 {w.size * 4}")
 
 
+def engine_demo():
+    print("\n=== continuous-batching engine (prefill buckets + slot "
+          "decode batch on the kernel plan) ===")
+    cfg = configs.get("smollm_135m", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    eng = ContinuousBatchingEngine(
+        cfg, params, EngineConfig(n_slots=2, max_ctx=32))
+
+    # heterogeneous prompts, two arrival bursts
+    reqs = []
+    for i, length in enumerate((5, 9, 12, 4)):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (length,), 0, cfg.vocab_size))
+        reqs.append(Request(rid=i, prompt=tuple(int(t) for t in prompt),
+                            max_new_tokens=6,
+                            arrival=0.0 if i < 2 else 0.2))
+    results, metrics = eng.run(reqs)
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"request {rid}: prompt_len={len(reqs[rid].prompt)} "
+              f"ttft={r.ttft:.2f}s tokens={r.tokens}")
+    print(f"served {metrics['requests']} requests at "
+          f"{metrics['tok_s']:.1f} tok/s (incl. compile); "
+          f"buckets={metrics['buckets']}, "
+          f"occupancy={metrics['slot_occupancy_mean']:.2f}/"
+          f"{metrics['n_slots']}")
+
+
 def main():
     kernel_demo()
-    print("\n=== batched serving (prefill + greedy decode) ===")
-    serve.main(["--arch", "smollm_135m", "--smoke", "--requests", "3",
-                "--batch", "2", "--prompt-len", "8", "--gen", "8"])
+    engine_demo()
 
 
 if __name__ == "__main__":

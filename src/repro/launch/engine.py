@@ -1,0 +1,324 @@
+"""Continuous-batching serving engine over the fused SALR kernel path.
+
+Replaces the per-batch serve loop with a slot-based decode batch
+(DESIGN.md §7): a fixed set of ``n_slots`` cache rows each hold one
+in-flight request at its own absolute position, so one jitted
+``decode_step`` advances every active request per tick and finished
+requests free their slot without recompiling anything.  Prompts are
+right-padded to a small set of bucket lengths so prefill JITs a handful
+of shapes; the padded tail is causally invisible during prefill and the
+per-slot decode position masks it afterwards, which makes bucketing
+*exact* (bitwise on CPU) rather than approximate.
+
+The scheduler interleaves admission (prefill) and decode ticks over a
+queue of requests with arrival times: each tick admits up to
+``max_prefills_per_tick`` arrived requests into free slots, then runs
+one decode step for the whole slot batch.  Accounting covers TTFT,
+tok/s, queue depth, and slot occupancy on a virtual clock fed by the
+measured wall time of the jitted calls (idle gaps fast-forward to the
+next arrival instead of sleeping).
+
+All forwards run the layer execution plans under
+``salr.force_backend(backend)`` — with the default ``"kernel"`` every
+compressed linear dispatches to its fused Pallas op exactly as in the
+batch serve loop.
+
+Scope: decoder-only stacks with full-context attention mixers (attn /
+mla).  Recurrent mixers (rglru, mlstm, slstm) fold right-padding into
+their state and rolling-window attention (attn_local) evicts real
+prompt tokens when the padded prompt exceeds the window, so bucketed
+prefill would be inexact for both; encoder-decoder and
+modality-frontend archs keep the batch loop.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.train.step import make_decode_step, make_prefill_step
+
+# attn_local is excluded: the rolling-window prefill cache keeps the
+# LAST ``window`` positions of the padded prompt, so for prompts longer
+# than the window, bucket padding would evict real tokens in favor of
+# pad — unlike full-context caches, that loss is not masked away later.
+SUPPORTED_MIXERS = frozenset({"attn", "mla"})
+
+
+# ----------------------------------------------------------------- config
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine shape/scheduling parameters."""
+    n_slots: int = 4              # decode batch rows (max in-flight requests)
+    max_ctx: int = 64             # per-slot KV capacity (prompt + generated)
+    buckets: tuple = ()           # prefill JIT lengths; () -> powers of two
+    backend: str = "kernel"       # SALR execution plan for all forwards
+    max_prefills_per_tick: int = 1
+    pad_id: int = 0
+
+
+def default_buckets(max_ctx: int, lo: int = 8) -> tuple:
+    """Powers of two in [lo, max_ctx] (plus max_ctx when not a power)."""
+    out, b = [], lo
+    while b < max_ctx:
+        out.append(b)
+        b *= 2
+    out.append(max_ctx)
+    return tuple(dict.fromkeys(out))
+
+
+def pick_bucket(length: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= length."""
+    bs = sorted(buckets)
+    i = bisect.bisect_left(bs, length)
+    if i == len(bs):
+        raise ValueError(f"prompt length {length} exceeds largest prefill "
+                         f"bucket {bs[-1]}")
+    return bs[i]
+
+
+# --------------------------------------------------------------- requests
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    prompt: tuple                 # token ids
+    max_new_tokens: int
+    arrival: float = 0.0          # seconds on the engine clock
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: list
+    arrival: float
+    admitted_at: float
+    first_token_at: float
+    finished_at: float
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_at - self.arrival
+
+    @property
+    def latency(self) -> float:
+        return self.finished_at - self.arrival
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    result: RequestResult
+    slot: int
+
+
+# ----------------------------------------------------------------- engine
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching over one model's decode cache.
+
+    Drive it either with ``run(requests)`` (drains the queue, returns
+    results + aggregate metrics) or ``submit`` + repeated ``step()``
+    (tests / external loops).
+    """
+
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig = None,
+                 time_fn: Callable[[], float] = time.perf_counter):
+        ecfg = ecfg or EngineConfig()
+        kinds = {k for g in cfg.layer_groups for k in g.pattern}
+        bad = kinds - SUPPORTED_MIXERS
+        if bad:
+            raise ValueError(
+                f"continuous batching supports full-context attention "
+                f"mixers only; {cfg.name} uses {sorted(bad)} whose "
+                f"recurrent state or rolling-window cache would absorb "
+                f"prompt-bucket padding (use --engine batch)")
+        if cfg.frontend or cfg.encoder_groups:
+            raise ValueError(f"{cfg.name}: frontend/encoder-decoder archs "
+                             "are served by the batch loop")
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.buckets = tuple(sorted(ecfg.buckets
+                                    or default_buckets(ecfg.max_ctx)))
+        self._time = time_fn
+
+        prefill = make_prefill_step(cfg, backend=ecfg.backend)
+        decode = make_decode_step(cfg, backend=ecfg.backend)
+
+        def prefill_fn(params, tokens, logit_index):
+            logits, cache = prefill(params, {"tokens": tokens,
+                                             "logit_index": logit_index})
+            tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return tok0, cache
+
+        def decode_fn(params, cache, tokens, pos):
+            logits, cache = decode(params, cache, tokens, pos)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, cache
+
+        # the slot cache is donated on the hot paths: self.cache is
+        # rebound to the result each call, so the old buffers would
+        # otherwise be a full KV-cache copy per decode tick
+        self._prefill = jax.jit(prefill_fn)   # compiles once per bucket
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._insert = jax.jit(M.insert_cache_slot, donate_argnums=(0,))
+
+        n = ecfg.n_slots
+        self.cache = M.init_slot_cache(cfg, n, ecfg.max_ctx)
+        self.slots: list = [None] * n         # Optional[_Active] per slot
+        self._last_tok = np.zeros((n,), np.int32)
+        self._pos = np.zeros((n,), np.int32)
+        self.pending: list = []               # sorted by (arrival, rid)
+        self.results: dict = {}
+        self.now = 0.0
+        self._queue_depths: list = []
+        self._occupancy: list = []
+        self.n_prefills = 0
+        self.n_decode_ticks = 0
+
+    def reset(self) -> None:
+        """Clear scheduling state and metrics, keep compiled callables
+        and cache buffers (stale cache rows are masked by design), so a
+        warm engine can serve a fresh trace without recompiling."""
+        n = self.ecfg.n_slots
+        self.slots = [None] * n
+        self._last_tok = np.zeros((n,), np.int32)
+        self._pos = np.zeros((n,), np.int32)
+        self.pending = []
+        self.results = {}
+        self.now = 0.0
+        self._queue_depths = []
+        self._occupancy = []
+        self.n_prefills = 0
+        self.n_decode_ticks = 0
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, req: Request) -> None:
+        length = len(req.prompt)
+        bucket = pick_bucket(length, self.buckets)
+        last_pos = length + req.max_new_tokens - 1
+        if max(bucket, last_pos) > self.ecfg.max_ctx:
+            raise ValueError(
+                f"request {req.rid}: prompt {length} + {req.max_new_tokens} "
+                f"new tokens does not fit max_ctx={self.ecfg.max_ctx}")
+        bisect.insort(self.pending, (req.arrival, req.rid, req))
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def free_slots(self) -> list:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    # ---------------------------------------------------------- scheduler
+
+    def _admit(self, req: Request, slot: int) -> None:
+        length = len(req.prompt)
+        bucket = pick_bucket(length, self.buckets)
+        padded = np.full((1, bucket), self.ecfg.pad_id, np.int32)
+        padded[0, :length] = np.asarray(req.prompt, np.int32)
+        t0 = self._time()
+        tok0, rcache = self._prefill(self.params, jnp.asarray(padded),
+                                     jnp.int32(length - 1))
+        self.cache = self._insert(self.cache, rcache, jnp.int32(slot))
+        tok0 = int(tok0[0])
+        jax.block_until_ready(jax.tree_util.tree_leaves(self.cache)[0])
+        self.now += self._time() - t0
+        self.n_prefills += 1
+
+        res = RequestResult(rid=req.rid, tokens=[tok0], arrival=req.arrival,
+                            admitted_at=self.now, first_token_at=self.now,
+                            finished_at=float("nan"))
+        act = _Active(req=req, result=res, slot=slot)
+        self._last_tok[slot] = tok0
+        self._pos[slot] = length
+        self.slots[slot] = act
+        if len(res.tokens) >= req.max_new_tokens:
+            self._finish(act)
+
+    def _finish(self, act: _Active) -> None:
+        act.result.finished_at = self.now
+        self.results[act.req.rid] = act.result
+        self.slots[act.slot] = None           # slot reusable immediately
+
+    def _decode_tick(self) -> None:
+        tokens = jnp.asarray(self._last_tok[:, None])
+        pos = jnp.asarray(self._pos)
+        t0 = self._time()
+        nxt, self.cache = self._decode(self.params, self.cache, tokens, pos)
+        nxt = np.asarray(nxt)                 # blocks on the step
+        self.now += self._time() - t0
+        self.n_decode_ticks += 1
+        self._occupancy.append(self.n_active)
+        for slot, act in enumerate(self.slots):
+            if act is None:
+                continue
+            act.result.tokens.append(int(nxt[slot]))
+            self._last_tok[slot] = nxt[slot]
+            self._pos[slot] += 1
+            if len(act.result.tokens) >= act.req.max_new_tokens:
+                self._finish(act)
+
+    def step(self) -> bool:
+        """One scheduler tick: admit arrived requests into free slots,
+        then advance every active slot by one token.  Returns False when
+        fully drained (nothing active, nothing pending)."""
+        self._queue_depths.append(len(self.pending))
+        admitted = 0
+        while (self.pending and self.slots.count(None)
+               and self.pending[0][0] <= self.now
+               and admitted < self.ecfg.max_prefills_per_tick):
+            _, _, req = self.pending.pop(0)
+            self._admit(req, self.free_slots()[0])
+            admitted += 1
+        if self.n_active:
+            self._decode_tick()
+            return True
+        if self.pending:                      # idle: jump to next arrival
+            self.now = max(self.now, self.pending[0][0])
+            return True
+        return False
+
+    def run(self, requests: Optional[Sequence[Request]] = None):
+        """Drain the queue; returns ({rid: RequestResult}, metrics)."""
+        for r in requests or ():
+            self.submit(r)
+        while self.step():
+            pass
+        return self.results, self.metrics()
+
+    # ------------------------------------------------------------ metrics
+
+    def metrics(self) -> dict:
+        done = list(self.results.values())
+        total_tok = sum(len(r.tokens) for r in done)
+        ttfts = sorted(r.ttft for r in done) or [float("nan")]
+        return {
+            "requests": len(done),
+            "total_tokens": total_tok,
+            "wall_s": self.now,
+            "tok_s": total_tok / self.now if self.now > 0 else float("nan"),
+            "ttft_mean_s": float(np.mean(ttfts)),
+            "ttft_p50_s": ttfts[len(ttfts) // 2],
+            "ttft_max_s": ttfts[-1],
+            "queue_depth_mean": (float(np.mean(self._queue_depths))
+                                 if self._queue_depths else 0.0),
+            "queue_depth_max": max(self._queue_depths, default=0),
+            "slot_occupancy_mean": (float(np.mean(self._occupancy))
+                                    if self._occupancy else 0.0),
+            "n_prefills": self.n_prefills,
+            "n_decode_ticks": self.n_decode_ticks,
+            "n_slots": self.ecfg.n_slots,
+            "buckets": self.buckets,
+            "backend": self.ecfg.backend,
+        }

@@ -65,8 +65,7 @@ def main(argv=None) -> None:
     ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                                 global_batch=args.batch, seed=args.seed))
 
-    # Theorem-4 residual step size from a representative batch
-    probe = ds.batch_at(start)
+    # Theorem-4 residual step size from a representative probe activation
     x_probe = jax.random.normal(jax.random.PRNGKey(1),
                                 (256, cfg.d_model)) * 0.05
     eta = float(eta_svd_star(x_probe, safety=0.5))

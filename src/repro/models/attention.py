@@ -38,10 +38,13 @@ class KVCache:
          meta_fields=())
 @dataclasses.dataclass
 class RingKVCache:
-    """Rolling window cache; ring_pos[i] = absolute position in slot i."""
+    """Rolling window cache; ring_pos[b, i] = absolute position in slot i.
+
+    ring_pos is per batch row so continuous-batching slots can sit at
+    different absolute positions (-1 when empty)."""
     k: jax.Array          # (B, W, KH, dk)
     v: jax.Array          # (B, W, KH, dv)
-    ring_pos: jax.Array   # (W,) int32, -1 when empty
+    ring_pos: jax.Array   # (B, W) int32, -1 when empty
 
 
 @partial(jax.tree_util.register_dataclass, data_fields=("ckv", "krope"),
@@ -77,6 +80,15 @@ def _q8(x):
 
 def _dq8(q, scale, dtype):
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def pos_vector(pos, batch: int) -> jax.Array:
+    """Decode position(s) as a (B,) int32 vector.
+
+    ``pos`` may be a scalar (the classic uniform-batch decode step) or a
+    (B,) vector (continuous batching: every slot sits at its own
+    absolute position)."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
 
 
 # ------------------------------------------------- blockwise attention
@@ -185,14 +197,17 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      valid: jax.Array) -> jax.Array:
     """One-token attention over a cache.
 
-    q: (B, 1, H, dk); caches: (B, W, KH, d*); valid: (W,) bool."""
+    q: (B, 1, H, dk); caches: (B, W, KH, d*); valid: (W,) shared or
+    (B, W) per-row (continuous batching) bool."""
     b, _, h, dk = q.shape
     _, w, kh, _ = k_cache.shape
     g = h // kh
+    if valid.ndim == 1:
+        valid = valid[None]
     qg = q.reshape(b, kh, g, dk).astype(jnp.float32)
     s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
     s = s / jnp.sqrt(jnp.float32(dk))
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, 1, h, -1).astype(q.dtype)
@@ -252,7 +267,7 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
         y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * hd))
         return x + y, new_cache
 
-    # decode
+    # decode (``pos`` scalar, or (B,) per-slot for continuous batching)
     assert cache is not None and pos is not None
     if is_cross:  # cross K/V precomputed at prefill
         w = cache.k.shape[1]
@@ -261,36 +276,39 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
         y = decode_attention(q, cache.k, cache.v, valid)
         new_cache = cache
     else:
-        posb = jnp.broadcast_to(pos, (x.shape[0], 1)).astype(jnp.int32)
+        b = x.shape[0]
+        pv = pos_vector(pos, b)
+        rows = jnp.arange(b)
+        posb = pv[:, None]
         q = apply_rope(q, posb, cfg.rope_theta)
         k = _split_heads(apply_linear(p["wk"], xn), kh, hd)
         v = _split_heads(apply_linear(p["wv"], xn), kh, hd)
         k = apply_rope(k, posb, cfg.rope_theta)
         if local:
             w = cache.k.shape[1]
-            slot = pos % w
-            kc = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
-            vc = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
-            ring = jax.lax.dynamic_update_slice(
-                cache.ring_pos, pos[None].astype(jnp.int32), (slot,))
-            valid = (ring >= 0) & (ring <= pos) & (ring > pos - window)
+            slots = pv % w
+            kc = cache.k.at[rows, slots].set(k[:, 0])
+            vc = cache.v.at[rows, slots].set(v[:, 0])
+            ring = cache.ring_pos.at[rows, slots].set(pv)
+            valid = ((ring >= 0) & (ring <= posb)
+                     & (ring > posb - window))          # (B, W)
             new_cache = RingKVCache(k=kc, v=vc, ring_pos=ring)
             k_read, v_read = new_cache.k, new_cache.v
         elif isinstance(cache, QuantKVCache):
             kq, ks = _q8(k)
             vq, vs = _q8(v)
-            kc = jax.lax.dynamic_update_slice(cache.k, kq, (0, pos, 0, 0))
-            vc = jax.lax.dynamic_update_slice(cache.v, vq, (0, pos, 0, 0))
-            ksc = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, pos, 0))
-            vsc = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, pos, 0))
-            valid = jnp.arange(cache.k.shape[1]) <= pos
+            kc = cache.k.at[rows, pv].set(kq[:, 0])
+            vc = cache.v.at[rows, pv].set(vq[:, 0])
+            ksc = cache.k_scale.at[rows, pv].set(ks[:, 0])
+            vsc = cache.v_scale.at[rows, pv].set(vs[:, 0])
+            valid = jnp.arange(cache.k.shape[1])[None, :] <= posb
             new_cache = QuantKVCache(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
             k_read = _dq8(kc, ksc, x.dtype)
             v_read = _dq8(vc, vsc, x.dtype)
         else:
-            kc = jax.lax.dynamic_update_slice(cache.k, k, (0, pos, 0, 0))
-            vc = jax.lax.dynamic_update_slice(cache.v, v, (0, pos, 0, 0))
-            valid = jnp.arange(cache.k.shape[1]) <= pos
+            kc = cache.k.at[rows, pv].set(k[:, 0])
+            vc = cache.v.at[rows, pv].set(v[:, 0])
+            valid = jnp.arange(cache.k.shape[1])[None, :] <= posb
             new_cache = KVCache(k=kc, v=vc)
             k_read, v_read = new_cache.k, new_cache.v
         y = decode_attention(q, k_read, v_read, valid)
@@ -307,21 +325,22 @@ def _build_cache(k, v, cfg: ArchConfig, local: bool, is_cross: bool):
         return QuantKVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
     if local:
         w = cfg.window
-        s = k.shape[1]
+        b, s = k.shape[0], k.shape[1]
         if s >= w:
             # keep the last `window` positions; ring slot = pos % w
             kw, vw = k[:, s - w:], v[:, s - w:]
             pos_tail = jnp.arange(s - w, s, dtype=jnp.int32)
             slots = pos_tail % w
             order = jnp.argsort(slots)
-            return RingKVCache(k=kw[:, order], v=vw[:, order],
-                               ring_pos=pos_tail[order])
+            ring = jnp.broadcast_to(pos_tail[order][None], (b, w))
+            return RingKVCache(k=kw[:, order], v=vw[:, order], ring_pos=ring)
         pad = w - s
         kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         ring = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
                                 jnp.full((pad,), -1, jnp.int32)])
-        return RingKVCache(k=kc, v=vc, ring_pos=ring)
+        return RingKVCache(k=kc, v=vc,
+                           ring_pos=jnp.broadcast_to(ring[None], (b, w)))
     return KVCache(k=k, v=v)
 
 
@@ -333,7 +352,8 @@ def init_gqa_cache(cfg: ArchConfig, batch: int, ctx: int, local: bool,
     if local:
         k = jnp.zeros((batch, w, kh, hd), dtype)
         v = jnp.zeros((batch, w, kh, hd), dtype)
-        return RingKVCache(k=k, v=v, ring_pos=jnp.full((w,), -1, jnp.int32))
+        return RingKVCache(k=k, v=v,
+                           ring_pos=jnp.full((batch, w), -1, jnp.int32))
     if cfg.kv_cache == "int8":
         return QuantKVCache(
             k=jnp.zeros((batch, w, kh, hd), jnp.int8),
@@ -409,9 +429,11 @@ def apply_mla(p, x: jax.Array, cfg: ArchConfig, *, positions, mode: str,
         y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * m.v_head_dim))
         return x + y, new_cache
 
-    # decode with absorbed projections
+    # decode with absorbed projections (``pos`` scalar or (B,) per-slot)
     b = x.shape[0]
-    posb = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    pv = pos_vector(pos, b)
+    rows = jnp.arange(b)
+    posb = pv[:, None]
     cq = apply_rmsnorm(p["qnorm"], apply_linear(p["dq"], xn), cfg.norm_eps)
     q = apply_linear(p["uq"], cq).reshape(b, 1, h, -1)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
@@ -423,8 +445,8 @@ def apply_mla(p, x: jax.Array, cfg: ArchConfig, *, positions, mode: str,
     krope_new = apply_rope(krope_new[:, :, None, :], posb,
                            cfg.rope_theta)[:, :, 0, :]
 
-    ckv = jax.lax.dynamic_update_slice(cache.ckv, ckv_new, (0, pos, 0))
-    krope = jax.lax.dynamic_update_slice(cache.krope, krope_new, (0, pos, 0))
+    ckv = cache.ckv.at[rows, pv].set(ckv_new[:, 0])
+    krope = cache.krope.at[rows, pv].set(krope_new[:, 0])
     new_cache = LatentCache(ckv=ckv, krope=krope)
 
     # absorb: q_lat[h] = q_nope[h] @ W_uk[h]^T  -> score against latent
@@ -436,8 +458,8 @@ def apply_mla(p, x: jax.Array, cfg: ArchConfig, *, positions, mode: str,
     s = s + jnp.einsum("bhd,bkd->bhk", q_rope[:, 0].astype(jnp.float32),
                        krope.astype(jnp.float32))
     s = s / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
-    valid = jnp.arange(ckv.shape[1]) <= pos
-    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    valid = jnp.arange(ckv.shape[1])[None, :] <= posb    # (B, W)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhk,bkr->bhr", pr, ckv.astype(jnp.float32))
     wuv = _dense_weight(p["uv"]).reshape(m.kv_lora_rank, h, m.v_head_dim)

@@ -17,7 +17,7 @@ from repro.models import recurrent as rec
 from repro.models import xlstm as xl
 from repro.models.layers import (apply_embedding, apply_lm_head, apply_mlp,
                                  apply_rmsnorm, init_embedding, init_lm_head,
-                                 init_mlp, init_rmsnorm, padded_vocab)
+                                 init_mlp, init_rmsnorm)
 
 MIXER_INIT = {
     "attn": lambda k, cfg: attn.init_gqa(k, cfg),
@@ -236,8 +236,17 @@ def init_cache(cfg: ArchConfig, batch: int, ctx: int):
 
 
 def prefill(params, cfg: ArchConfig, tokens: jax.Array,
-            frontend_embeds: Optional[jax.Array] = None):
-    """Process the prompt; returns (last-position logits, cache)."""
+            frontend_embeds: Optional[jax.Array] = None, *,
+            logit_index=None):
+    """Process the prompt; returns (one-position logits, cache).
+
+    By default the logits are taken at the last prompt position.
+    ``logit_index`` (scalar or (B,) int32, traced ok) selects another
+    position instead — bucketed serving right-pads prompts to a small
+    set of JIT shapes and reads the logits at the true last token, while
+    the padded tail positions stay causally invisible to every real
+    token and are masked out of later decode steps by the per-slot
+    position (see launch/engine.py)."""
     memory = None
     if cfg.family == "encdec":
         memory = _encode(params, cfg, frontend_embeds)
@@ -250,7 +259,12 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array,
                             positions=positions, memory=memory)
         caches.append(nc)
     x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = apply_lm_head(params["lm_head"], x[:, -1:])
+    if logit_index is None:
+        x_last = x[:, -1:]
+    else:
+        idx = jnp.broadcast_to(jnp.asarray(logit_index, jnp.int32), (b,))
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    logits = apply_lm_head(params["lm_head"], x_last)
     cache = {"groups": caches}
     if memory is not None:
         cache["memory"] = memory
@@ -259,12 +273,15 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array,
 
 def decode_step(params, cfg: ArchConfig, cache, tokens: jax.Array,
                 pos: jax.Array):
-    """One token step.  tokens: (B, 1); pos: scalar int32 (absolute
-    position of this token).  Returns (logits, new_cache)."""
+    """One token step.  tokens: (B, 1); pos: absolute position of this
+    token — a scalar int32 (uniform batch) or a (B,) int32 vector
+    (continuous batching: each slot decodes at its own position).
+    Returns (logits, new_cache)."""
     x = apply_embedding(params["embed"], tokens)
     memory = cache.get("memory")
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    pos = attn.pos_vector(pos, b)
+    positions = pos[:, None]
     new_groups = []
     for gi, g in enumerate(cfg.layer_groups):
         x, nc = apply_group(params["groups"][gi], x, cfg, g, mode="decode",
@@ -277,6 +294,66 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: jax.Array,
     if memory is not None:
         new_cache["memory"] = memory
     return logits, new_cache
+
+
+# ----------------------------------------------------- slot-indexed cache
+
+def init_slot_cache(cfg: ArchConfig, n_slots: int, ctx: int):
+    """Decode cache for a continuous-batching slot batch: row b of every
+    leaf belongs to slot b, which serves one request at a time and is
+    reused (insert overwrites) when that request finishes."""
+    return init_cache(cfg, n_slots, ctx)
+
+
+def insert_cache_slot(cache, request_cache, slot):
+    """Write a batch=1 prefill cache into row ``slot`` of a slot cache.
+
+    Group leaves are stacked (repeats, batch, [time,] ...); the request
+    leaves (repeats, 1, [t<=ctx,] ...) land at batch index ``slot``,
+    time offset 0.  Positions beyond the request's written extent keep
+    whatever the previous occupant left there — decode masks by the
+    per-slot position, so stale or pad entries are never attended
+    (eviction is therefore free: freeing a slot is pure bookkeeping).
+    ``slot`` may be traced (the insert jits once per prefill bucket).
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def place(small, big):
+        start = (jnp.int32(0), slot) + (jnp.int32(0),) * (big.ndim - 2)
+        return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                            start)
+
+    groups = jax.tree_util.tree_map(place, request_cache["groups"],
+                                    cache["groups"])
+    new = dict(cache, groups=groups)
+    if "memory" in cache:
+        mem = request_cache["memory"].astype(cache["memory"].dtype)
+        start = (slot,) + (jnp.int32(0),) * (cache["memory"].ndim - 1)
+        new["memory"] = jax.lax.dynamic_update_slice(cache["memory"], mem,
+                                                     start)
+    return new
+
+
+def clear_cache_slot(cache, slot):
+    """Zero row ``slot`` of every cache leaf (ring positions to -1).
+    Functionally unnecessary — insert + position masking already hide
+    stale state — but useful for tests and debugging."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def clear(leaf):
+        fill = -1 if leaf.dtype == jnp.int32 else 0
+        row = jnp.full(leaf.shape[:1] + (1,) + leaf.shape[2:], fill,
+                       leaf.dtype)
+        start = (jnp.int32(0), slot) + (jnp.int32(0),) * (leaf.ndim - 2)
+        return jax.lax.dynamic_update_slice(leaf, row, start)
+
+    new = dict(cache, groups=jax.tree_util.tree_map(clear, cache["groups"]))
+    if "memory" in cache:
+        mem = cache["memory"]
+        row = jnp.zeros((1,) + mem.shape[1:], mem.dtype)
+        start = (slot,) + (jnp.int32(0),) * (mem.ndim - 1)
+        new["memory"] = jax.lax.dynamic_update_slice(mem, row, start)
+    return new
 
 
 # ------------------------------------------------------------------ loss

@@ -190,7 +190,7 @@ def _fusion_boundary_bytes(op: Op, symbols: dict, callee) -> float:
             if s is not None:
                 total += shape_elems_bytes(s)[1]
         return total
-    csyms, cops = callee
+    _, cops = callee
     # parameter ops carry their operand index: "%p = T[...] parameter(N)"
     params: dict[int, str] = {}
     for o in cops:

@@ -8,7 +8,7 @@ repro.distributed.collectives).
 """
 from __future__ import annotations
 
-from functools import partial
+import contextlib
 from typing import Optional
 
 import jax
@@ -86,16 +86,29 @@ def make_train_step(cfg: ArchConfig, opt: AdamW, *, microbatches: int = 1,
 
 # ------------------------------------------------------------- serving
 
-def make_prefill_step(cfg: ArchConfig):
+def make_prefill_step(cfg: ArchConfig, backend: Optional[str] = None):
+    """``backend`` pins the SALR execution plan at trace time (the
+    continuous-batching engine passes "kernel").  The optional
+    ``logit_index`` batch entry reads the logits at the true last prompt
+    token of a right-padded (bucketed) prompt."""
     def prefill_step(params, batch):
-        return M.prefill(params, cfg, batch["tokens"],
-                         batch.get("frontend"))
+        ctx = (contextlib.nullcontext() if backend is None
+               else force_backend(backend))
+        with ctx:
+            return M.prefill(params, cfg, batch["tokens"],
+                             batch.get("frontend"),
+                             logit_index=batch.get("logit_index"))
     return prefill_step
 
 
-def make_decode_step(cfg: ArchConfig):
+def make_decode_step(cfg: ArchConfig, backend: Optional[str] = None):
+    """``pos`` may be a scalar (uniform batch) or a (B,) vector of
+    per-slot absolute positions (continuous batching)."""
     def decode_step(params, cache, tokens, pos):
-        return M.decode_step(params, cfg, cache, tokens, pos)
+        ctx = (contextlib.nullcontext() if backend is None
+               else force_backend(backend))
+        with ctx:
+            return M.decode_step(params, cfg, cache, tokens, pos)
     return decode_step
 
 

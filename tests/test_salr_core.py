@@ -11,8 +11,7 @@ from repro.core import prune, residual
 from repro.core.pytree import combine, split_trainable
 from repro.core.quant import dequantize_nf4, quantize_nf4
 from repro.core.salr import (SALRConfig, apply_salr, compress_linear,
-                             delta_w, effective_weight, layer_nbytes,
-                             materialize_base)
+                             effective_weight, layer_nbytes)
 
 
 # ------------------------------------------------------------------ prune

@@ -11,7 +11,7 @@ from repro import configs
 from repro.checkpoint import ckpt
 from repro.data.pipeline import DataConfig, SyntheticLM, pack_documents
 from repro.distributed import collectives as coll
-from repro.optim.adamw import AdamW, global_norm, warmup_cosine
+from repro.optim.adamw import AdamW, warmup_cosine
 from repro.train.state import make_train_state
 from repro.train.step import greedy_generate, make_train_step
 
