@@ -9,9 +9,16 @@ as it arrives.  Besides throughput we check exact token parity between
 the continuous engine and ``greedy_generate`` per request — a failed
 parity check fails the benchmark.
 
+The smoke gate runs three archs so every serving family is
+regression-gated, not just full-context attention: ``smollm_135m``
+(attention, unsuffixed metric names for baseline continuity),
+``recurrentgemma_2b`` (RG-LRU + rolling-window attention via
+masked-state prefill), and ``granite_moe_1b_a400m`` (length-invariant
+per-token MoE routing).
+
 Run standalone for a bigger trace and a JSON artifact:
     PYTHONPATH=src python -m benchmarks.bench_serve_engine \
-        --requests 16 --out BENCH_serve.json
+        --requests 16 --arch smollm_135m --out BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ from repro.models import model as M
 from repro.train.step import greedy_generate
 
 ARCH = "smollm_135m"
+SMOKE_ARCHS = (ARCH, "recurrentgemma_2b", "granite_moe_1b_a400m")
 BACKEND = "kernel"
 GEN = 6
 MAX_CTX = 32
@@ -40,16 +48,23 @@ PROMPT_LENS = (6, 10)          # few distinct lengths keeps the batch
 #                                baseline compile-bound fairly, not absurdly
 
 
-def build_trace(n_requests: int, seed: int = 0):
-    """Bursty arrivals: half at t=0, half at t=0.3s, mixed lengths."""
+def build_trace(cfg, n_requests: int, seed: int = 0):
+    """Bursty arrivals: half at t=0, half at t=0.3s, mixed lengths.
+    Frontend archs get per-request precomputed embeddings."""
     key = jax.random.PRNGKey(seed)
     reqs = []
     for i in range(n_requests):
+        kr = jax.random.fold_in(key, i)
         length = PROMPT_LENS[i % len(PROMPT_LENS)]
-        prompt = np.asarray(jax.random.randint(
-            jax.random.fold_in(key, i), (length,), 0, 256))
+        prompt = np.asarray(jax.random.randint(kr, (length,), 0,
+                                               cfg.vocab_size))
+        fe = None
+        if cfg.frontend:
+            fe = np.asarray(jax.random.normal(
+                jax.random.fold_in(kr, 1),
+                (cfg.frontend_len, cfg.d_model)) * 0.02)
         reqs.append(Request(rid=i, prompt=tuple(int(t) for t in prompt),
-                            max_new_tokens=GEN,
+                            max_new_tokens=GEN, frontend=fe,
                             arrival=0.0 if i < n_requests // 2 else 0.3))
     return reqs
 
@@ -62,9 +77,10 @@ def run_batch_loop(cfg, params, reqs) -> dict:
     for r in reqs:
         by_len.setdefault(len(r.prompt), []).append(r)
 
-    def gen_fn(p, prompt):
+    def gen_fn(p, prompt, fe):
         with salr.force_backend(BACKEND):
-            return greedy_generate(p, cfg, prompt, n_steps=GEN, ctx=MAX_CTX)
+            return greedy_generate(p, cfg, prompt, n_steps=GEN, ctx=MAX_CTX,
+                                   frontend=fe)
 
     gen = jax.jit(gen_fn)
 
@@ -76,7 +92,9 @@ def run_batch_loop(cfg, params, reqs) -> dict:
             for i in range(0, len(group), N_SLOTS):
                 chunk = group[i:i + N_SLOTS]
                 prompts = jnp.asarray([r.prompt for r in chunk])
-                out = np.asarray(gen(params, prompts))
+                fe = (jnp.asarray([r.frontend for r in chunk])
+                      if cfg.frontend else None)
+                out = np.asarray(gen(params, prompts, fe))
                 total += out.size
                 for r, row in zip(chunk, out):
                     tokens[r.rid] = list(row)
@@ -106,17 +124,19 @@ def check_parity(cfg, params, reqs, got: dict) -> int:
     bad = 0
     with salr.force_backend(BACKEND):
         for r in reqs:
+            fe = None if r.frontend is None else jnp.asarray(r.frontend)[None]
             ref = greedy_generate(params, cfg, jnp.asarray(r.prompt)[None],
-                                  n_steps=r.max_new_tokens, ctx=MAX_CTX)
+                                  n_steps=r.max_new_tokens, ctx=MAX_CTX,
+                                  frontend=fe)
             if list(np.asarray(ref[0])) != got[r.rid]:
                 bad += 1
     return bad
 
 
-def bench(n_requests: int, seed: int = 0) -> tuple:
-    cfg = configs.get(ARCH, smoke=True)
+def bench(n_requests: int, seed: int = 0, arch: str = ARCH) -> tuple:
+    cfg = configs.get(arch, smoke=True)
     params = M.init_params(jax.random.PRNGKey(seed), cfg)
-    reqs = build_trace(n_requests, seed)
+    reqs = build_trace(cfg, n_requests, seed)
 
     cont = run_continuous(cfg, params, reqs)
     batch = run_batch_loop(cfg, params, reqs)
@@ -124,10 +144,11 @@ def bench(n_requests: int, seed: int = 0) -> tuple:
     if mismatches:
         raise AssertionError(
             f"continuous engine diverged from greedy_generate on "
-            f"{mismatches}/{n_requests} requests")
+            f"{mismatches}/{n_requests} requests ({arch})")
 
+    sfx = "" if arch == ARCH else f"_{arch}"
     lines = [
-        csv_line("serve_continuous_us_per_tok",
+        csv_line(f"serve_continuous_us_per_tok{sfx}",
                  cont["wall_s"] / cont["total_tokens"] * 1e6,
                  f"tok_s={cont['tok_s']:.2f};"
                  f"ttft_mean_s={cont['ttft_mean_s']:.3f};"
@@ -135,23 +156,26 @@ def bench(n_requests: int, seed: int = 0) -> tuple:
                  f"slot_occupancy={cont['slot_occupancy_mean']:.2f}/"
                  f"{cont['n_slots']};cold_s={cont['cold_wall_s']:.2f};"
                  f"parity=exact"),
-        csv_line("serve_batch_us_per_tok",
+        csv_line(f"serve_batch_us_per_tok{sfx}",
                  batch["wall_s"] / batch["total_tokens"] * 1e6,
                  f"tok_s={batch['tok_s']:.2f};"
                  f"cold_s={batch['cold_wall_s']:.2f};grouped_by_prompt_len"),
-        csv_line("serve_continuous_vs_batch", 0.0,
+        csv_line(f"serve_continuous_vs_batch{sfx}", 0.0,
                  f"speedup={cont['tok_s'] / batch['tok_s']:.2f}x tok/s "
                  f"(warm pass; interpret-mode kernels on CPU)"),
     ]
     detail = {"continuous": {k: v for k, v in cont.items() if k != "tokens"},
               "batch": {k: v for k, v in batch.items() if k != "tokens"},
-              "n_requests": n_requests, "arch": ARCH, "backend": BACKEND}
+              "n_requests": n_requests, "arch": arch, "backend": BACKEND}
     return lines, detail
 
 
 def main() -> list:
-    """run.py entry point (smoke scale)."""
-    lines, _ = bench(n_requests=6)
+    """run.py entry point (smoke scale): attention, recurrent, and MoE
+    serving paths, each parity-checked and regression-gated."""
+    lines = []
+    for arch in SMOKE_ARCHS:
+        lines.extend(bench(n_requests=6, arch=arch)[0])
     return lines
 
 
@@ -159,9 +183,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arch", default=ARCH, choices=list(configs.names()))
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
-    lines, detail = bench(args.requests, args.seed)
+    lines, detail = bench(args.requests, args.seed, args.arch)
     for line in lines:
         print(line)
     with open(args.out, "w") as f:

@@ -73,7 +73,11 @@ class ArchConfig:
     experts_per_token: int = 0
     n_shared_experts: int = 0
     moe_d_ff: int = 0
-    moe_capacity_factor: float = 1.25
+    # per-token drop threshold: a top-k assignment is dropped iff its
+    # router softmax probability is below this (0.0 = pure top-k).  A
+    # pure function of the token's own logits, so routing is invariant
+    # to sequence length and co-batched tokens (DESIGN.md §7).
+    moe_drop_threshold: float = 0.0
     first_dense_layers: int = 0      # leading dense-FFN layers (deepseek)
     # attention extras
     mla: Optional[MLAConfig] = None
@@ -107,6 +111,14 @@ class ArchConfig:
     @property
     def rnn_dim(self) -> int:
         return self.rnn_width if self.rnn_width else self.d_model
+
+    @property
+    def decode_prefix_len(self) -> int:
+        """Positions the modality frontend prepends to the decoder token
+        stream (0 for enc-dec, whose frontend feeds the encoder).  Logit
+        indices and decode positions are offset by this."""
+        return (self.frontend_len
+                if self.frontend and self.family != "encdec" else 0)
 
     def with_(self, **kw) -> "ArchConfig":
         return dataclasses.replace(self, **kw)

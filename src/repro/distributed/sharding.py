@@ -288,10 +288,11 @@ def constrain_activation(x):
 
 def set_expert_sharding(mesh: Optional[Mesh]) -> None:
     """Enable expert-parallel compute constraints in apply_moe: the
-    dispatched token buffer (E, T, d) and expert outputs stay sharded on
-    the expert axis exactly like the stored expert weights, so GSPMD
-    routes tokens (all-to-all, O(tokens*d)) instead of all-gathering
-    decoded dense expert weights (observed 188TB/dev on deepseek-v3)."""
+    per-expert activation stacks (E, N, f) stay sharded on the expert
+    axis exactly like the stored expert weights, so GSPMD keeps expert
+    FFNs local to their owners (the combine reduction over E is the EP
+    all-reduce) instead of all-gathering decoded dense expert weights
+    (observed 188TB/dev on deepseek-v3)."""
     global _EXPERT_MESH
     _EXPERT_MESH = mesh
 
@@ -308,27 +309,6 @@ def constrain_expert_stack(h):
                       _EXPERT_MESH)
     return jax.lax.with_sharding_constraint(
         h, NamedSharding(_EXPERT_MESH, spec))
-
-
-def constrain_expert_tokens(buf):
-    """buf: (G, E, cap, d) -> expert axis sharded over (data, model):
-    the g-sharded -> e-sharded reshard is the MoE token all-to-all."""
-    if _EXPERT_MESH is None:
-        return buf
-    spec = _shardable(buf.shape, P(None, ("data", "model"), None, None),
-                      _EXPERT_MESH)
-    return jax.lax.with_sharding_constraint(
-        buf, NamedSharding(_EXPERT_MESH, spec))
-
-
-def constrain_group_tokens(buf):
-    """buf: (G, E, cap, d) -> group axis sharded over the data axes."""
-    if _EXPERT_MESH is None:
-        return buf
-    axes = tuple(a for a in ("pod", "data") if a in _EXPERT_MESH.axis_names)
-    spec = _shardable(buf.shape, P(axes, None, None, None), _EXPERT_MESH)
-    return jax.lax.with_sharding_constraint(
-        buf, NamedSharding(_EXPERT_MESH, spec))
 
 
 _HEADS_MESH: Optional[Mesh] = None

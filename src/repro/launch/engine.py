@@ -6,29 +6,41 @@ in-flight request at its own absolute position, so one jitted
 ``decode_step`` advances every active request per tick and finished
 requests free their slot without recompiling anything.  Prompts are
 right-padded to a small set of bucket lengths so prefill JITs a handful
-of shapes; the padded tail is causally invisible during prefill and the
-per-slot decode position masks it afterwards, which makes bucketing
-*exact* (bitwise on CPU) rather than approximate.
+of shapes; padding is *exact* (bitwise on CPU) for every mixer:
+
+  * full-context attention / MLA: the padded tail is causally invisible
+    during prefill and masked (then overwritten) by the per-slot decode
+    position;
+  * recurrent mixers (rglru, mlstm, slstm): masked-state prefill --
+    ``prefill(logit_index=...)`` turns pad positions into identity state
+    transitions, so the cached state equals an exact-length prefill's;
+  * rolling-window attention (attn_local): the ring cache is built from
+    the last ``window`` REAL positions per row, so padding never evicts
+    prompt tokens;
+  * MoE: routing is per-token (length-invariant), so co-batched slots
+    and pad tokens cannot perturb another token's expert choices.
+
+There is consequently no arch rejection list: every registered config,
+including modality-frontend and encoder-decoder stacks (a frontend arch
+carries its precomputed frontend embeddings on the ``Request``), serves
+through this engine with per-request tokens bitwise identical to
+``greedy_generate``.
 
 The scheduler interleaves admission (prefill) and decode ticks over a
 queue of requests with arrival times: each tick admits up to
 ``max_prefills_per_tick`` arrived requests into free slots, then runs
 one decode step for the whole slot batch.  Accounting covers TTFT,
-tok/s, queue depth, and slot occupancy on a virtual clock fed by the
-measured wall time of the jitted calls (idle gaps fast-forward to the
-next arrival instead of sleeping).
+tok/s, queue depth, slot occupancy, admission wait, and per-bucket
+prefill counts on a virtual clock fed by the measured wall time of the
+jitted calls (idle gaps fast-forward to the next arrival instead of
+sleeping).  ``reset()`` clears ALL scheduling state and every metric
+accumulator -- warm reruns start from a clean clock while keeping the
+compiled callables and cache buffers.
 
 All forwards run the layer execution plans under
 ``salr.force_backend(backend)`` — with the default ``"kernel"`` every
 compressed linear dispatches to its fused Pallas op exactly as in the
 batch serve loop.
-
-Scope: decoder-only stacks with full-context attention mixers (attn /
-mla).  Recurrent mixers (rglru, mlstm, slstm) fold right-padding into
-their state and rolling-window attention (attn_local) evicts real
-prompt tokens when the padded prompt exceeds the window, so bucketed
-prefill would be inexact for both; encoder-decoder and
-modality-frontend archs keep the batch loop.
 """
 from __future__ import annotations
 
@@ -45,12 +57,6 @@ from repro.configs.base import ArchConfig
 from repro.models import model as M
 from repro.train.step import make_decode_step, make_prefill_step
 
-# attn_local is excluded: the rolling-window prefill cache keeps the
-# LAST ``window`` positions of the padded prompt, so for prompts longer
-# than the window, bucket padding would evict real tokens in favor of
-# pad — unlike full-context caches, that loss is not masked away later.
-SUPPORTED_MIXERS = frozenset({"attn", "mla"})
-
 
 # ----------------------------------------------------------------- config
 
@@ -58,7 +64,8 @@ SUPPORTED_MIXERS = frozenset({"attn", "mla"})
 class EngineConfig:
     """Static engine shape/scheduling parameters."""
     n_slots: int = 4              # decode batch rows (max in-flight requests)
-    max_ctx: int = 64             # per-slot KV capacity (prompt + generated)
+    max_ctx: int = 64             # per-slot cache capacity (prefix + prompt
+    #                               + generated positions)
     buckets: tuple = ()           # prefill JIT lengths; () -> powers of two
     backend: str = "kernel"       # SALR execution plan for all forwards
     max_prefills_per_tick: int = 1
@@ -93,6 +100,9 @@ class Request:
     prompt: tuple                 # token ids
     max_new_tokens: int
     arrival: float = 0.0          # seconds on the engine clock
+    # precomputed frontend embeddings (frontend_len, d_model) -- required
+    # for modality-frontend / encoder-decoder archs, None otherwise
+    frontend: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -134,29 +144,29 @@ class ContinuousBatchingEngine:
                  time_fn: Callable[[], float] = time.perf_counter):
         ecfg = ecfg or EngineConfig()
         kinds = {k for g in cfg.layer_groups for k in g.pattern}
-        bad = kinds - SUPPORTED_MIXERS
-        if bad:
+        if "attn_local" in kinds and ecfg.max_ctx < cfg.window:
+            # not an arch restriction, a cache-shape one: the prefill
+            # ring is always `window` wide, so the slot cache must be at
+            # least that wide for insert_cache_slot's shapes to line up
             raise ValueError(
-                f"continuous batching supports full-context attention "
-                f"mixers only; {cfg.name} uses {sorted(bad)} whose "
-                f"recurrent state or rolling-window cache would absorb "
-                f"prompt-bucket padding (use --engine batch)")
-        if cfg.frontend or cfg.encoder_groups:
-            raise ValueError(f"{cfg.name}: frontend/encoder-decoder archs "
-                             "are served by the batch loop")
+                f"{cfg.name}: max_ctx={ecfg.max_ctx} is smaller than the "
+                f"rolling-attention window {cfg.window}; size max_ctx >= "
+                f"window")
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
-        self.buckets = tuple(sorted(ecfg.buckets
-                                    or default_buckets(ecfg.max_ctx)))
+        self.prefix = cfg.decode_prefix_len
+        self.buckets = tuple(sorted(
+            ecfg.buckets or default_buckets(ecfg.max_ctx - self.prefix)))
         self._time = time_fn
 
         prefill = make_prefill_step(cfg, backend=ecfg.backend)
         decode = make_decode_step(cfg, backend=ecfg.backend)
 
-        def prefill_fn(params, tokens, logit_index):
+        def prefill_fn(params, tokens, logit_index, frontend):
             logits, cache = prefill(params, {"tokens": tokens,
-                                             "logit_index": logit_index})
+                                             "logit_index": logit_index,
+                                             "frontend": frontend})
             tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return tok0, cache
 
@@ -172,8 +182,16 @@ class ContinuousBatchingEngine:
         self._decode = jax.jit(decode_fn, donate_argnums=(1,))
         self._insert = jax.jit(M.insert_cache_slot, donate_argnums=(0,))
 
-        n = ecfg.n_slots
-        self.cache = M.init_slot_cache(cfg, n, ecfg.max_ctx)
+        self.cache = M.init_slot_cache(cfg, ecfg.n_slots, ecfg.max_ctx)
+        self.reset()
+
+    def reset(self) -> None:
+        """Clear ALL scheduling state and metric accumulators, keep the
+        compiled callables and cache buffers (stale cache rows are
+        masked or overwritten by design), so a warm engine serves a
+        fresh trace without recompiling and without any accounting
+        leakage from the previous run."""
+        n = self.ecfg.n_slots
         self.slots: list = [None] * n         # Optional[_Active] per slot
         self._last_tok = np.zeros((n,), np.int32)
         self._pos = np.zeros((n,), np.int32)
@@ -182,22 +200,8 @@ class ContinuousBatchingEngine:
         self.now = 0.0
         self._queue_depths: list = []
         self._occupancy: list = []
-        self.n_prefills = 0
-        self.n_decode_ticks = 0
-
-    def reset(self) -> None:
-        """Clear scheduling state and metrics, keep compiled callables
-        and cache buffers (stale cache rows are masked by design), so a
-        warm engine can serve a fresh trace without recompiling."""
-        n = self.ecfg.n_slots
-        self.slots = [None] * n
-        self._last_tok = np.zeros((n,), np.int32)
-        self._pos = np.zeros((n,), np.int32)
-        self.pending = []
-        self.results = {}
-        self.now = 0.0
-        self._queue_depths = []
-        self._occupancy = []
+        self._admit_waits: list = []          # per-request queue wait (s)
+        self._bucket_counts: dict = {}        # prefill bucket -> count
         self.n_prefills = 0
         self.n_decode_ticks = 0
 
@@ -206,11 +210,21 @@ class ContinuousBatchingEngine:
     def submit(self, req: Request) -> None:
         length = len(req.prompt)
         bucket = pick_bucket(length, self.buckets)
-        last_pos = length + req.max_new_tokens - 1
-        if max(bucket, last_pos) > self.ecfg.max_ctx:
+        last_pos = self.prefix + length + req.max_new_tokens - 1
+        if max(self.prefix + bucket, last_pos) > self.ecfg.max_ctx:
             raise ValueError(
-                f"request {req.rid}: prompt {length} + {req.max_new_tokens} "
-                f"new tokens does not fit max_ctx={self.ecfg.max_ctx}")
+                f"request {req.rid}: prefix {self.prefix} + prompt {length} "
+                f"+ {req.max_new_tokens} new tokens does not fit "
+                f"max_ctx={self.ecfg.max_ctx}")
+        if self.cfg.frontend or self.cfg.encoder_groups:
+            want = (self.cfg.frontend_len, self.cfg.d_model)
+            got = None if req.frontend is None \
+                else tuple(np.shape(req.frontend))
+            if got != want:
+                raise ValueError(
+                    f"request {req.rid}: {self.cfg.name} needs precomputed "
+                    f"frontend embeddings of shape {want} on "
+                    f"Request.frontend, got {got}")
         bisect.insort(self.pending, (req.arrival, req.rid, req))
 
     @property
@@ -227,21 +241,27 @@ class ContinuousBatchingEngine:
         bucket = pick_bucket(length, self.buckets)
         padded = np.full((1, bucket), self.ecfg.pad_id, np.int32)
         padded[0, :length] = np.asarray(req.prompt, np.int32)
+        fe = (None if req.frontend is None
+              else jnp.asarray(req.frontend)[None])
+        # queue wait is time spent pending, not the request's own prefill
+        self._admit_waits.append(max(0.0, self.now - req.arrival))
         t0 = self._time()
         tok0, rcache = self._prefill(self.params, jnp.asarray(padded),
-                                     jnp.int32(length - 1))
+                                     jnp.int32(self.prefix + length - 1),
+                                     fe)
         self.cache = self._insert(self.cache, rcache, jnp.int32(slot))
         tok0 = int(tok0[0])
         jax.block_until_ready(jax.tree_util.tree_leaves(self.cache)[0])
         self.now += self._time() - t0
         self.n_prefills += 1
+        self._bucket_counts[bucket] = self._bucket_counts.get(bucket, 0) + 1
 
         res = RequestResult(rid=req.rid, tokens=[tok0], arrival=req.arrival,
                             admitted_at=self.now, first_token_at=self.now,
                             finished_at=float("nan"))
         act = _Active(req=req, result=res, slot=slot)
         self._last_tok[slot] = tok0
-        self._pos[slot] = length
+        self._pos[slot] = self.prefix + length
         self.slots[slot] = act
         if len(res.tokens) >= req.max_new_tokens:
             self._finish(act)
@@ -316,6 +336,9 @@ class ContinuousBatchingEngine:
             "queue_depth_max": max(self._queue_depths, default=0),
             "slot_occupancy_mean": (float(np.mean(self._occupancy))
                                     if self._occupancy else 0.0),
+            "admission_wait_mean_s": (float(np.mean(self._admit_waits))
+                                      if self._admit_waits else 0.0),
+            "prefills_per_bucket": dict(sorted(self._bucket_counts.items())),
             "n_prefills": self.n_prefills,
             "n_decode_ticks": self.n_decode_ticks,
             "n_slots": self.ecfg.n_slots,

@@ -56,21 +56,34 @@ def _route(cfg, backend: str) -> str:
             else "dense decode + GEMM")
 
 
-def _request_prompts(cfg, args, key) -> list:
-    """One prompt per request row, shared by both engines."""
-    prompts = []
+def _request_prompts(cfg, args, key) -> tuple:
+    """Per-request (prompt, frontend) rows, shared by both engines (the
+    batch loop draws the same keys, so parity compares like with like)."""
+    prompts, frontends = [], []
     for r in range(args.requests):
         kr = jax.random.fold_in(key, r)
         batch = jax.random.randint(kr, (args.batch, args.prompt_len), 0,
                                    cfg.vocab_size)
         prompts.extend(np.asarray(batch))
-    return prompts
+        if cfg.frontend:
+            fe = jax.random.normal(kr, (args.batch, cfg.frontend_len,
+                                        cfg.d_model)) * 0.02
+            frontends.extend(np.asarray(fe))
+        else:
+            frontends.extend([None] * args.batch)
+    return prompts, frontends
 
 
 def serve_stream(cfg, params, backend: str, args, key) -> float:
-    """Batch engine: run the request stream; returns tok/s."""
+    """Batch engine: run the request stream; returns tok/s.  Consumes
+    the same ``_request_prompts`` rows as the continuous engine, so the
+    two engines (and the parity check) serve identical workloads."""
     print(f"engine=batch backend={backend} route={_route(cfg, backend)}")
-    ctx = args.prompt_len + args.gen + (cfg.frontend_len or 0)
+    # >= window: greedy_generate's prefill ring is always `window` wide
+    # and must fit the decode-cache skeleton (same clamp as continuous)
+    ctx = max(args.prompt_len + args.gen + (cfg.frontend_len or 0),
+              cfg.window)
+    prompts, frontends = _request_prompts(cfg, args, key)
 
     def gen_fn(p, prompt, fe):
         with salr.force_backend(backend):
@@ -81,13 +94,10 @@ def serve_stream(cfg, params, backend: str, args, key) -> float:
     total_tok = 0
     t0 = time.time()
     for r in range(args.requests):
-        kr = jax.random.fold_in(key, r)
-        prompt = jax.random.randint(kr, (args.batch, args.prompt_len), 0,
-                                    cfg.vocab_size)
-        fe = None
-        if cfg.frontend:
-            fe = jax.random.normal(kr, (args.batch, cfg.frontend_len,
-                                        cfg.d_model)) * 0.02
+        rows = slice(r * args.batch, (r + 1) * args.batch)
+        prompt = jnp.asarray(np.stack(prompts[rows]))
+        fe = (jnp.asarray(np.stack(frontends[rows]))
+              if cfg.frontend else None)
         out = gen(params, prompt, fe)
         out.block_until_ready()
         total_tok += out.size
@@ -102,46 +112,55 @@ def serve_stream(cfg, params, backend: str, args, key) -> float:
 
 def serve_continuous(cfg, params, backend: str, args, key,
                      check_parity: bool = False) -> float:
-    """Continuous engine over the same prompts; returns tok/s."""
+    """Continuous engine over the same prompts; returns warm tok/s.
+
+    The trace runs twice: a cold pass compiles every prefill bucket and
+    the decode step, then ``Engine.reset()`` clears the clock and every
+    metric accumulator and the warm pass measures steady-state serving.
+    Parity (``--engine both``) checks the warm results bitwise against
+    per-request ``greedy_generate`` for EVERY arch — MoE routing is
+    per-token and stateful mixers prefill masked, so no arch is exempt."""
     print(f"engine=continuous backend={backend} "
           f"route={_route(cfg, backend)}")
-    prompts = _request_prompts(cfg, args, key)
+    prompts, frontends = _request_prompts(cfg, args, key)
+    prefix = cfg.decode_prefix_len
     n_slots = max(2, args.batch)
-    max_ctx = args.prompt_len + args.gen
+    max_ctx = max(prefix + args.prompt_len + args.gen, cfg.window)
     eng = ContinuousBatchingEngine(
         cfg, params, EngineConfig(n_slots=n_slots, max_ctx=max_ctx,
                                   backend=backend))
     reqs = [Request(rid=i, prompt=tuple(int(t) for t in p),
-                    max_new_tokens=args.gen, arrival=0.0)
-            for i, p in enumerate(prompts)]
-    results, metrics = eng.run(reqs)
+                    max_new_tokens=args.gen, arrival=0.0, frontend=fe)
+            for i, (p, fe) in enumerate(zip(prompts, frontends))]
+    eng.run(list(reqs))                      # cold pass: compiles
+    cold_s = eng.now
+    eng.reset()
+    results, metrics = eng.run(list(reqs))   # warm pass: clean clock
     print(f"engine=continuous backend={backend}: {metrics['requests']} "
           f"requests, {metrics['total_tokens']} tokens in "
-          f"{metrics['wall_s']:.2f}s ({metrics['tok_s']:.1f} tok/s incl. "
-          f"compile); ttft mean {metrics['ttft_mean_s']:.2f}s, "
+          f"{metrics['wall_s']:.2f}s warm ({metrics['tok_s']:.1f} tok/s; "
+          f"cold pass incl. compile {cold_s:.2f}s); "
+          f"ttft mean {metrics['ttft_mean_s']:.2f}s, "
           f"queue depth mean {metrics['queue_depth_mean']:.1f}, "
           f"slot occupancy {metrics['slot_occupancy_mean']:.2f}/"
           f"{metrics['n_slots']}")
 
     if check_parity:
-        if cfg.n_experts:
-            print("parity check skipped: MoE capacity grouping couples "
-                  "co-batched slots (tokens are not row-independent)")
-        else:
-            mismatches = 0
-            with salr.force_backend(backend):
-                for i, p in enumerate(prompts):
-                    ref = greedy_generate(params, cfg,
-                                          jnp.asarray(p)[None, :],
-                                          n_steps=args.gen, ctx=max_ctx)
-                    if list(np.asarray(ref[0])) != results[i].tokens:
-                        mismatches += 1
-            if mismatches:
-                print(f"PARITY FAIL: {mismatches}/{len(prompts)} requests "
-                      "diverge from greedy_generate", file=sys.stderr)
-                sys.exit(1)
-            print(f"parity OK: all {len(prompts)} requests match "
-                  "greedy_generate exactly")
+        mismatches = 0
+        with salr.force_backend(backend):
+            for i, (p, fe) in enumerate(zip(prompts, frontends)):
+                ref = greedy_generate(
+                    params, cfg, jnp.asarray(p)[None, :],
+                    n_steps=args.gen, ctx=max_ctx,
+                    frontend=None if fe is None else jnp.asarray(fe)[None])
+                if list(np.asarray(ref[0])) != results[i].tokens:
+                    mismatches += 1
+        if mismatches:
+            print(f"PARITY FAIL: {mismatches}/{len(prompts)} requests "
+                  "diverge from greedy_generate", file=sys.stderr)
+            sys.exit(1)
+        print(f"parity OK: all {len(prompts)} requests match "
+              "greedy_generate exactly")
     return metrics["tok_s"]
 
 

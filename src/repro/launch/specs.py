@@ -112,10 +112,17 @@ def param_count(cfg: ArchConfig) -> dict:
 
 
 def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
-    """MODEL_FLOPS reference: 6*N_active*D for train, 2*N_active*D for
-    prefill, 2*N_active per token (+ attention KV reads are bytes, not
-    flops) for decode."""
-    n = param_count(cfg)["active"]
+    """MODEL_FLOPS reference: 6*N*D for train, 2*N*D for prefill, 2*N
+    per token (+ attention KV reads are bytes, not flops) for decode.
+
+    N is the *executed* parameter count, which since the per-token MoE
+    routing rewrite equals "total": apply_moe runs every expert over
+    every token and zeroes non-selected outputs in the combine
+    (DESIGN.md §7), so E-way expert FLOPs are really spent.  The
+    paper-style k-way accounting survives as param_count()["active"]
+    for reporting; using it here would understate MoE compute by
+    n_experts/experts_per_token in every roofline."""
+    n = param_count(cfg)["total"]
     tokens = shape.global_batch * shape.seq_len
     if shape.kind == "train":
         return 6.0 * n * tokens

@@ -238,10 +238,16 @@ def _split_heads(x, n, hd):
 def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
               positions: jax.Array, mode: str,
               cache=None, pos=None, causal: bool = True,
-              memory: Optional[jax.Array] = None):
+              memory: Optional[jax.Array] = None,
+              last_pos: Optional[jax.Array] = None, **_):
     """GQA/MQA self-attention (or cross-attention when ``memory`` given).
 
     mode: train | prefill | decode.  Returns (y, new_cache).
+    ``last_pos`` ((B,) int32, prefill only): last real position of a
+    right-padded prompt -- the rolling-window cache build keeps the last
+    ``window`` REAL positions per row instead of the padded tail, so
+    bucket padding never evicts prompt tokens (full-context caches
+    ignore it; pad entries there are masked/overwritten by decode).
     """
     hd = cfg.resolved_head_dim
     h, kh = cfg.n_heads, cfg.n_kv_heads
@@ -263,7 +269,8 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
                                 window=window)
         new_cache = None
         if mode == "prefill":
-            new_cache = _build_cache(k, v, cfg, local, is_cross)
+            new_cache = _build_cache(k, v, cfg, local, is_cross,
+                                     last_pos=last_pos)
         y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * hd))
         return x + y, new_cache
 
@@ -316,7 +323,8 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
     return x + y, new_cache
 
 
-def _build_cache(k, v, cfg: ArchConfig, local: bool, is_cross: bool):
+def _build_cache(k, v, cfg: ArchConfig, local: bool, is_cross: bool,
+                 last_pos=None):
     if is_cross:
         return KVCache(k=k, v=v)
     if cfg.kv_cache == "int8" and not local:
@@ -324,23 +332,23 @@ def _build_cache(k, v, cfg: ArchConfig, local: bool, is_cross: bool):
         vq, vs = _q8(v)
         return QuantKVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
     if local:
+        # Ring slot i holds the latest REAL position p <= last_pos with
+        # p % w == i (per row: continuous batching right-pads prompts,
+        # so rows end at different real positions).  Slots whose p would
+        # be negative (prompt shorter than the window) stay empty (-1).
         w = cfg.window
         b, s = k.shape[0], k.shape[1]
-        if s >= w:
-            # keep the last `window` positions; ring slot = pos % w
-            kw, vw = k[:, s - w:], v[:, s - w:]
-            pos_tail = jnp.arange(s - w, s, dtype=jnp.int32)
-            slots = pos_tail % w
-            order = jnp.argsort(slots)
-            ring = jnp.broadcast_to(pos_tail[order][None], (b, w))
-            return RingKVCache(k=kw[:, order], v=vw[:, order], ring_pos=ring)
-        pad = w - s
-        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        ring = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
-                                jnp.full((pad,), -1, jnp.int32)])
-        return RingKVCache(k=kc, v=vc,
-                           ring_pos=jnp.broadcast_to(ring[None], (b, w)))
+        if last_pos is None:
+            last_pos = jnp.full((b,), s - 1, jnp.int32)
+        slots = jnp.arange(w, dtype=jnp.int32)
+        p = last_pos[:, None] - ((last_pos[:, None] - slots[None, :]) % w)
+        ok = p >= 0                                           # (B, w)
+        idx = jnp.clip(p, 0, s - 1)
+        kc = jnp.take_along_axis(k, idx[..., None, None], axis=1)
+        vc = jnp.take_along_axis(v, idx[..., None, None], axis=1)
+        kc = jnp.where(ok[..., None, None], kc, 0)
+        vc = jnp.where(ok[..., None, None], vc, 0)
+        return RingKVCache(k=kc, v=vc, ring_pos=jnp.where(ok, p, -1))
     return KVCache(k=k, v=v)
 
 

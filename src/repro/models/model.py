@@ -94,12 +94,15 @@ def init_params(key: jax.Array, cfg: ArchConfig):
 
 def apply_layer(p, x, cfg: ArchConfig, kind: str, mlp_kind: str, *,
                 mode: str, positions=None, cache=None, pos=None,
-                memory=None, causal=True):
-    """One block: mixer (+cross-attn) (+mlp).  Returns (x, new_cache)."""
+                memory=None, causal=True, last_pos=None):
+    """One block: mixer (+cross-attn) (+mlp).  Returns (x, new_cache).
+    ``last_pos`` ((B,) int32, prefill only): last real position of a
+    right-padded prompt, consumed by stateful mixers (masked-state
+    prefill) and the rolling-window cache build."""
     mixer_cache = cache.get("mixer") if cache else None
     x, new_mixer = MIXER_APPLY[kind](
         p["mixer"], x, cfg, positions=positions, mode=mode,
-        cache=mixer_cache, pos=pos, causal=causal)
+        cache=mixer_cache, pos=pos, causal=causal, last_pos=last_pos)
     new_cache = {"mixer": new_mixer}
     if "cross" in p:
         cross_cache = cache.get("cross") if cache else None
@@ -117,7 +120,7 @@ def apply_layer(p, x, cfg: ArchConfig, kind: str, mlp_kind: str, *,
 
 def apply_group(gp, x, cfg: ArchConfig, group: LayerGroup, *, mode: str,
                 positions=None, caches=None, pos=None, memory=None,
-                causal=True, remat=True):
+                causal=True, remat=True, last_pos=None):
     """Scan over ``repeats``; the pattern is applied inside the body."""
     mlp_kind = _group_mlp(cfg, group)
 
@@ -128,7 +131,8 @@ def apply_group(gp, x, cfg: ArchConfig, group: LayerGroup, *, mode: str,
             c = cache_sl[pi] if cache_sl is not None else None
             xc, nc = apply_layer(params_sl[pi], xc, cfg, kind, mlp_kind,
                                  mode=mode, positions=positions, cache=c,
-                                 pos=pos, memory=memory, causal=causal)
+                                 pos=pos, memory=memory, causal=causal,
+                                 last_pos=last_pos)
             new_caches.append(nc)
         return xc, new_caches
 
@@ -246,17 +250,26 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array,
     set of JIT shapes and reads the logits at the true last token, while
     the padded tail positions stay causally invisible to every real
     token and are masked out of later decode steps by the per-slot
-    position (see launch/engine.py)."""
+    position (see launch/engine.py).  ``logit_index`` doubles as the
+    last-real-position marker for masked-state prefill: stateful mixers
+    (rglru/mlstm/slstm) treat positions beyond it as identity
+    transitions and the rolling-window cache keeps only real tokens, so
+    padded prefill ends in bitwise the exact-length state."""
     memory = None
     if cfg.family == "encdec":
         memory = _encode(params, cfg, frontend_embeds)
     x = _embed_inputs(params, cfg, tokens, frontend_embeds)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    last_pos = None
+    if logit_index is not None:
+        last_pos = jnp.broadcast_to(jnp.asarray(logit_index, jnp.int32),
+                                    (b,))
     caches = []
     for gi, g in enumerate(cfg.layer_groups):
         x, nc = apply_group(params["groups"][gi], x, cfg, g, mode="prefill",
-                            positions=positions, memory=memory)
+                            positions=positions, memory=memory,
+                            last_pos=last_pos)
         caches.append(nc)
     x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if logit_index is None:
@@ -314,6 +327,9 @@ def insert_cache_slot(cache, request_cache, slot):
     whatever the previous occupant left there — decode masks by the
     per-slot position, so stale or pad entries are never attended
     (eviction is therefore free: freeing a slot is pure bookkeeping).
+    Recurrent-state leaves (RG-LRU/mLSTM/sLSTM) have no time axis; their
+    slot row is overwritten wholesale, which is why stale state from a
+    previous occupant can never leak into a new request.
     ``slot`` may be traced (the insert jits once per prefill bucket).
     """
     slot = jnp.asarray(slot, jnp.int32)

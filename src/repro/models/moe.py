@@ -1,46 +1,62 @@
-"""Mixture-of-Experts substrate: top-k routing with sort-based grouped
-dispatch (capacity-bounded, static shapes) + SALR-compressed experts.
+"""Mixture-of-Experts substrate: length-invariant per-token top-k
+routing + SALR-compressed experts.
 
-Design (DESIGN.md §4, EP):
-  * tokens are reshaped into groups; groups shard over the data axis so
-    all routing bookkeeping (sort, cumsum) is group-local -- no
-    cross-device traffic from the dispatch logic itself;
-  * dispatch is gather/scatter (O(tokens*d) bytes), NOT the GShard
-    dispatch-einsum (which costs an extra tokens*d*E*C FLOP term);
-  * expert FFNs run as batched einsums with the expert axis sharded over
-    the model axis (expert parallelism); GSPMD inserts the all-to-alls
-    at the group-sharded <-> expert-sharded boundary;
-  * over-capacity tokens are dropped (slot C is a trash row), standard
-    capacity-factor semantics.
+Design (DESIGN.md §4 EP, §7 serving exactness):
+  * routing is strictly per-token: a token's expert set, combine
+    weights, and drop decisions are functions of its own router logits
+    only (top-k + an optional probability threshold from the config) --
+    NEVER of which other tokens share the batch.  This is what makes
+    `forward_train` (S tokens), bucket-padded `prefill` (W tokens), and
+    per-slot `decode_step` (n_slots tokens) route identically, which
+    the continuous-batching engine needs for bitwise serving parity;
+  * expert FFNs run as batched einsums over the stacked expert axis
+    (every expert sees every token; non-selected outputs are zeroed by
+    the combine weights).  The expert axis shards over (data, model)
+    (expert parallelism) via ``constrain_expert_stack``; the combine
+    reduction over experts is the EP all-reduce;
+  * the price of exactness is dense E-way expert compute instead of the
+    former capacity-bounded sort/gather dispatch (k-way + drops).  The
+    capacity path coupled co-batched tokens -- teacher-forced forward,
+    prefill, and decode dropped *different* tokens -- which broke both
+    prefill consistency and serving parity (ROADMAP).  A ragged grouped
+    GEMM kernel that restores k-way compute without capacity semantics
+    is the named follow-up in ROADMAP.md.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from repro.distributed.compat import shard_map
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.salr import SALRLinear, apply_salr
 from repro.models.layers import (apply_linear, apply_rmsnorm, init_linear,
-                                 init_rmsnorm, round_up)
+                                 init_rmsnorm)
 
 
-def moe_capacity(group_size: int, cfg: ArchConfig) -> int:
-    slots = group_size * cfg.experts_per_token
-    cap = int(slots / cfg.n_experts * cfg.moe_capacity_factor)
-    return max(8, round_up(cap, 8))
+def route_tokens(router_w: jax.Array, tokens: jax.Array, cfg: ArchConfig):
+    """Per-token top-k routing with length-invariant drop decisions.
+
+    tokens: (N, d).  Returns (top_i (N, k), weights (N, k), keep (N, k)).
+    An assignment is dropped iff its softmax probability falls below
+    ``cfg.moe_drop_threshold`` -- a pure function of the token's own
+    router logits, so the decision cannot depend on co-batched tokens
+    (the property test in tests/test_invariants.py asserts this).
+    Kept weights are renormalized over the surviving assignments."""
+    logits = tokens.astype(jnp.float32) @ router_w            # (N, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.experts_per_token)
+    keep = top_p >= cfg.moe_drop_threshold
+    w = jnp.where(keep, top_p, 0.0)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    return top_i, w, keep
 
 
-def pick_group_size(n_tokens: int, dp: int = 1, target: int = 4096) -> int:
-    """Group size such that groups shard evenly over ``dp`` data shards."""
-    per = n_tokens // dp if (dp > 1 and n_tokens % dp == 0) else n_tokens
-    gs = max(1, min(target, per))
-    while per % gs:
-        gs -= 1
-    return gs
+def combine_weights(top_i: jax.Array, w: jax.Array, n_experts: int):
+    """Scatter per-assignment weights into a dense (N, E) combine matrix
+    (top-k indices within a row are distinct, so .add never collides)."""
+    n = top_i.shape[0]
+    c = jnp.zeros((n, n_experts), w.dtype)
+    return c.at[jnp.arange(n)[:, None], top_i].add(w)
 
 
 def init_moe(key: jax.Array, cfg: ArchConfig):
@@ -80,141 +96,42 @@ def init_moe(key: jax.Array, cfg: ArchConfig):
 
 
 def _expert_matmul(stack, x: jax.Array) -> jax.Array:
-    """x: (G, E, C, d_in) -> (G, E, C, d_out) with stacked expert
-    weights.  No transposes: resharding g-sharded -> e-sharded on the
-    same layout lowers to a clean all-to-all (a transposed layout made
-    GSPMD fall back to full all-gathers; EXPERIMENTS.md §Perf)."""
+    """Apply every expert to its token block.
+
+    x: (N, d_in) shared input (every expert sees every token) or
+    (E, N, d_in) per-expert hidden states.  Returns (E, N, d_out).
+    Each output element is an independent dot over d_in, so a token's
+    expert outputs are bitwise invariant to the co-batched token count
+    -- the property the serving parity checks rely on."""
+    shared = x.ndim == 2
     if isinstance(stack, SALRLinear):
-        return jax.vmap(lambda lin, xe: apply_salr(xe, lin),
-                        in_axes=(0, 1), out_axes=1)(stack, x)
-    return jnp.einsum("gecd,edf->gecf", x, stack["w"].astype(x.dtype))
-
-
-def _dispatch_local(xg, router_w, *, e: int, k: int, cap: int):
-    """Group-local routing + gather-based dispatch.
-
-    xg: (g, gs, d) -- runs per data shard under shard_map (or plainly on
-    one device).  Returns (buf (g,e,cap,d), flat_slot, w_eff, inv_order)
-    where the latter three drive the gather-based combine."""
-    g, gs, d = xg.shape
-    logits = xg.astype(jnp.float32) @ router_w                    # (g, gs, e)
-    probs = jax.nn.softmax(logits, axis=-1)
-    top_p, top_i = jax.lax.top_k(probs, k)                        # (g, gs, k)
-    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
-
-    flat_e = top_i.reshape(g, gs * k)
-    flat_t = jnp.broadcast_to(jnp.arange(gs)[:, None],
-                              (gs, k)).reshape(gs * k)
-    flat_w = top_p.reshape(g, gs * k)
-    order = jnp.argsort(flat_e, axis=-1, stable=True)
-    s_e = jnp.take_along_axis(flat_e, order, axis=-1)
-    s_t = flat_t[order]                                           # (g, gs*k)
-    s_w = jnp.take_along_axis(flat_w, order, axis=-1)
-
-    gi_b = jnp.broadcast_to(jnp.arange(g)[:, None], flat_e.shape)
-    counts = jnp.zeros((g, e), jnp.int32).at[gi_b, flat_e].add(1)
-    starts = jnp.cumsum(counts, axis=-1) - counts                 # (g, e)
-    pos = (jnp.arange(gs * k)[None, :]
-           - jnp.take_along_axis(starts, s_e, axis=-1))           # pos in expert
-    keep = pos < cap
-    slot = jnp.where(keep, pos, cap)                              # cap = trash
-
-    gi = jnp.arange(g)[:, None]
-    # slot -> sorted-assignment index (sentinel gs*k = empty slot)
-    slot_to_j = jnp.full((g, e, cap + 1), gs * k, jnp.int32)
-    slot_to_j = slot_to_j.at[gi, s_e, slot].set(
-        jnp.broadcast_to(jnp.arange(gs * k)[None, :], s_t.shape),
-        mode="drop")
-    slot_to_j = slot_to_j[:, :, :cap].reshape(g, e * cap)
-    s_t_pad = jnp.concatenate([s_t, jnp.full((g, 1), gs, jnp.int32)], axis=1)
-    slot_tok = jnp.take_along_axis(s_t_pad, jnp.minimum(slot_to_j, gs * k),
-                                   axis=1)                        # (g, e*cap)
-    xg_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
-    buf = jnp.take_along_axis(xg_pad, slot_tok[..., None], axis=1)
-    buf = buf.reshape(g, e, cap, d)
-
-    flat_slot = s_e * cap + jnp.minimum(slot, cap - 1)            # (g, gs*k)
-    w_eff = (s_w * keep).astype(xg.dtype)
-    inv_order = jnp.argsort(order, axis=-1, stable=True)
-    return buf, flat_slot, w_eff, inv_order
-
-
-def _combine_local(out, flat_slot, w_eff, inv_order, *, k: int):
-    """Gather expert outputs back per assignment; sum over the k
-    choices.  out: (g, e, cap, d) -> (g, gs, d)."""
-    g = out.shape[0]
-    d = out.shape[-1]
-    picked = jnp.take_along_axis(out.reshape(g, -1, d),
-                                 flat_slot[..., None], axis=1)
-    picked = picked * w_eff[..., None]
-    unsorted = jnp.take_along_axis(picked, inv_order[..., None], axis=1)
-    return jnp.sum(unsorted.reshape(g, -1, k, d), axis=2)
-
-
-def _dp_info():
-    """(mesh, data-axis names, dp size) from the launcher hook."""
-    from repro.distributed import sharding as shard
-    mesh = shard._EXPERT_MESH
-    if mesh is None:
-        return None, (), 1
-    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    dp = 1
-    for a in axes:
-        dp *= mesh.shape[a]
-    return mesh, axes, dp
+        if shared:
+            return jax.vmap(lambda lin: apply_salr(x, lin))(stack)
+        return jax.vmap(lambda lin, xe: apply_salr(xe, lin))(stack, x)
+    w = stack["w"].astype(x.dtype)
+    eq = "nd,edf->enf" if shared else "end,edf->enf"
+    return jnp.einsum(eq, x, w)
 
 
 def apply_moe(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     """x: (B, S, d) -> x + moe(x).
 
-    Dispatch/combine (routing, sort, gathers) run group-locally -- under
-    ``shard_map`` over the data axes when a mesh is active, so GSPMD can
-    never replicate the token-sized index gathers (observed 54TB/dev of
-    all-gather when left to GSPMD; EXPERIMENTS.md §Perf).  Only the
-    expert FFN einsums run in pjit-land, where the (E, tokens, d) buffer
-    resharding is exactly the MoE all-to-all."""
+    Every token is routed independently (``route_tokens``) and every
+    expert runs over the full token set with the expert axis sharded
+    over (data, model); the combine einsum zeroes non-selected experts
+    and its reduction over E is the expert-parallel all-reduce."""
+    from repro.distributed.sharding import constrain_expert_stack
     b, s, d = x.shape
-    e, k = cfg.n_experts, cfg.experts_per_token
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
     tokens = xn.reshape(b * s, d)
-    n = tokens.shape[0]
-    mesh, dp_axes, dp = _dp_info()
-    gs = pick_group_size(n, dp)
-    g = n // gs
-    cap = moe_capacity(gs, cfg)
-    xg = tokens.reshape(g, gs, d)
-    use_shard_map = mesh is not None and g % dp == 0 and dp > 1
 
-    dispatch = partial(_dispatch_local, e=e, k=k, cap=cap)
-    combine = partial(_combine_local, k=k)
-    if use_shard_map:
-        gspec = P(dp_axes)
-        dispatch = shard_map(
-            dispatch, mesh=mesh,
-            in_specs=(P(dp_axes, None, None), P(None, None)),
-            out_specs=(P(dp_axes, None, None, None), gspec, gspec, gspec),
-            check_vma=False)
-        combine = shard_map(
-            combine, mesh=mesh,
-            in_specs=(P(dp_axes, None, None, None), gspec, gspec, gspec),
-            out_specs=P(dp_axes, None, None),
-            check_vma=False)
+    top_i, w, _ = route_tokens(p["router"]["w"], tokens, cfg)
+    cw = combine_weights(top_i, w, cfg.n_experts).astype(x.dtype)  # (N, E)
 
-    buf, flat_slot, w_eff, inv_order = dispatch(xg, p["router"]["w"])
-
-    # --- expert FFN: tokens all-to-all to the expert owners (EP) ---
-    from repro.distributed.sharding import (constrain_expert_tokens,
-                                            constrain_group_tokens)
-    h = constrain_expert_tokens(buf)              # (g,e,cap,d), e-sharded
-    gate = _expert_matmul(p["gate"], h)
-    up = _expert_matmul(p["up"], h)
-    out = _expert_matmul(p["down"], jax.nn.silu(gate) * up)   # (g,e,cap,d)
-    if not use_shard_map:
-        # under shard_map the combine in_spec already forces the g-shard
-        out = constrain_group_tokens(out)
-
-    yg = combine(out, flat_slot, w_eff, inv_order)
-    y = yg.reshape(b, s, d)
+    gate = constrain_expert_stack(_expert_matmul(p["gate"], tokens))
+    up = constrain_expert_stack(_expert_matmul(p["up"], tokens))
+    out = _expert_matmul(p["down"], jax.nn.silu(gate) * up)   # (E, N, d)
+    y = jnp.einsum("ne,end->nd", cw, out).reshape(b, s, d)
 
     if "shared" in p:
         hs = jax.nn.silu(apply_linear(p["shared"]["gate"], xn)) * \

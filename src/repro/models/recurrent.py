@@ -80,9 +80,19 @@ def _rglru_gates(p, x: jax.Array):
     return a, gated
 
 
-def rglru_scan(p, x: jax.Array, h0: jax.Array | None = None) -> tuple:
-    """Parallel linear recurrence over (B, S, dr).  Returns (y, h_last)."""
+def rglru_scan(p, x: jax.Array, h0: jax.Array | None = None,
+               valid: jax.Array | None = None) -> tuple:
+    """Parallel linear recurrence over (B, S, dr).  Returns (y, h_last).
+
+    ``valid`` (B, S) masks padded positions to the recurrence identity
+    (a=1, b=0): the state passes through pads untouched, so a
+    right-padded prefill ends in bitwise the same state as an
+    exact-length one (identity combines are exact in floating point, and
+    ``associative_scan``'s tree for prefix t depends only on t)."""
     a, b = _rglru_gates(p, x)
+    if valid is not None:
+        a = jnp.where(valid[..., None], a, 1.0)
+        b = jnp.where(valid[..., None], b, 0.0)
     if h0 is not None:
         # fold initial state into the first step: b_0 += a_0 * h0
         b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
@@ -97,20 +107,39 @@ def rglru_scan(p, x: jax.Array, h0: jax.Array | None = None) -> tuple:
 
 
 def apply_rglru(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
-                cache: RGLRUState | None = None, **_):
-    """Returns (x + block(x), new_cache)."""
+                cache: RGLRUState | None = None,
+                last_pos: jax.Array | None = None, **_):
+    """Returns (x + block(x), new_cache).
+
+    ``last_pos`` ((B,) int32, prefill only): index of the last real
+    token of a right-padded prompt.  Positions beyond it are identity
+    transitions for the recurrence and excluded from the conv tail, so
+    the cached state equals an exact-length prefill's bitwise."""
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
     gate = jax.nn.gelu(apply_linear(p["in_gate"], xn))
     xr = apply_linear(p["in_x"], xn)
 
     if mode in ("train", "prefill"):
+        s = x.shape[1]
         xc = _causal_conv(xr, p["conv_w"], None)
-        y, h_last = rglru_scan(p, xc)
+        valid = None
+        if mode == "prefill" and last_pos is not None:
+            valid = jnp.arange(s)[None, :] <= last_pos[:, None]
+        y, h_last = rglru_scan(p, xc, valid=valid)
         new_cache = None
         if mode == "prefill":
             cw = cfg.conv_width
-            tail = xr[:, -(cw - 1):] if xr.shape[1] >= cw - 1 else jnp.pad(
-                xr, ((0, 0), (cw - 1 - xr.shape[1], 0), (0, 0)))
+            if last_pos is None:
+                tail = xr[:, -(cw - 1):] if s >= cw - 1 else jnp.pad(
+                    xr, ((0, 0), (cw - 1 - s, 0), (0, 0)))
+            else:
+                # last cw-1 REAL inputs per row (zeros where the prompt
+                # is shorter than the conv window)
+                idx = last_pos[:, None] + jnp.arange(2 - cw, 1)[None, :]
+                ok = idx >= 0
+                tail = jnp.take_along_axis(
+                    xr, jnp.maximum(idx, 0)[..., None], axis=1)
+                tail = jnp.where(ok[..., None], tail, 0)
             new_cache = RGLRUState(h=h_last.astype(x.dtype),
                                    conv_tail=tail.astype(x.dtype))
     else:

@@ -173,7 +173,13 @@ def mlstm_decode_step(state: MLSTMState, q, k, v, ig, log_f):
 
 
 def apply_mlstm(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
-                cache: MLSTMState | None = None, **_):
+                cache: MLSTMState | None = None,
+                last_pos: jax.Array | None = None, **_):
+    """``last_pos`` ((B,) int32, prefill only) marks the last real token
+    of a right-padded prompt: pad positions get i=-inf (no input) and
+    f=1 (no decay), which zeroes their contribution to the closed-form
+    final state without touching real positions (pads sit causally
+    after every real query, so the parallel output is unchanged)."""
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
     xu = apply_linear(p["up"], xn)
     xg = apply_linear(p["gate"], xn)
@@ -181,6 +187,10 @@ def apply_mlstm(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
     bsz, s = x.shape[0], x.shape[1]
 
     if mode in ("train", "prefill"):
+        if mode == "prefill" and last_pos is not None:
+            vm = (jnp.arange(s)[None, :] <= last_pos[:, None])[..., None]
+            ig = jnp.where(vm, ig, NEG_INF)
+            log_f = jnp.where(vm, log_f, 0.0)
         hout = mlstm_parallel(q, k, v, ig, log_f)
         new_cache = mlstm_final_state(k, v, ig, log_f) if mode == "prefill" else None
     else:
@@ -262,23 +272,37 @@ def _slstm_step(p, cfg: ArchConfig, state: SLSTMState,
 
 
 def apply_slstm(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
-                cache: SLSTMState | None = None, **_):
+                cache: SLSTMState | None = None,
+                last_pos: jax.Array | None = None, **_):
+    """``last_pos`` ((B,) int32, prefill only): the sequential scan
+    carries the state through padded steps unchanged, so a right-padded
+    prefill ends in the exact-length state bitwise."""
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
     xz = apply_linear(p["wz"], xn)
     xi = apply_linear(p["wi"], xn)
     xf = apply_linear(p["wf"], xn)
     xo = apply_linear(p["wo"], xn)
-    bsz = x.shape[0]
+    bsz, s = x.shape[0], x.shape[1]
 
     if mode in ("train", "prefill"):
         st0 = init_slstm_cache(cfg, bsz, x.dtype)
+        masked = mode == "prefill" and last_pos is not None
 
         def step(st, xs):
-            st2, h = _slstm_step(p, cfg, st, *xs)
+            *xin, v = xs
+            st2, h = _slstm_step(p, cfg, st, *xin)
+            if masked:
+                st2 = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(v[:, None], new, old),
+                    st2, st)
             return st2, h
 
+        if masked:
+            vt = jnp.arange(s)[:, None] <= last_pos[None, :]   # (S, B)
+        else:
+            vt = jnp.ones((s, bsz), bool)
         xs = (xz.transpose(1, 0, 2), xi.transpose(1, 0, 2),
-              xf.transpose(1, 0, 2), xo.transpose(1, 0, 2))
+              xf.transpose(1, 0, 2), xo.transpose(1, 0, 2), vt)
         st_last, hs = jax.lax.scan(step, st0, xs)
         y = hs.transpose(1, 0, 2).astype(x.dtype)
         new_cache = st_last if mode == "prefill" else None

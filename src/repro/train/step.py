@@ -23,7 +23,7 @@ from repro.train.state import TrainState
 
 
 def _prefix_len(cfg: ArchConfig) -> int:
-    return cfg.frontend_len if (cfg.frontend and cfg.family != "encdec") else 0
+    return cfg.decode_prefix_len
 
 
 def make_loss_fn(cfg: ArchConfig, loss_chunk: int = 512):

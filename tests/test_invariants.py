@@ -67,14 +67,44 @@ def test_model_flops_scaling():
     assert fde < 1e-3 * ftr
 
 
-def test_moe_capacity_and_groups():
-    from repro.models.moe import moe_capacity, pick_group_size
-    cfg = configs.get("deepseek_v3_671b")
-    gs = pick_group_size(131072, dp=16)
-    assert 131072 % gs == 0 and (131072 // gs) % 16 == 0
-    cap = moe_capacity(gs, cfg)
-    # capacity >= mean slots per expert
-    assert cap >= gs * cfg.experts_per_token / cfg.n_experts
+@settings(max_examples=10, deadline=None)
+@given(n_extra=st.integers(0, 48), thresh=st.sampled_from([0.0, 0.1, 0.3]),
+       seed=st.integers(0, 1000))
+def test_moe_routing_invariant_to_cobatched_tokens(n_extra, thresh, seed):
+    """A token's expert set, combine weights, and drop decisions must be
+    identical whether it is routed alone or alongside any number of
+    co-batched tokens — the property that makes teacher-forced forward,
+    bucket-padded prefill, and per-slot decode route identically
+    (DESIGN.md §7)."""
+    from repro.models.moe import route_tokens
+    cfg = configs.get("granite_moe_1b_a400m", smoke=True)
+    cfg = cfg.with_(moe_drop_threshold=thresh)
+    key = jax.random.PRNGKey(seed)
+    d, e = cfg.d_model, cfg.n_experts
+    router_w = jax.random.normal(key, (d, e)) / jnp.sqrt(d)
+    tok = jax.random.normal(jax.random.fold_in(key, 1), (1, d))
+    extra = jax.random.normal(jax.random.fold_in(key, 2), (n_extra, d))
+
+    i_solo, w_solo, k_solo = route_tokens(router_w, tok, cfg)
+    i_all, w_all, k_all = route_tokens(
+        router_w, jnp.concatenate([tok, extra]), cfg)
+    np.testing.assert_array_equal(np.asarray(i_solo[0]), np.asarray(i_all[0]))
+    np.testing.assert_array_equal(np.asarray(w_solo[0]), np.asarray(w_all[0]))
+    np.testing.assert_array_equal(np.asarray(k_solo[0]), np.asarray(k_all[0]))
+
+
+def test_moe_forward_invariant_to_sequence_length():
+    """apply_moe on a prefix of a sequence equals the same positions of
+    the full sequence bitwise: no capacity grouping couples tokens."""
+    from repro.models.moe import apply_moe, init_moe
+    cfg = configs.get("granite_moe_1b_a400m", smoke=True)
+    key = jax.random.PRNGKey(3)
+    p = init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 12, cfg.d_model))
+    y_full = apply_moe(p, x, cfg)
+    y_prefix = apply_moe(p, x[:, :7], cfg)
+    np.testing.assert_array_equal(np.asarray(y_full[:, :7]),
+                                  np.asarray(y_prefix))
 
 
 def test_dryrun_record_schema():

@@ -66,19 +66,10 @@ def test_adapter_grad_step(arch):
     assert float(l1) < float(l0)
 
 
-_MOE_CAPACITY_XFAIL = pytest.mark.xfail(
-    reason="pre-existing (PR 1, CHANGES.md): MoE capacity grouping depends "
-    "on the token count, so the teacher-forced forward (S tokens) and the "
-    "prefill (S-1 tokens) drop different over-capacity tokens and the "
-    "logits diverge at borderline experts; tracked in ROADMAP.md open items",
-    strict=False)
-
-
 @pytest.mark.parametrize("arch", [
-    "smollm_135m",
-    pytest.param("granite_moe_1b_a400m", marks=_MOE_CAPACITY_XFAIL),
+    "smollm_135m", "granite_moe_1b_a400m",
     "recurrentgemma_2b", "xlstm_1_3b",
-    pytest.param("deepseek_v3_671b", marks=_MOE_CAPACITY_XFAIL),
+    "deepseek_v3_671b",
 ])
 def test_prefill_decode_consistency(arch):
     """decode_step after prefill must reproduce the teacher-forced
