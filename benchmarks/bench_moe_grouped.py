@@ -1,0 +1,96 @@
+"""MoE grouped-vs-dense expert-compute microbenchmark (smoke-gated).
+
+Times ``apply_moe`` on the smoke MoE arch under both expert-compute
+backends (models/moe.py):
+
+  * ``kernel``    -- ragged grouped GEMM (kernels/grouped_spmm.py):
+    only the selected (token, expert) pairs run, k-way FLOPs;
+  * ``reference`` -- dense masked compute over the stacked expert axis:
+    every expert runs over every token, E-way FLOPs, combine zeroes the
+    rest (the parity oracle, formerly the only serving path).
+
+At prefill scale the grouped path must be FASTER than the dense-masked
+path — that is the whole point of the kernel (ROADMAP's k-way item) —
+and the module raises (surfacing as a FAILED gate entry in compare.py)
+if it is not.  At decode scale (a handful of co-batched slot tokens)
+the grouped path pays per-tile overhead that interpret mode magnifies;
+the entry is reported for regression tracking without a win assertion.
+
+Also emits the analytic roofline accounting: with E=8, k=2 the grouped
+path executes ``model_flops(..., moe_backend="kernel")`` (k-way) versus
+the reference's E-way count — the FLOPs-side speedup a real TPU grid
+realizes on top of the bandwidth-side compressed-weight win.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import csv_line
+from repro import configs
+from repro.configs.base import ShapeSpec
+from repro.launch.specs import model_flops
+from repro.models.moe import apply_moe, init_moe
+
+ARCH = "granite_moe_1b_a400m"
+N_PREFILL = 1024      # prefill-scale token count (gated: grouped must win)
+N_DECODE = 16         # decode-scale slot batch (tracked, not win-gated)
+ITERS = 5
+
+
+def _time(fn, *args, iters=ITERS):
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main() -> list:
+    cfg = configs.get(ARCH, smoke=True)
+    key = jax.random.PRNGKey(0)
+    p = init_moe(key, cfg)
+    lines = []
+
+    times = {}
+    for tag, n_tok in (("prefill", N_PREFILL), ("decode", N_DECODE)):
+        x = jax.random.normal(jax.random.fold_in(key, n_tok),
+                              (1, n_tok, cfg.d_model)) / 4
+        for backend in ("kernel", "reference"):
+            f = jax.jit(lambda xx, b=backend: apply_moe(p, xx, cfg,
+                                                        backend=b))
+            times[(tag, backend)] = _time(f, x)
+            lines.append(csv_line(
+                f"moe_grouped_{tag}_{backend}", times[(tag, backend)],
+                f"apply_moe N={n_tok} E={cfg.n_experts} "
+                f"k={cfg.experts_per_token} "
+                + ("ragged grouped GEMM (k-way)" if backend == "kernel"
+                   else "dense masked einsum (E-way)")))
+
+    speedup = times[("prefill", "reference")] / times[("prefill", "kernel")]
+    lines.append(csv_line(
+        "moe_grouped_speedup_prefill", 0.0,
+        f"grouped vs dense-masked at N={N_PREFILL}: {speedup:.2f}x "
+        "(must be >1: the kernel path has to beat E-way compute)"))
+
+    shape = ShapeSpec("bench_prefill", N_PREFILL, 1, "prefill")
+    kway = model_flops(cfg, shape, moe_backend="kernel")
+    eway = model_flops(cfg, shape)
+    lines.append(csv_line(
+        "moe_grouped_flops_accounting", 0.0,
+        f"roofline model_flops prefill: k-way={kway:.3g} "
+        f"E-way={eway:.3g} ratio={eway / kway:.2f}x"))
+
+    if speedup <= 1.0:
+        raise RuntimeError(
+            f"grouped kernel path ({times[('prefill', 'kernel')]:.0f}us) "
+            f"did not beat dense-masked expert compute "
+            f"({times[('prefill', 'reference')]:.0f}us) at N={N_PREFILL}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

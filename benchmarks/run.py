@@ -25,11 +25,12 @@ MODULES = [
     ("table7", "benchmarks.bench_table7_sparsity"),
     ("fig3", "benchmarks.bench_fig3_spectra"),
     ("serve", "benchmarks.bench_serve_engine"),
+    ("moe_grouped", "benchmarks.bench_moe_grouped"),
 ]
 
 # fast, fine-tune-free subset exercised by CI (--smoke); gated against
 # experiments/baselines/BENCH_smoke.json by benchmarks/compare.py
-SMOKE = ("theory", "table4", "serve")
+SMOKE = ("theory", "table4", "serve", "moe_grouped")
 
 
 def _calibrate(iters: int = 10, batches: int = 5) -> float:

@@ -157,6 +157,13 @@ def force_backend(backend: str):
         _BACKEND_OVERRIDE.pop()
 
 
+def current_backend(default: Optional[str] = None) -> Optional[str]:
+    """Innermost active ``force_backend`` override, or ``default``.
+    Consulted by non-SALRLinear kernel dispatchers (models/moe.py) so one
+    scope pins the execution plan for every fused path in a trace."""
+    return _BACKEND_OVERRIDE[-1] if _BACKEND_OVERRIDE else default
+
+
 def _resolve_backend(layer: SALRLinear, backend: Optional[str]) -> str:
     b = backend
     if b is None and _BACKEND_OVERRIDE:

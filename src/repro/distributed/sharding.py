@@ -311,6 +311,25 @@ def constrain_expert_stack(h):
         h, NamedSharding(_EXPERT_MESH, spec))
 
 
+def constrain_grouped_tokens(h):
+    """EP constraint for the grouped MoE layout (models/moe.py kernel
+    backend): h is the (m_pad, d) row buffer whose block_m-aligned
+    per-expert segments are contiguous, so sharding ROWS over
+    (data, model) distributes whole expert groups across the EP axis —
+    the grouped analogue of ``constrain_expert_stack``, with the gather/
+    scatter at the group boundary playing the all-to-all's role.  Row
+    counts are always a block multiple; ``_shardable`` degrades to
+    replication when they don't divide the mesh axis (tiny decode
+    buffers)."""
+    if _EXPERT_MESH is None:
+        return h
+    spec = _shardable(h.shape,
+                      P(("data", "model"), *([None] * (h.ndim - 1))),
+                      _EXPERT_MESH)
+    return jax.lax.with_sharding_constraint(
+        h, NamedSharding(_EXPERT_MESH, spec))
+
+
 _HEADS_MESH: Optional[Mesh] = None
 
 

@@ -11,10 +11,20 @@ Kernels (see DESIGN.md §3 for the GPU->TPU adaptation rationale):
   salr_spmm    -- bitmap GEMM + concatenated-adapter GEMM in one kernel
   fused_lora   -- concatenated multi-adapter GEMM (adapter path alone)
   nf4_spmm     -- NF4 dequant + GEMM (QSALR)
+  grouped_spmm -- ragged grouped GEMM over expert-stacked bases (MoE
+                  k-way dispatch; tile->expert map via scalar prefetch)
+
+See docs/kernels.md for the kernel-authoring guide (wrapper decorator
+contract, tiled layout, custom-VJP convention, grouped grid design).
 """
 from repro.kernels import ops, ref
-from repro.kernels.ops import (bitmap_matmul, lora_matmul, nf4_encode_2d,
-                               nf4_matmul, nm_matmul, salr_matmul)
+from repro.kernels.ops import (bitmap_matmul, grouped_dense_matmul,
+                               grouped_nm_matmul, grouped_qsalr_matmul,
+                               grouped_salr_matmul, lora_matmul,
+                               nf4_encode_2d, nf4_matmul, nm_matmul,
+                               salr_matmul)
 
 __all__ = ["ops", "ref", "bitmap_matmul", "lora_matmul", "nf4_encode_2d",
-           "nf4_matmul", "nm_matmul", "salr_matmul"]
+           "nf4_matmul", "nm_matmul", "salr_matmul",
+           "grouped_dense_matmul", "grouped_salr_matmul",
+           "grouped_qsalr_matmul", "grouped_nm_matmul"]

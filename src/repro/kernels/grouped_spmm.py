@@ -1,0 +1,379 @@
+"""Pallas TPU kernels: ragged grouped GEMM over expert-stacked SALR bases.
+
+MoE dispatch with k-way FLOPs (megablocks-style).  The host side
+(``repro.models.moe.group_assignments``) stable-sorts the (token, expert)
+assignment pairs by expert id and scatters the gathered token rows into a
+row buffer whose per-expert segments start on ``block_m`` boundaries
+(ragged group offsets, NO capacity: every kept assignment gets a row).
+Each M-tile of that buffer then belongs to exactly one expert, recorded
+in a ``tile_expert`` map that rides the grid as a **scalar-prefetch**
+operand: the BlockSpec index maps read ``tile_expert[mi]`` to DMA that
+expert's weight blocks, so a tile streams only its own expert's
+compressed bytes.  Experts with zero assigned tokens occupy zero tiles —
+they are skipped structurally by the offset-derived tile map, not masked.
+
+Four base representations share one grid/adapter skeleton (mirroring the
+per-layer kernels in ``salr_spmm`` / ``qsalr_spmm`` / ``nm_spmm``):
+
+  grouped_dense_spmm   -- dense expert stack (E, K, N)
+  grouped_salr_spmm    -- tiled-bitmap decode in-kernel (TiledBitmapWeight)
+  grouped_qsalr_spmm   -- NF4 dequant + bitmap decode in-kernel
+  grouped_nm_spmm      -- N:M select-network decode in-kernel
+
+All four fuse the concatenated low-rank adapter path: u = x @ A_cat[e] is
+accumulated in a VMEM scratch during the first N pass of each M-tile and
+reused for every later N tile, exactly as in ``salr_spmm``.  Adapter-free
+stacks (``a_cat is None``) omit the operands and the scratch entirely —
+no dead zero-GEMM pass.
+
+Exactness property the serving engine relies on (DESIGN.md §7): every
+output row is an independent dot over K accumulated f32 in a fixed
+block_k order, so a token's result is bitwise invariant to which other
+tokens share its tile — co-batching, bucket padding, and slot count
+cannot perturb it.  Padding rows are zero, so slack tiles (clamped to a
+valid expert id for the weight DMA) emit exact zeros.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import NF4_LEVELS
+from repro.kernels import compat
+
+
+def _zero_acc(acc_ref, k):
+    @pl.when(k == 0)
+    def _z():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _accum_lora(x, a_ref, u_ref, ni, k):
+    """u = x @ A_cat[e], built during the first N pass of this M-tile.
+    No-op for adapter-free stacks (plain dense expert weights): the
+    a/b operands and the u scratch are omitted entirely, so no dead
+    zero-GEMM pass runs."""
+    if a_ref is None:
+        return
+
+    @pl.when(ni == 0)
+    def _u():
+        @pl.when(k == 0)
+        def _zu():
+            u_ref[...] = jnp.zeros_like(u_ref)
+        u_ref[...] += jax.lax.dot_general(
+            x, a_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+def _store(o_ref, acc_ref, u_ref, b_ref, k, k_steps):
+    @pl.when(k == k_steps - 1)
+    def _s():
+        if b_ref is None:
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+            return
+        u = u_ref[...].astype(b_ref.dtype)
+        delta = jax.lax.dot_general(
+            u, b_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + delta).astype(o_ref.dtype)
+
+
+def _decode_bitmap(words, vals, cap_t: int, dtype):
+    """uint32 bitmask + compact values -> dense (Bk, tile) via exclusive
+    prefix popcount (same arithmetic as salr_spmm / core.bitmap.decode)."""
+    bk, wpt = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((words[:, :, None] >> shifts) & jnp.uint32(1)).reshape(bk, wpt * 32)
+    bi = bits.astype(jnp.int32)
+    slot = jnp.minimum(jnp.cumsum(bi, axis=1) - bi, cap_t - 1)
+    dense = jnp.take_along_axis(vals, slot, axis=1)
+    return jnp.where(bits.astype(bool), dense, 0).astype(dtype)
+
+
+def _dequant_nf4(codes, scales, cap_t: int):
+    """(Bk, cap_t//2) uint8 + (Bk, 1) scales -> (Bk, cap_t) f32
+    (16-way select tree, no gather — same as qsalr_spmm)."""
+    bk = codes.shape[0]
+    lo = (codes & jnp.uint8(0x0F)).astype(jnp.int32)
+    hi = (codes >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=-1).reshape(bk, cap_t)
+    dec = jnp.zeros(idx.shape, jnp.float32)
+    for j in range(16):
+        dec = jnp.where(idx == j, float(NF4_LEVELS[j]), dec)
+    return dec * scales
+
+
+def _decode_nm(gbits, vals, n: int, m: int, dtype):
+    """uint8 m-group masks + n values per group -> dense (Bk, G*m) via
+    the gather-free select network (same as nm_spmm)."""
+    bk, groups = gbits.shape
+    shifts = jnp.arange(m, dtype=jnp.uint8)
+    b = (gbits[:, :, None] >> shifts) & jnp.uint8(1)
+    bi = b.astype(jnp.int32)
+    slot = jnp.cumsum(bi, axis=-1) - bi
+    vals = vals.reshape(bk, groups, n)
+    dec = jnp.zeros((bk, groups, m), vals.dtype)
+    for j in range(n):
+        dec = dec + jnp.where(slot == j, vals[:, :, j:j + 1], 0)
+    return jnp.where(b.astype(bool), dec, 0).reshape(bk, groups * m).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies (after scalar prefetch: te_ref, x_ref, <base...>[, a, b])
+# ---------------------------------------------------------------------------
+# ``adapters`` is static: adapter-free stacks omit the a/b operands and
+# the u scratch entirely (ref lists unpack accordingly).
+
+def _split_refs(refs, n_base: int, adapters: bool):
+    base = refs[:n_base]
+    if adapters:
+        a_ref, b_ref, o_ref, acc_ref, u_ref = refs[n_base:]
+    else:
+        (o_ref, acc_ref), a_ref, b_ref, u_ref = refs[n_base:], None, None, None
+    return base, a_ref, b_ref, o_ref, acc_ref, u_ref
+
+
+def _dense_kernel(te_ref, x_ref, *refs, k_steps: int, adapters: bool):
+    del te_ref  # consumed by the BlockSpec index maps
+    (w_ref,), a_ref, b_ref, o_ref, acc_ref, u_ref = _split_refs(
+        refs, 1, adapters)
+    ni, k = pl.program_id(1), pl.program_id(2)
+    _zero_acc(acc_ref, k)
+    x = x_ref[...]
+    _accum_lora(x, a_ref, u_ref, ni, k)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_ref[0].astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    _store(o_ref, acc_ref, u_ref, b_ref, k, k_steps)
+
+
+def _salr_kernel(te_ref, x_ref, *refs, cap_t: int, k_steps: int,
+                 adapters: bool):
+    del te_ref
+    (words_ref, values_ref), a_ref, b_ref, o_ref, acc_ref, u_ref = \
+        _split_refs(refs, 2, adapters)
+    ni, k = pl.program_id(1), pl.program_id(2)
+    _zero_acc(acc_ref, k)
+    x = x_ref[...]
+    bk = x.shape[1]
+    _accum_lora(x, a_ref, u_ref, ni, k)
+    wpt = words_ref.shape[-1]
+    w_tile = _decode_bitmap(words_ref[...].reshape(bk, wpt),
+                            values_ref[...].reshape(bk, cap_t),
+                            cap_t, x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    _store(o_ref, acc_ref, u_ref, b_ref, k, k_steps)
+
+
+def _qsalr_kernel(te_ref, x_ref, *refs, cap_t: int, k_steps: int,
+                  adapters: bool):
+    del te_ref
+    (words_ref, codes_ref, scales_ref), a_ref, b_ref, o_ref, acc_ref, \
+        u_ref = _split_refs(refs, 3, adapters)
+    ni, k = pl.program_id(1), pl.program_id(2)
+    _zero_acc(acc_ref, k)
+    x = x_ref[...]
+    bk = x.shape[1]
+    _accum_lora(x, a_ref, u_ref, ni, k)
+    vals = _dequant_nf4(codes_ref[...].reshape(bk, cap_t // 2),
+                        scales_ref[...].reshape(bk, 1), cap_t)
+    wpt = words_ref.shape[-1]
+    w_tile = _decode_bitmap(words_ref[...].reshape(bk, wpt), vals,
+                            cap_t, x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    _store(o_ref, acc_ref, u_ref, b_ref, k, k_steps)
+
+
+def _nm_kernel(te_ref, x_ref, *refs, n: int, m: int, k_steps: int,
+               adapters: bool):
+    del te_ref
+    (bits_ref, vals_ref), a_ref, b_ref, o_ref, acc_ref, u_ref = \
+        _split_refs(refs, 2, adapters)
+    ni, k = pl.program_id(1), pl.program_id(2)
+    _zero_acc(acc_ref, k)
+    x = x_ref[...]
+    bk = x.shape[1]
+    _accum_lora(x, a_ref, u_ref, ni, k)
+    groups = bits_ref.shape[-1]
+    w_tile = _decode_nm(bits_ref[...].reshape(bk, groups),
+                        vals_ref[...].reshape(bk, groups * n), n, m, x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    _store(o_ref, acc_ref, u_ref, b_ref, k, k_steps)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders
+# ---------------------------------------------------------------------------
+
+def _grouped_call(kernel, x, tile_expert, arrays, base_specs, *,
+                  out_cols: int, tile_n: int, a_cat, b_cat,
+                  block_m: int, block_k: int, interpret: bool):
+    """Shared grid/spec plumbing: grid (m-tiles, n-tiles, k-steps) with
+    ``tile_expert`` as the scalar-prefetch operand every expert-stacked
+    BlockSpec indexes with ``te[mi]``.  ``a_cat``/``b_cat`` None means
+    an adapter-free stack: no adapter operands, no u scratch."""
+    mrows, kdim = x.shape
+    assert mrows % block_m == 0 and kdim % block_k == 0
+    assert tile_expert.shape == (mrows // block_m,), (
+        "tile_expert must map every block_m row tile to its expert")
+    adapters = a_cat is not None
+    k_steps = kdim // block_k
+    grid = (mrows // block_m, out_cols // tile_n, k_steps)
+    in_specs = [pl.BlockSpec((block_m, block_k),
+                             lambda mi, ni, ki, te: (mi, ki)),
+                *base_specs]
+    scratch = [pltpu.VMEM((block_m, tile_n), jnp.float32)]
+    if adapters:
+        r = a_cat.shape[-1]
+        arrays = (*arrays, a_cat, b_cat)
+        in_specs += [pl.BlockSpec((1, block_k, r),
+                                  lambda mi, ni, ki, te: (te[mi], ki, 0)),
+                     pl.BlockSpec((1, r, tile_n),
+                                  lambda mi, ni, ki, te: (te[mi], 0, ni))]
+        scratch.append(pltpu.VMEM((block_m, r), jnp.float32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, tile_n),
+                               lambda mi, ni, ki, te: (mi, ni)),
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        functools.partial(kernel, adapters=adapters),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mrows, out_cols), x.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(tile_expert, x, *arrays)
+
+
+def grouped_dense_spmm_pallas(x: jax.Array, tile_expert: jax.Array,
+                              w: jax.Array, a_cat: jax.Array,
+                              b_cat: jax.Array, *,
+                              block_m: int = 128, block_n: int = 128,
+                              block_k: int = 128,
+                              interpret: bool = True) -> jax.Array:
+    """y[t] = x[t] @ w[e(t)] + (x[t] @ a_cat[e(t)]) @ b_cat[e(t)].
+
+    x: (M, K) grouped rows; w: (E, K, N); a_cat: (E, K, R) or None;
+    b_cat: (E, R, N) or None; tile_expert: (M/block_m,) int32."""
+    e, kdim, ncols = w.shape
+    assert x.shape[1] == kdim and ncols % block_n == 0
+    assert (b_cat is None) == (a_cat is None)
+    if a_cat is not None:
+        assert b_cat.shape == (e, a_cat.shape[-1], ncols)
+    kernel = functools.partial(_dense_kernel, k_steps=kdim // block_k)
+    base_specs = [pl.BlockSpec((1, block_k, block_n),
+                               lambda mi, ni, ki, te: (te[mi], ki, ni))]
+    return _grouped_call(kernel, x, tile_expert, (w,), base_specs,
+                         out_cols=ncols, tile_n=block_n,
+                         a_cat=a_cat, b_cat=b_cat,
+                         block_m=block_m, block_k=block_k,
+                         interpret=interpret)
+
+
+def grouped_salr_spmm_pallas(x: jax.Array, tile_expert: jax.Array,
+                             words: jax.Array, values: jax.Array,
+                             a_cat: jax.Array, b_cat: jax.Array, *,
+                             cols: int, cap_t: int,
+                             block_m: int = 128, block_k: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """Grouped SALR op over expert-stacked tiled bitmaps.
+
+    words: (E, K, n_tiles, tile/32); values: (E, K, n_tiles, cap_t);
+    the N block equals the encoding tile width, so each grid step DMAs
+    exactly its expert's compressed bytes for one column tile."""
+    e, kdim, n_tiles, wpt = words.shape
+    tile = wpt * 32
+    assert x.shape[1] == kdim and n_tiles * tile == cols
+    assert values.shape == (e, kdim, n_tiles, cap_t)
+    if a_cat is not None:
+        assert b_cat.shape == (e, a_cat.shape[-1], cols)
+    kernel = functools.partial(_salr_kernel, cap_t=cap_t,
+                               k_steps=kdim // block_k)
+    base_specs = [
+        pl.BlockSpec((1, block_k, 1, wpt),
+                     lambda mi, ni, ki, te: (te[mi], ki, ni, 0)),
+        pl.BlockSpec((1, block_k, 1, cap_t),
+                     lambda mi, ni, ki, te: (te[mi], ki, ni, 0)),
+    ]
+    return _grouped_call(kernel, x, tile_expert, (words, values),
+                         base_specs, out_cols=cols, tile_n=tile,
+                         a_cat=a_cat, b_cat=b_cat,
+                         block_m=block_m, block_k=block_k,
+                         interpret=interpret)
+
+
+def grouped_qsalr_spmm_pallas(x: jax.Array, tile_expert: jax.Array,
+                              words: jax.Array, codes: jax.Array,
+                              scales: jax.Array, a_cat: jax.Array,
+                              b_cat: jax.Array, *, cols: int, cap_t: int,
+                              block_m: int = 128, block_k: int = 128,
+                              interpret: bool = True) -> jax.Array:
+    """Grouped QSALR op: NF4 dequant + bitmap decode in-kernel, per
+    expert group.  codes: (E, K, n_tiles, cap_t/2) uint8;
+    scales: (E, K, n_tiles, 1) f32."""
+    e, kdim, n_tiles, wpt = words.shape
+    tile = wpt * 32
+    assert x.shape[1] == kdim and n_tiles * tile == cols
+    assert codes.shape == (e, kdim, n_tiles, cap_t // 2)
+    assert scales.shape == (e, kdim, n_tiles, 1)
+    kernel = functools.partial(_qsalr_kernel, cap_t=cap_t,
+                               k_steps=kdim // block_k)
+    base_specs = [
+        pl.BlockSpec((1, block_k, 1, wpt),
+                     lambda mi, ni, ki, te: (te[mi], ki, ni, 0)),
+        pl.BlockSpec((1, block_k, 1, cap_t // 2),
+                     lambda mi, ni, ki, te: (te[mi], ki, ni, 0)),
+        pl.BlockSpec((1, block_k, 1, 1),
+                     lambda mi, ni, ki, te: (te[mi], ki, ni, 0)),
+    ]
+    return _grouped_call(kernel, x, tile_expert, (words, codes, scales),
+                         base_specs, out_cols=cols, tile_n=tile,
+                         a_cat=a_cat, b_cat=b_cat,
+                         block_m=block_m, block_k=block_k,
+                         interpret=interpret)
+
+
+def grouped_nm_spmm_pallas(x: jax.Array, tile_expert: jax.Array,
+                           group_bits: jax.Array, values: jax.Array,
+                           a_cat: jax.Array, b_cat: jax.Array, *,
+                           n: int = 2, m: int = 4,
+                           block_m: int = 128, block_n: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """Grouped N:M op with the select-network decode per expert group.
+    group_bits: (E, K, N/m) uint8; values: (E, K, N/m*n)."""
+    e, kdim, ngroups = group_bits.shape
+    ncols = ngroups * m
+    assert x.shape[1] == kdim and ncols % block_n == 0
+    assert values.shape == (e, kdim, ngroups * n)
+    if a_cat is not None:
+        assert b_cat.shape == (e, a_cat.shape[-1], ncols)
+    gn = block_n // m
+    kernel = functools.partial(_nm_kernel, n=n, m=m,
+                               k_steps=kdim // block_k)
+    base_specs = [
+        pl.BlockSpec((1, block_k, gn),
+                     lambda mi, ni, ki, te: (te[mi], ki, ni)),
+        pl.BlockSpec((1, block_k, gn * n),
+                     lambda mi, ni, ki, te: (te[mi], ki, ni)),
+    ]
+    return _grouped_call(kernel, x, tile_expert, (group_bits, values),
+                         base_specs, out_cols=ncols, tile_n=block_n,
+                         a_cat=a_cat, b_cat=b_cat,
+                         block_m=block_m, block_k=block_k,
+                         interpret=interpret)

@@ -20,6 +20,10 @@ from repro.core import bitmap as bm
 from repro.core.quant import quantize_nf4
 from repro.kernels.bitmap_spmm import bitmap_spmm_pallas
 from repro.kernels.fused_lora import fused_lora_pallas
+from repro.kernels.grouped_spmm import (grouped_dense_spmm_pallas,
+                                        grouped_nm_spmm_pallas,
+                                        grouped_qsalr_spmm_pallas,
+                                        grouped_salr_spmm_pallas)
 from repro.kernels.nf4_spmm import QBLOCK, nf4_spmm_pallas
 from repro.kernels.nm_spmm import nm_spmm_pallas
 from repro.kernels.qsalr_spmm import qsalr_spmm_pallas
@@ -144,6 +148,94 @@ def lora_matmul(x: jax.Array, a_cat: jax.Array, b_cat: jax.Array, *,
     bn = _divisor_block(b_cat.shape[1], block_n)
     return fused_lora_pallas(x, a_cat, b_cat, block_m=block_m, block_n=bn,
                              block_k=bk, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# ragged grouped GEMM (MoE expert dispatch, kernels/grouped_spmm.py)
+# ---------------------------------------------------------------------------
+
+def _grouped_adapters(a_cat, b_cat, ncols: int):
+    """Normalize the stacked adapter pair for the grouped kernels:
+    rank-0 (or absent) adapters become None — the kernels then skip the
+    low-rank pass entirely — and B_cat's output dim is zero-padded to
+    the encoded width."""
+    if a_cat is None or a_cat.shape[-1] == 0:
+        return None, None
+    if b_cat.shape[-1] < ncols:
+        b_cat = jnp.pad(b_cat, ((0, 0), (0, 0),
+                                (0, ncols - b_cat.shape[-1])))
+    return a_cat, b_cat
+
+
+@_batched_matmul("block_n", "block_k", "interpret")
+def grouped_dense_matmul(x, tile_expert: jax.Array, w: jax.Array,
+                         a_cat=None, b_cat=None, *,
+                         block_m: int = 128, block_n: int = 128,
+                         block_k: int = 128,
+                         interpret: bool = _INTERPRET) -> jax.Array:
+    """y[t] = x[t] @ w[e(t)] (+ adapters) over expert-grouped rows.
+    w: (E, K, N) dense expert stack; tile_expert: (M/block_m,) int32."""
+    e, kdim, ncols = w.shape
+    bk = _divisor_block(kdim, block_k)
+    bn = _divisor_block(ncols, block_n)
+    a3, b3 = _grouped_adapters(a_cat, b_cat, ncols)
+    return grouped_dense_spmm_pallas(x, tile_expert, w, a3, b3,
+                                     block_m=block_m, block_n=bn,
+                                     block_k=bk, interpret=interpret)
+
+
+@_batched_matmul("block_k", "interpret")
+def grouped_salr_matmul(x, tile_expert: jax.Array,
+                        tbw: bm.TiledBitmapWeight, a_cat, b_cat, *,
+                        block_m: int = 128, block_k: int = 128,
+                        interpret: bool = _INTERPRET) -> jax.Array:
+    """Grouped SALR op over an expert-stacked tiled bitmap (4D leaves:
+    words (E, K, n_tiles, tile/32), values (E, K, n_tiles, cap_t))."""
+    kdim = tbw.words.shape[1]
+    cols = tbw.words.shape[2] * tbw.words.shape[3] * 32
+    bk = _divisor_block(kdim, block_k)
+    a3, b3 = _grouped_adapters(a_cat, b_cat, cols)
+    return grouped_salr_spmm_pallas(x, tile_expert, tbw.words, tbw.values,
+                                    a3, b3, cols=cols, cap_t=tbw.cap_t,
+                                    block_m=block_m, block_k=bk,
+                                    interpret=interpret)
+
+
+@_batched_matmul("block_k", "interpret")
+def grouped_qsalr_matmul(x, tile_expert: jax.Array,
+                         qtbw: bm.QTiledBitmapWeight, a_cat, b_cat, *,
+                         block_m: int = 128, block_k: int = 128,
+                         interpret: bool = _INTERPRET) -> jax.Array:
+    """Grouped QSALR op (NF4 dequant in-kernel) over an expert-stacked
+    quantized tiled bitmap."""
+    kdim = qtbw.words.shape[1]
+    cols = qtbw.words.shape[2] * qtbw.words.shape[3] * 32
+    bk = _divisor_block(kdim, block_k)
+    a3, b3 = _grouped_adapters(a_cat, b_cat, cols)
+    return grouped_qsalr_spmm_pallas(x, tile_expert, qtbw.words,
+                                     qtbw.codes, qtbw.scales, a3, b3,
+                                     cols=cols, cap_t=qtbw.cap_t,
+                                     block_m=block_m, block_k=bk,
+                                     interpret=interpret)
+
+
+@_batched_matmul("block_n", "block_k", "interpret")
+def grouped_nm_matmul(x, tile_expert: jax.Array, nmw: bm.NMWeight,
+                      a_cat=None, b_cat=None, *,
+                      block_m: int = 128, block_n: int = 128,
+                      block_k: int = 128,
+                      interpret: bool = _INTERPRET) -> jax.Array:
+    """Grouped N:M op over an expert-stacked NMWeight (group_bits
+    (E, K, N/m) uint8, values (E, K, N/m*n))."""
+    kdim = nmw.group_bits.shape[1]
+    ncols = nmw.group_bits.shape[2] * nmw.m
+    bk = _divisor_block(kdim, block_k)
+    bn = _divisor_block(ncols, block_n, mult=nmw.m)
+    a3, b3 = _grouped_adapters(a_cat, b_cat, ncols)
+    return grouped_nm_spmm_pallas(x, tile_expert, nmw.group_bits,
+                                  nmw.values, a3, b3, n=nmw.n, m=nmw.m,
+                                  block_m=block_m, block_n=bn, block_k=bk,
+                                  interpret=interpret)
 
 
 def nf4_encode_2d(w: jax.Array):

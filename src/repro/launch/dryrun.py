@@ -139,12 +139,20 @@ def build_cell(cfg, shape, mesh, *, seq_shard: bool, microbatches: int,
     if kernel_plan_cell:
         # params_abs is in scope: kernel_plan_cell implies a serving kind
         dense_b, enc_b = roof.salr_weight_bytes(params_abs)
+        # the grouped MoE path executes k-way (not E-way) expert flops:
+        # subtract the analytic delta from the reference-path HLO flops
+        # and report model_flops on the same k-way basis (DESIGN.md §5)
+        kway = S.model_flops(cfg, shape, moe_backend="kernel")
+        flops_delta = (S.model_flops(cfg, shape) - kway) / chips
         adj = roof.with_kernel_weight_traffic(terms, dense_b / chips,
-                                              enc_b / chips)
+                                              enc_b / chips,
+                                              flops_delta=flops_delta,
+                                              model_flops=kway)
         kernel_roofline = {
             **adj.as_dict(),
             "salr_dense_equiv_bytes_global": dense_b,
             "salr_encoded_bytes_global": enc_b,
+            "moe_flops_accounting": "k-way (grouped kernel path)",
         }
 
     record = {

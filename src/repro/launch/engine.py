@@ -40,7 +40,11 @@ compiled callables and cache buffers.
 All forwards run the layer execution plans under
 ``salr.force_backend(backend)`` — with the default ``"kernel"`` every
 compressed linear dispatches to its fused Pallas op exactly as in the
-batch serve loop.
+batch serve loop, and MoE layers take the ragged grouped-GEMM path
+(k-way expert FLOPs, models/moe.py); routing stays per-token, so the
+grouped dispatch preserves the bitwise co-batching independence the
+slot batch relies on.  ``metrics()["moe_route"]`` records the dispatch
+for MoE archs.
 """
 from __future__ import annotations
 
@@ -55,6 +59,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M
+from repro.models.moe import moe_backend_route as _moe_route
 from repro.train.step import make_decode_step, make_prefill_step
 
 
@@ -344,4 +349,7 @@ class ContinuousBatchingEngine:
             "n_slots": self.ecfg.n_slots,
             "buckets": self.buckets,
             "backend": self.ecfg.backend,
+            **({"moe_route": _moe_route(self.cfg, self.ecfg.backend,
+                                        self.params)}
+               if self.cfg.n_experts else {}),
         }

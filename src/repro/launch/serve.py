@@ -51,9 +51,13 @@ _KERNEL_ROUTES = {
 }
 
 
-def _route(cfg, backend: str) -> str:
-    return (_KERNEL_ROUTES[cfg.salr.method] if backend == "kernel"
-            else "dense decode + GEMM")
+def _route(cfg, backend: str, params=None) -> str:
+    route = (_KERNEL_ROUTES[cfg.salr.method] if backend == "kernel"
+             else "dense decode + GEMM")
+    if cfg.n_experts:
+        from repro.models.moe import moe_backend_route
+        route += f"; moe={moe_backend_route(cfg, backend, params)}"
+    return route
 
 
 def _request_prompts(cfg, args, key) -> tuple:
@@ -78,7 +82,7 @@ def serve_stream(cfg, params, backend: str, args, key) -> float:
     """Batch engine: run the request stream; returns tok/s.  Consumes
     the same ``_request_prompts`` rows as the continuous engine, so the
     two engines (and the parity check) serve identical workloads."""
-    print(f"engine=batch backend={backend} route={_route(cfg, backend)}")
+    print(f"engine=batch backend={backend} route={_route(cfg, backend, params)}")
     # >= window: greedy_generate's prefill ring is always `window` wide
     # and must fit the decode-cache skeleton (same clamp as continuous)
     ctx = max(args.prompt_len + args.gen + (cfg.frontend_len or 0),
@@ -121,7 +125,7 @@ def serve_continuous(cfg, params, backend: str, args, key,
     per-request ``greedy_generate`` for EVERY arch — MoE routing is
     per-token and stateful mixers prefill masked, so no arch is exempt."""
     print(f"engine=continuous backend={backend} "
-          f"route={_route(cfg, backend)}")
+          f"route={_route(cfg, backend, params)}")
     prompts, frontends = _request_prompts(cfg, args, key)
     prefix = cfg.decode_prefix_len
     n_slots = max(2, args.batch)

@@ -111,18 +111,28 @@ def param_count(cfg: ArchConfig) -> dict:
     return {"total": total, "active": active}
 
 
-def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+def model_flops(cfg: ArchConfig, shape: ShapeSpec,
+                moe_backend: str = "reference") -> float:
     """MODEL_FLOPS reference: 6*N*D for train, 2*N*D for prefill, 2*N
     per token (+ attention KV reads are bytes, not flops) for decode.
 
-    N is the *executed* parameter count, which since the per-token MoE
-    routing rewrite equals "total": apply_moe runs every expert over
-    every token and zeroes non-selected outputs in the combine
-    (DESIGN.md §7), so E-way expert FLOPs are really spent.  The
-    paper-style k-way accounting survives as param_count()["active"]
-    for reporting; using it here would understate MoE compute by
-    n_experts/experts_per_token in every roofline."""
-    n = param_count(cfg)["total"]
+    N is the *executed* parameter count, which depends on the MoE
+    execution backend (models/moe.py):
+
+      * ``moe_backend="reference"`` — the dense masked einsum runs every
+        expert over every token and zeroes non-selected outputs in the
+        combine, so E-way expert FLOPs are really spent: N = "total".
+      * ``moe_backend="kernel"`` — the ragged grouped-GEMM path computes
+        only the selected (token, expert) pairs, so only the paper-style
+        k-way expert FLOPs execute: N = "active" (routed experts per
+        token + shared experts).  Group padding (≤ block_m-1 zero rows
+        per non-empty expert) is not modeled; it vanishes against N*D at
+        the shapes the roofline covers.
+
+    The train step always runs the reference formulation (DESIGN.md §2),
+    so training rooflines keep the default."""
+    which = "active" if moe_backend == "kernel" else "total"
+    n = param_count(cfg)[which]
     tokens = shape.global_batch * shape.seq_len
     if shape.kind == "train":
         return 6.0 * n * tokens

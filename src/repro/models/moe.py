@@ -1,7 +1,7 @@
 """Mixture-of-Experts substrate: length-invariant per-token top-k
-routing + SALR-compressed experts.
+routing + SALR-compressed experts, with two expert-compute backends.
 
-Design (DESIGN.md §4 EP, §7 serving exactness):
+Design (DESIGN.md §4 EP, §7 serving exactness; docs/serving.md):
   * routing is strictly per-token: a token's expert set, combine
     weights, and drop decisions are functions of its own router logits
     only (top-k + an optional probability threshold from the config) --
@@ -9,26 +9,50 @@ Design (DESIGN.md §4 EP, §7 serving exactness):
     `forward_train` (S tokens), bucket-padded `prefill` (W tokens), and
     per-slot `decode_step` (n_slots tokens) route identically, which
     the continuous-batching engine needs for bitwise serving parity;
-  * expert FFNs run as batched einsums over the stacked expert axis
-    (every expert sees every token; non-selected outputs are zeroed by
-    the combine weights).  The expert axis shards over (data, model)
-    (expert parallelism) via ``constrain_expert_stack``; the combine
-    reduction over experts is the EP all-reduce;
-  * the price of exactness is dense E-way expert compute instead of the
-    former capacity-bounded sort/gather dispatch (k-way + drops).  The
-    capacity path coupled co-batched tokens -- teacher-forced forward,
-    prefill, and decode dropped *different* tokens -- which broke both
-    prefill consistency and serving parity (ROADMAP).  A ragged grouped
-    GEMM kernel that restores k-way compute without capacity semantics
-    is the named follow-up in ROADMAP.md.
+  * expert compute dispatches on ``backend`` (explicit arg >
+    ``salr.force_backend`` scope > ``cfg.salr.backend``), mirroring
+    ``apply_salr``'s execution plans.  Gradients always take the
+    reference formulation via a custom VJP.
+
+Routing & dispatch semantics by backend:
+
+  | property                  | ``reference``            | ``kernel``                  |
+  |---------------------------|--------------------------|-----------------------------|
+  | expert selection          | per-token top-k + thresh | identical (same route)      |
+  | expert FLOPs per token    | E-way (masked combine)   | k-way (ragged grouped GEMM) |
+  | zero-token experts        | computed, then zeroed    | skipped (zero tiles)        |
+  | capacity / drops          | none beyond threshold    | none beyond threshold       |
+  | co-batch independence     | bitwise (independent dots)| bitwise (independent rows) |
+  | combine order             | expert-id order (0..E-1) | top-k slot order (0..k-1)   |
+  | gradients                 | native autodiff          | reference VJP (exact match) |
+
+The two backends agree to ~1e-4 relative (float summation order of the
+combine differs); each is bitwise *self*-consistent across co-batched
+token counts, which is the serving-parity property
+(tests/test_invariants.py, tests/test_parity_backends.py).
+
+The ``kernel`` backend is the ragged grouped-GEMM path
+(kernels/grouped_spmm.py): assignments are stable-sorted by expert into
+contiguous block-aligned groups (ragged offsets, no capacity, no drops
+beyond the per-token threshold) and one Pallas grid computes only the
+selected (token, expert) pairs, decoding bitmap / NF4 / N:M expert
+bases in-kernel.  The ``reference`` backend is the dense masked einsum
+over the stacked expert axis — every expert runs over every token and
+the combine weights zero the rest — kept as the parity oracle and the
+gradient path.
 """
 from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.salr import SALRLinear, apply_salr
+from repro.core import bitmap as bm
+from repro.core.salr import (QBitmapWeight, SALRLinear, apply_salr,
+                             current_backend)
 from repro.models.layers import (apply_linear, apply_rmsnorm, init_linear,
                                  init_rmsnorm)
 
@@ -95,6 +119,10 @@ def init_moe(key: jax.Array, cfg: ArchConfig):
     return p
 
 
+# ---------------------------------------------------------------------------
+# reference backend: dense masked einsum over the stacked expert axis
+# ---------------------------------------------------------------------------
+
 def _expert_matmul(stack, x: jax.Array) -> jax.Array:
     """Apply every expert to its token block.
 
@@ -113,25 +141,264 @@ def _expert_matmul(stack, x: jax.Array) -> jax.Array:
     return jnp.einsum(eq, x, w)
 
 
-def apply_moe(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+def _experts_reference(p, tokens: jax.Array, top_i: jax.Array,
+                       w: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """E-way dense masked compute: every expert runs over the full token
+    set (expert axis EP-sharded); the combine einsum zeroes non-selected
+    experts and its reduction over E is the EP all-reduce.  This is the
+    parity oracle and the gradient path for the kernel backend."""
+    from repro.distributed.sharding import constrain_expert_stack
+    cw = combine_weights(top_i, w, cfg.n_experts).astype(tokens.dtype)
+    gate = constrain_expert_stack(_expert_matmul(p["gate"], tokens))
+    up = constrain_expert_stack(_expert_matmul(p["up"], tokens))
+    out = _expert_matmul(p["down"], jax.nn.silu(gate) * up)   # (E, N, d)
+    return jnp.einsum("ne,end->nd", cw, out)
+
+
+# ---------------------------------------------------------------------------
+# kernel backend: ragged grouped GEMM (k-way FLOPs, no capacity)
+# ---------------------------------------------------------------------------
+
+class GroupedAssignments(NamedTuple):
+    """Static-shape ragged grouping of (token, expert) assignment pairs.
+
+    ``tok``/``dst`` are indexed by *sorted* assignment position: sorted
+    position ``p`` reads token row ``tok[p]`` and lands on grouped row
+    ``dst[p]``; ``inv`` maps assignment order back to sorted position.
+    ``tile_expert[i]`` owns grouped rows ``[i*block_m, (i+1)*block_m)``
+    (slack tiles are clamped to a valid expert id; their rows are zero)."""
+    tok: jax.Array          # (A,) token index per sorted assignment
+    inv: jax.Array          # (A,) assignment -> sorted position
+    dst: jax.Array          # (A,) grouped-buffer row per sorted assignment
+    tile_expert: jax.Array  # (m_pad/block_m,) int32 expert id per M-tile
+    m_pad: int              # static padded row count (multiple of block_m)
+    block_m: int            # M-tile height the offsets are aligned to
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _group_block_m(n_assign: int, n_experts: int) -> int:
+    """M-tile height: near the mean group size so per-expert padding
+    stays modest at decode scale (a few assignments) without shrinking
+    the MXU tile at prefill/train scale."""
+    mean = -(-n_assign // max(n_experts, 1))
+    return max(8, min(128, _round_up(mean, 8)))
+
+
+def group_assignments(top_i: jax.Array, n_experts: int,
+                      block_m: int) -> GroupedAssignments:
+    """Sort token-expert pairs into contiguous expert groups.
+
+    Stable argsort on expert id keeps same-expert assignments in token
+    order; ragged group offsets are block-aligned (each expert's segment
+    starts on a ``block_m`` boundary) so every GEMM tile reads exactly
+    one expert's weights.  No capacity, no drops: every assignment gets
+    a row.  Experts with zero assigned tokens occupy zero tiles.  All
+    shapes are static: the padded row count is the worst-case bound
+    ``A + min(E, A) * (block_m - 1)`` rounded up."""
+    n, k = top_i.shape
+    a = n * k
+    e_flat = top_i.reshape(a)
+    order = jnp.argsort(e_flat, stable=True)               # sorted -> assign
+    e_sorted = e_flat[order]
+    sizes = jnp.bincount(e_flat, length=n_experts)         # (E,)
+    padded = ((sizes + block_m - 1) // block_m) * block_m
+    starts_pad = jnp.cumsum(padded) - padded               # block-aligned
+    starts_raw = jnp.cumsum(sizes) - sizes
+    rank = jnp.arange(a) - starts_raw[e_sorted]            # pos within group
+    dst = starts_pad[e_sorted] + rank
+
+    m_pad = _round_up(a + min(n_experts, a) * (block_m - 1), block_m)
+    tile_start = jnp.arange(m_pad // block_m) * block_m
+    ends_pad = jnp.cumsum(padded)
+    tile_expert = jnp.searchsorted(ends_pad, tile_start, side="right")
+    tile_expert = jnp.minimum(tile_expert, n_experts - 1).astype(jnp.int32)
+    # permutation inverse by linear scatter (cheaper than a second sort)
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(a))
+    return GroupedAssignments(tok=order // k, inv=inv,
+                              dst=dst, tile_expert=tile_expert,
+                              m_pad=m_pad, block_m=block_m)
+
+
+def _stacked_adapter_cat(stack: SALRLinear):
+    """A_cat/B_cat over expert-stacked adapter leaves (E, d, r): the
+    concat axes are the trailing rank/out dims, not axis 0/1 as in the
+    per-layer ``salr.adapter_cat``."""
+    lora, res = stack.lora, stack.res
+    if res is None:
+        return lora.a, lora.b * lora.scale
+    a_cat = jnp.concatenate([lora.a, res.a], axis=-1)
+    b_cat = jnp.concatenate([lora.b * lora.scale, res.b * res.scale],
+                            axis=-2)
+    return a_cat, b_cat
+
+
+def _grouped_capable(stack) -> bool:
+    """Whether a grouped Pallas op exists for this expert stack's base
+    layout (mirrors ``salr._kernel_capable``): tiled bitmap families,
+    logical N:M, and plain dense arrays group; flat (reference-emitted)
+    bitmap storage has no grouped kernel and falls back to reference."""
+    if not isinstance(stack, SALRLinear):
+        return True                      # plain dense {"w"} stack
+    base = stack.base
+    if isinstance(base, (bm.TiledBitmapWeight, bm.QTiledBitmapWeight)):
+        return True
+    if isinstance(base, bm.NMWeight):
+        return not stack.transposed
+    return not isinstance(base, (bm.BitmapWeight, QBitmapWeight))
+
+
+def _grouped_linear(stack, xs: jax.Array, g: GroupedAssignments) -> jax.Array:
+    """One grouped expert matmul: dispatch on the stack's base layout to
+    the matching kernels/grouped_spmm.py op (decode in-kernel)."""
+    from repro.kernels import ops  # deferred: kernels import core.bitmap
+    if not isinstance(stack, SALRLinear):
+        return ops.grouped_dense_matmul(xs, g.tile_expert,
+                                        stack["w"].astype(xs.dtype),
+                                        block_m=g.block_m)
+    a_cat, b_cat = _stacked_adapter_cat(stack)
+    base = stack.base
+    if isinstance(base, bm.TiledBitmapWeight):
+        y = ops.grouped_salr_matmul(xs, g.tile_expert, base, a_cat, b_cat,
+                                    block_m=g.block_m)
+    elif isinstance(base, bm.QTiledBitmapWeight):
+        y = ops.grouped_qsalr_matmul(xs, g.tile_expert, base, a_cat, b_cat,
+                                     block_m=g.block_m)
+    elif isinstance(base, bm.NMWeight):
+        y = ops.grouped_nm_matmul(xs, g.tile_expert, base, a_cat, b_cat,
+                                  block_m=g.block_m)
+    else:                                # dense / mask array base
+        y = ops.grouped_dense_matmul(xs, g.tile_expert,
+                                     base.astype(xs.dtype), a_cat, b_cat,
+                                     block_m=g.block_m)
+    return y[:, :stack.d_out]
+
+
+def _grouped_ffn(cfg: ArchConfig, p, tokens: jax.Array, top_i: jax.Array,
+                 w: jax.Array) -> jax.Array:
+    """k-way expert FFN over the grouped row buffer.
+
+    Gather token rows to block-aligned expert groups (padding rows are
+    zero and emit exact zeros through every kernel), run gate/up/down as
+    grouped GEMMs, gather each assignment's output back, and combine in
+    top-k slot order — a fixed per-token order, so the result is bitwise
+    invariant to co-batched tokens (DESIGN.md §7)."""
+    from repro.distributed.sharding import constrain_grouped_tokens
+    n, k = top_i.shape
+    d = tokens.shape[-1]
+    g = group_assignments(top_i, cfg.n_experts,
+                          _group_block_m(n * k, cfg.n_experts))
+    xs = jnp.zeros((g.m_pad, d), tokens.dtype).at[g.dst].set(tokens[g.tok])
+    xs = constrain_grouped_tokens(xs)
+    gate = _grouped_linear(p["gate"], xs, g)
+    up = _grouped_linear(p["up"], xs, g)
+    hs = constrain_grouped_tokens(jax.nn.silu(gate) * up)
+    out = _grouped_linear(p["down"], hs, g)                 # (m_pad, d)
+    per = out[g.dst[g.inv]].reshape(n, k, d)                # assignment order
+    return jnp.einsum("nk,nkd->nd", w.astype(per.dtype), per)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _experts_kernel(cfg: ArchConfig, p, tokens, top_i, w):
+    return _grouped_ffn(cfg, p, tokens, top_i, w)
+
+
+def _experts_kernel_fwd(cfg, p, tokens, top_i, w):
+    return _grouped_ffn(cfg, p, tokens, top_i, w), (p, tokens, top_i, w)
+
+
+def _experts_kernel_bwd(cfg, res, grad):
+    # Pallas kernels carry no AD rules; the backward pass runs the exact
+    # reference formulation (same convention as salr._kernel_forward:
+    # reference grads, frozen bases un-differentiated).
+    p, tokens, top_i, w = res
+    _, vjp = jax.vjp(
+        lambda pp, tt, ii, ww: _experts_reference(pp, tt, ii, ww, cfg),
+        p, tokens, top_i, w)
+    return vjp(grad)
+
+
+_experts_kernel.defvjp(_experts_kernel_fwd, _experts_kernel_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def _resolve_moe_backend(cfg: ArchConfig, backend: Optional[str]) -> str:
+    b = backend if backend is not None else current_backend()
+    if b is None:
+        b = cfg.salr.backend
+    if b not in ("kernel", "reference"):
+        raise ValueError(f"unknown MoE backend {b!r}")
+    return b
+
+
+def _params_grouped_capable(params) -> bool:
+    """Whether every MoE expert stack in ``params`` has grouped-kernel
+    storage.  Expert stacks are identified by path (under a ``moe``
+    subtree at keys gate/up/down); pytrees without any count as capable
+    (nothing to fall back)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda n: isinstance(n, SALRLinear))
+    for path, leaf in flat:
+        if not isinstance(leaf, SALRLinear):
+            continue
+        names = [str(getattr(k, "name", getattr(k, "key", "")))
+                 for k in path]
+        # expert stacks live at moe/{gate,up,down} in full model params,
+        # or at the top level when given the bare init_moe dict; plain
+        # MLP linears named gate/up/down have an "mlp" ancestor instead
+        if names and names[-1] in ("gate", "up", "down") and \
+                ("moe" in names or len(names) == 1):
+            if not _grouped_capable(leaf):
+                return False
+    return True
+
+
+def moe_backend_route(cfg: ArchConfig, backend: Optional[str] = None,
+                      params=None) -> str:
+    """Human-readable dispatch description for serve/engine logging.
+    Pass ``params`` to account for the silent capability fallback: flat
+    (reference-emitted) expert storage has no grouped kernel, so a
+    "kernel" resolution still executes the reference path there."""
+    b = _resolve_moe_backend(cfg, backend)
+    if b == "kernel" and (params is None or _params_grouped_capable(params)):
+        return ("grouped ragged GEMM, k-way FLOPs "
+                "(kernels/grouped_spmm.py)")
+    if b == "kernel":
+        return ("dense masked einsum (E-way oracle; expert stacks lack "
+                "grouped-kernel storage — see salr.plan)")
+    return "dense masked einsum over the expert stack (E-way oracle)"
+
+
+def apply_moe(p, x: jax.Array, cfg: ArchConfig,
+              backend: Optional[str] = None) -> jax.Array:
     """x: (B, S, d) -> x + moe(x).
 
-    Every token is routed independently (``route_tokens``) and every
-    expert runs over the full token set with the expert axis sharded
-    over (data, model); the combine einsum zeroes non-selected experts
-    and its reduction over E is the expert-parallel all-reduce."""
-    from repro.distributed.sharding import constrain_expert_stack
+    Every token is routed independently (``route_tokens``); expert
+    compute dispatches on ``backend`` (explicit arg > active
+    ``salr.force_backend`` scope > ``cfg.salr.backend``): ``"kernel"``
+    runs the ragged grouped-GEMM path (k-way FLOPs, zero-token experts
+    skipped), ``"reference"`` the dense masked einsum oracle (E-way).
+    Expert stacks without a grouped kernel (flat bitmap storage) always
+    take the reference path.  Gradients are reference grads either way."""
     b, s, d = x.shape
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
     tokens = xn.reshape(b * s, d)
 
     top_i, w, _ = route_tokens(p["router"]["w"], tokens, cfg)
-    cw = combine_weights(top_i, w, cfg.n_experts).astype(x.dtype)  # (N, E)
-
-    gate = constrain_expert_stack(_expert_matmul(p["gate"], tokens))
-    up = constrain_expert_stack(_expert_matmul(p["up"], tokens))
-    out = _expert_matmul(p["down"], jax.nn.silu(gate) * up)   # (E, N, d)
-    y = jnp.einsum("ne,end->nd", cw, out).reshape(b, s, d)
+    grouped = (_resolve_moe_backend(cfg, backend) == "kernel"
+               and all(_grouped_capable(p[t]) for t in ("gate", "up",
+                                                        "down")))
+    if grouped:
+        y = _experts_kernel(cfg, {t: p[t] for t in ("gate", "up", "down")},
+                            tokens, top_i, w)
+    else:
+        y = _experts_reference(p, tokens, top_i, w, cfg)
+    y = y.reshape(b, s, d).astype(x.dtype)
 
     if "shared" in p:
         hs = jax.nn.silu(apply_linear(p["shared"]["gate"], xn)) * \

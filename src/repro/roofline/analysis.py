@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import re
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -166,18 +167,32 @@ def salr_weight_bytes(params) -> tuple[int, int]:
 
 
 def with_kernel_weight_traffic(terms: RooflineTerms, dense_bytes: float,
-                               encoded_bytes: float) -> RooflineTerms:
+                               encoded_bytes: float,
+                               flops_delta: float = 0.0,
+                               model_flops: Optional[float] = None
+                               ) -> RooflineTerms:
     """Roofline terms for the fused kernel path: the per-device HBM
     traffic swaps the dense weight stream for the compressed bytes the
     decode+GEMM kernels read (one weight pass per step — the serving
     forward; the train step's reference path keeps the unadjusted
     terms).  This is where the paper's bandwidth-side speedup shows up
-    on TPU (no sparse MXU -> FLOPs are unchanged)."""
+    on TPU for the per-layer kernels (no sparse MXU -> their FLOPs are
+    unchanged).
+
+    The MoE grouped-GEMM path additionally executes FEWER flops than the
+    analyzed reference program (k-way instead of E-way expert compute,
+    models/moe.py): ``flops_delta`` is the per-device executed-flops
+    reduction to subtract, and ``model_flops`` replaces the analytic
+    reference (``launch.specs.model_flops(..., moe_backend="kernel")``)
+    so useful_ratio / roofline_fraction compare like with like."""
     adjusted = max(terms.hbm_bytes - dense_bytes + encoded_bytes,
                    encoded_bytes)
-    return RooflineTerms(flops=terms.flops, hbm_bytes=adjusted,
+    return RooflineTerms(flops=max(terms.flops - flops_delta, 0.0),
+                         hbm_bytes=adjusted,
                          wire_bytes=terms.wire_bytes,
-                         model_flops=terms.model_flops, chips=terms.chips)
+                         model_flops=(terms.model_flops if model_flops is None
+                                      else model_flops),
+                         chips=terms.chips)
 
 
 def analyze(compiled, hlo_text: str, model_flops: float,

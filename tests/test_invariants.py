@@ -93,18 +93,74 @@ def test_moe_routing_invariant_to_cobatched_tokens(n_extra, thresh, seed):
     np.testing.assert_array_equal(np.asarray(k_solo[0]), np.asarray(k_all[0]))
 
 
-def test_moe_forward_invariant_to_sequence_length():
+@pytest.mark.parametrize("backend", ["reference", "kernel"])
+def test_moe_forward_invariant_to_sequence_length(backend):
     """apply_moe on a prefix of a sequence equals the same positions of
-    the full sequence bitwise: no capacity grouping couples tokens."""
+    the full sequence bitwise, on BOTH expert-compute backends: the
+    reference path because each masked expert output is an independent
+    dot, the grouped kernel path because a token's rows are independent
+    dots in fixed block_k order wherever its assignments land in the
+    ragged groups (DESIGN.md §7)."""
     from repro.models.moe import apply_moe, init_moe
     cfg = configs.get("granite_moe_1b_a400m", smoke=True)
     key = jax.random.PRNGKey(3)
     p = init_moe(key, cfg)
     x = jax.random.normal(jax.random.fold_in(key, 1), (2, 12, cfg.d_model))
-    y_full = apply_moe(p, x, cfg)
-    y_prefix = apply_moe(p, x[:, :7], cfg)
+    y_full = apply_moe(p, x, cfg, backend=backend)
+    y_prefix = apply_moe(p, x[:, :7], cfg, backend=backend)
     np.testing.assert_array_equal(np.asarray(y_full[:, :7]),
                                   np.asarray(y_prefix))
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_extra=st.sampled_from([0, 1, 5, 17]),
+       thresh=st.sampled_from([0.0, 0.2]), seed=st.integers(0, 1000))
+def test_moe_kernel_path_invariant_to_cobatched_tokens(n_extra, thresh,
+                                                       seed):
+    """The grouped kernel path's OUTPUT for a token is bitwise identical
+    whether the token is served alone or co-batched with any number of
+    other tokens — co-batched tokens shift which ragged group rows and
+    tiles the token lands in, but never its arithmetic.  This is PR 3's
+    serving-parity invariant carried onto the k-way compute path."""
+    from repro.models.moe import apply_moe, init_moe
+    cfg = configs.get("granite_moe_1b_a400m", smoke=True)
+    cfg = cfg.with_(moe_drop_threshold=thresh)
+    key = jax.random.PRNGKey(seed)
+    p = init_moe(key, cfg)
+    tok = jax.random.normal(jax.random.fold_in(key, 1),
+                            (1, 1, cfg.d_model))
+    extra = jax.random.normal(jax.random.fold_in(key, 2),
+                              (1, n_extra, cfg.d_model))
+    y_solo = apply_moe(p, tok, cfg, backend="kernel")
+    y_all = apply_moe(p, jnp.concatenate([tok, extra], axis=1), cfg,
+                      backend="kernel")
+    np.testing.assert_array_equal(np.asarray(y_solo[0, 0]),
+                                  np.asarray(y_all[0, 0]))
+
+
+def test_group_assignments_structure():
+    """The ragged grouping invariants the kernel's grid relies on:
+    destination rows are unique, block-aligned per expert, inside a tile
+    owned by that expert; group sizes match the routing bincount; empty
+    experts own no occupied tiles."""
+    from repro.models.moe import group_assignments
+    key = jax.random.PRNGKey(7)
+    n, k, e, block_m = 37, 3, 8, 8
+    top_i = jax.random.randint(key, (n, k), 0, e - 2)   # experts e-2, e-1 empty
+    g = group_assignments(top_i, e, block_m)
+    dst = np.asarray(g.dst)
+    te = np.asarray(g.tile_expert)
+    e_sorted = np.sort(np.asarray(top_i).reshape(-1))
+    assert len(np.unique(dst)) == dst.size              # no collisions
+    assert g.m_pad % block_m == 0 and te.size == g.m_pad // block_m
+    # every assignment's row sits in a tile owned by its expert
+    np.testing.assert_array_equal(te[dst // block_m], e_sorted)
+    # occupied tiles never belong to the empty experts
+    assert not np.isin([e - 2, e - 1], te[np.unique(dst // block_m)]).any()
+    # unsorting round-trips: inv maps assignment order to sorted position
+    order_tok = np.asarray(g.tok)[np.asarray(g.inv)]
+    np.testing.assert_array_equal(order_tok,
+                                  np.repeat(np.arange(n), k))
 
 
 def test_dryrun_record_schema():
