@@ -1,93 +1,134 @@
-"""MoE grouped-vs-dense expert-compute microbenchmark (smoke-gated).
+"""MoE expert-route microbenchmark + crossover gate (smoke-gated).
 
-Times ``apply_moe`` on the smoke MoE arch under both expert-compute
-backends (models/moe.py):
+Times ``apply_moe`` on the smoke MoE arch under every expert-compute
+route (models/moe.py, core/execplan.py):
 
-  * ``kernel``    -- ragged grouped GEMM (kernels/grouped_spmm.py):
+  * ``grouped``       -- ragged grouped GEMM (kernels/grouped_spmm.py):
     only the selected (token, expert) pairs run, k-way FLOPs;
-  * ``reference`` -- dense masked compute over the stacked expert axis:
-    every expert runs over every token, E-way FLOPs, combine zeroes the
-    rest (the parity oracle, formerly the only serving path).
+  * ``decode_grid``   -- decode-specialized masked grid: one M tile,
+    grid over experts, no host-side grouping (bitwise identical to
+    grouped per row);
+  * ``dense_masked``  -- dense masked compute over the stacked expert
+    axis: every expert runs over every token, E-way FLOPs (the parity
+    oracle, formerly the only serving path).
 
-At prefill scale the grouped path must be FASTER than the dense-masked
+At prefill scale (N=1024) the grouped path must beat the dense-masked
 path — that is the whole point of the kernel (ROADMAP's k-way item) —
 and the module raises (surfacing as a FAILED gate entry in compare.py)
-if it is not.  At decode scale (a handful of co-batched slot tokens)
-the grouped path pays per-tile overhead that interpret mode magnifies;
-the entry is reported for regression tracking without a win assertion.
+if it is not.
+
+At decode scale the benchmark records all three routes at
+N ∈ {1, 4, 16, 64} and gates the EXECUTION PLAN's selection: the route
+``resolve_plan`` picks for a decode phase of N tokens (the committed
+``DEFAULT_CROSSOVER`` table) must not be slower than the best of
+{grouped, dense_masked} at that N beyond an interpret-mode noise margin.
+A failure means the committed crossover table no longer matches this
+machine class — re-measure with
+``python -m repro.launch.dryrun --autotune-moe-crossover`` and update
+``core/execplan.DEFAULT_CROSSOVER`` (and the PLAN_snapshot golden).
 
 Also emits the analytic roofline accounting: with E=8, k=2 the grouped
-path executes ``model_flops(..., moe_backend="kernel")`` (k-way) versus
-the reference's E-way count — the FLOPs-side speedup a real TPU grid
-realizes on top of the bandwidth-side compressed-weight win.
+path executes ``model_flops(..., moe_backend="grouped")`` (k-way)
+versus the E-way count the oracle and the decode grid spend — the
+FLOPs-side speedup a real TPU grid realizes on top of the
+bandwidth-side compressed-weight win.
 """
 from __future__ import annotations
-
-import time
-
-import jax
 
 from benchmarks.common import csv_line
 from repro import configs
 from repro.configs.base import ShapeSpec
+from repro.core.execplan import MOE_ROUTES, measure_moe_routes, resolve_plan
 from repro.launch.specs import model_flops
-from repro.models.moe import apply_moe, init_moe
 
 ARCH = "granite_moe_1b_a400m"
-N_PREFILL = 1024      # prefill-scale token count (gated: grouped must win)
-N_DECODE = 16         # decode-scale slot batch (tracked, not win-gated)
-ITERS = 5
-
-
-def _time(fn, *args, iters=ITERS):
-    jax.block_until_ready(fn(*args))
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6
+N_PREFILL = 1024        # prefill-scale token count (gated: grouped must win)
+N_DECODE = (1, 4, 16, 64)   # decode-scale slot batches (plan-choice gated)
+# decode-scale calls are ~ms: medians over several batches keep the
+# route-choice gate out of the scheduler-jitter band.  All timing goes
+# through execplan.measure_moe_routes — the SAME protocol the autotune
+# pass uses, so a table re-measured after a gate failure is fitted under
+# the conditions the gate tests.
+ITERS = 8
+BATCHES = 5
+# interpret-mode timings jitter hard at decode scale (sub-10ms calls on a
+# shared CPU runner); the plan-choice gate allows this much slack before
+# calling the committed crossover table wrong
+PLAN_MARGIN = 1.5
 
 
 def main() -> list:
     cfg = configs.get(ARCH, smoke=True)
-    key = jax.random.PRNGKey(0)
-    p = init_moe(key, cfg)
     lines = []
 
-    times = {}
-    for tag, n_tok in (("prefill", N_PREFILL), ("decode", N_DECODE)):
-        x = jax.random.normal(jax.random.fold_in(key, n_tok),
-                              (1, n_tok, cfg.d_model)) / 4
-        for backend in ("kernel", "reference"):
-            f = jax.jit(lambda xx, b=backend: apply_moe(p, xx, cfg,
-                                                        backend=b))
-            times[(tag, backend)] = _time(f, x)
-            lines.append(csv_line(
-                f"moe_grouped_{tag}_{backend}", times[(tag, backend)],
-                f"apply_moe N={n_tok} E={cfg.n_experts} "
-                f"k={cfg.experts_per_token} "
-                + ("ragged grouped GEMM (k-way)" if backend == "kernel"
-                   else "dense masked einsum (E-way)")))
-
-    speedup = times[("prefill", "reference")] / times[("prefill", "kernel")]
+    # ---- prefill scale: grouped vs the oracle (win-gated) ----
+    t_prefill = measure_moe_routes(
+        cfg, (N_PREFILL,), iters=ITERS, batches=BATCHES,
+        routes=("grouped", "dense_masked"))[N_PREFILL]
+    for r, us in t_prefill.items():
+        lines.append(csv_line(
+            f"moe_grouped_prefill_{r}", us,
+            f"apply_moe N={N_PREFILL} E={cfg.n_experts} "
+            f"k={cfg.experts_per_token} route={r}"))
+    speedup = t_prefill["dense_masked"] / t_prefill["grouped"]
     lines.append(csv_line(
         "moe_grouped_speedup_prefill", 0.0,
         f"grouped vs dense-masked at N={N_PREFILL}: {speedup:.2f}x "
         "(must be >1: the kernel path has to beat E-way compute)"))
 
+    # ---- decode scale: all three routes, plan choice gated ----
+    # Per-route decode timings are RECORDED (derived text) but not
+    # ratio-gated: ~1-15ms interpret-mode calls jitter past any sane
+    # threshold run-to-run (same us=0 convention as the bench_theory
+    # numerics lines).  The regression protection at decode scale is the
+    # moe_plan_decodeN choice gate below, which compares routes measured
+    # within ONE run and raises (-> FAILED gate entry) when the
+    # committed crossover table picks a loser.
+    plan_fail = None
+    decode_meas = measure_moe_routes(cfg, N_DECODE, iters=ITERS,
+                                     batches=BATCHES)
+    for n in N_DECODE:
+        t = decode_meas[n]
+        for r in MOE_ROUTES:
+            lines.append(csv_line(
+                f"moe_route_decode{n}_{r}", 0.0,
+                f"apply_moe N={n} E={cfg.n_experts} "
+                f"k={cfg.experts_per_token} route={r} us={t[r]:.0f}"))
+        selected = resolve_plan(cfg, phase_tokens={"decode": n}) \
+            .moe_route("decode")
+        best_alt = min(t["grouped"], t["dense_masked"])
+        ratio = t[selected] / best_alt
+        lines.append(csv_line(
+            f"moe_plan_decode{n}", 0.0,
+            f"plan selects {selected} ({t[selected]:.0f}us) vs best of "
+            f"grouped/dense_masked {best_alt:.0f}us "
+            f"({ratio:.2f}x, gate <={PLAN_MARGIN}x)"))
+        if ratio > PLAN_MARGIN:
+            plan_fail = (n, selected, t[selected], best_alt)
+
+    # ---- analytic FLOPs accounting ----
     shape = ShapeSpec("bench_prefill", N_PREFILL, 1, "prefill")
-    kway = model_flops(cfg, shape, moe_backend="kernel")
+    kway = model_flops(cfg, shape, moe_backend="grouped")
     eway = model_flops(cfg, shape)
     lines.append(csv_line(
         "moe_grouped_flops_accounting", 0.0,
         f"roofline model_flops prefill: k-way={kway:.3g} "
-        f"E-way={eway:.3g} ratio={eway / kway:.2f}x"))
+        f"E-way={eway:.3g} ratio={eway / kway:.2f}x "
+        "(grouped route only; decode_grid/dense_masked spend E-way)"))
 
     if speedup <= 1.0:
         raise RuntimeError(
-            f"grouped kernel path ({times[('prefill', 'kernel')]:.0f}us) "
-            f"did not beat dense-masked expert compute "
-            f"({times[('prefill', 'reference')]:.0f}us) at N={N_PREFILL}")
+            f"grouped kernel path ({t_prefill['grouped']:.0f}us) did not "
+            f"beat dense-masked expert compute "
+            f"({t_prefill['dense_masked']:.0f}us) at N={N_PREFILL}")
+    if plan_fail is not None:
+        n, selected, t_sel, best = plan_fail
+        raise RuntimeError(
+            f"plan-selected decode route {selected!r} at N={n} "
+            f"({t_sel:.0f}us) is >{PLAN_MARGIN}x slower than the best of "
+            f"grouped/dense_masked ({best:.0f}us): the committed "
+            f"DEFAULT_CROSSOVER table does not match this machine — "
+            f"re-measure with dryrun --autotune-moe-crossover")
     return lines
 
 

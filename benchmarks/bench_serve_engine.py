@@ -32,7 +32,6 @@ import numpy as np
 
 from benchmarks.common import csv_line
 from repro import configs
-from repro.core import salr
 from repro.launch.engine import (ContinuousBatchingEngine, EngineConfig,
                                  Request)
 from repro.models import model as M
@@ -69,18 +68,18 @@ def build_trace(cfg, n_requests: int, seed: int = 0):
     return reqs
 
 
-def run_batch_loop(cfg, params, reqs) -> dict:
+def run_batch_loop(cfg, params, reqs, plan) -> dict:
     """Reference loop: fixed-shape greedy batches grouped by length.
     Timed on a warm second pass (the gate compares steady-state serving,
-    not XLA compile time); the cold pass is reported alongside."""
+    not XLA compile time); the cold pass is reported alongside.  Runs
+    the same resolved plan as the continuous engine."""
     by_len: dict = {}
     for r in reqs:
         by_len.setdefault(len(r.prompt), []).append(r)
 
     def gen_fn(p, prompt, fe):
-        with salr.force_backend(BACKEND):
-            return greedy_generate(p, cfg, prompt, n_steps=GEN, ctx=MAX_CTX,
-                                   frontend=fe)
+        return greedy_generate(p, cfg, prompt, n_steps=GEN, ctx=MAX_CTX,
+                               frontend=fe, plan=plan)
 
     gen = jax.jit(gen_fn)
 
@@ -116,20 +115,22 @@ def run_continuous(cfg, params, reqs) -> dict:
     results, metrics = eng.run(list(reqs))
     metrics["cold_wall_s"] = cold_s
     metrics["tokens"] = {rid: r.tokens for rid, r in results.items()}
+    metrics["_plan"] = eng.plan            # parity + batch loop reuse it
     return metrics
 
 
-def check_parity(cfg, params, reqs, got: dict) -> int:
-    """Continuous-engine tokens must equal greedy_generate exactly."""
+def check_parity(cfg, params, reqs, got: dict, plan) -> int:
+    """Continuous-engine tokens must equal greedy_generate exactly —
+    under THE ENGINE'S resolved plan, so both sides take identical
+    per-phase routes."""
     bad = 0
-    with salr.force_backend(BACKEND):
-        for r in reqs:
-            fe = None if r.frontend is None else jnp.asarray(r.frontend)[None]
-            ref = greedy_generate(params, cfg, jnp.asarray(r.prompt)[None],
-                                  n_steps=r.max_new_tokens, ctx=MAX_CTX,
-                                  frontend=fe)
-            if list(np.asarray(ref[0])) != got[r.rid]:
-                bad += 1
+    for r in reqs:
+        fe = None if r.frontend is None else jnp.asarray(r.frontend)[None]
+        ref = greedy_generate(params, cfg, jnp.asarray(r.prompt)[None],
+                              n_steps=r.max_new_tokens, ctx=MAX_CTX,
+                              frontend=fe, plan=plan)
+        if list(np.asarray(ref[0])) != got[r.rid]:
+            bad += 1
     return bad
 
 
@@ -139,8 +140,9 @@ def bench(n_requests: int, seed: int = 0, arch: str = ARCH) -> tuple:
     reqs = build_trace(cfg, n_requests, seed)
 
     cont = run_continuous(cfg, params, reqs)
-    batch = run_batch_loop(cfg, params, reqs)
-    mismatches = check_parity(cfg, params, reqs, cont["tokens"])
+    plan = cont.pop("_plan")
+    batch = run_batch_loop(cfg, params, reqs, plan)
+    mismatches = check_parity(cfg, params, reqs, cont["tokens"], plan)
     if mismatches:
         raise AssertionError(
             f"continuous engine diverged from greedy_generate on "

@@ -1,17 +1,22 @@
 """SALR core: the paper's contribution as composable JAX modules."""
-from repro.core import adapters, bitmap, prune, pytree, quant, residual, salr, theory
+from repro.core import (adapters, bitmap, execplan, prune, pytree, quant,
+                        residual, salr, theory)
 from repro.core.adapters import LoRAAdapter, apply_adapters_fused, concat_adapters, init_lora
 from repro.core.bitmap import (BitmapWeight, NMWeight, QTiledBitmapWeight,
                                TiledBitmapWeight, decode, encode, from_tiled,
                                nm_decode, nm_encode, to_tiled)
+from repro.core.execplan import (ExecutionPlan, MoECrossover, PhaseRoute,
+                                 resolve_plan, uniform_plan)
 from repro.core.salr import (SALRConfig, SALRLinear, apply_salr,
                              compress_linear, force_backend, plan)
 
 __all__ = [
-    "adapters", "bitmap", "prune", "pytree", "quant", "residual", "salr",
-    "theory", "LoRAAdapter", "apply_adapters_fused", "concat_adapters",
-    "init_lora", "BitmapWeight", "NMWeight", "TiledBitmapWeight",
-    "QTiledBitmapWeight", "decode", "encode", "to_tiled", "from_tiled",
-    "nm_decode", "nm_encode", "SALRConfig", "SALRLinear", "apply_salr",
-    "compress_linear", "force_backend", "plan",
+    "adapters", "bitmap", "execplan", "prune", "pytree", "quant", "residual",
+    "salr", "theory", "LoRAAdapter", "apply_adapters_fused",
+    "concat_adapters", "init_lora", "BitmapWeight", "NMWeight",
+    "TiledBitmapWeight", "QTiledBitmapWeight", "decode", "encode",
+    "to_tiled", "from_tiled", "nm_decode", "nm_encode", "SALRConfig",
+    "SALRLinear", "apply_salr", "compress_linear", "force_backend", "plan",
+    "ExecutionPlan", "MoECrossover", "PhaseRoute", "resolve_plan",
+    "uniform_plan",
 ]

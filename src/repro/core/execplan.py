@@ -1,0 +1,335 @@
+"""Phase-aware execution plans: one resolver for every kernel route.
+
+This module is the SINGLE place the stack decides which concrete kernel
+route a forward takes.  The old per-call-site precedence chain (explicit
+arg > ``salr.force_backend`` scope > ``cfg.salr.backend``) picked the
+same kernel regardless of execution phase; ``resolve_plan`` instead maps
+
+    (base representation, phase in {prefill, decode, train}, token count)
+        -> a concrete route per phase,
+
+resolved ONCE per model and threaded explicitly through the model apply
+paths (``models/model.py`` -> mixers -> ``models/layers.apply_linear`` /
+``models/moe.apply_moe``), the serving steps (``train/step.py``), and
+the engine's prefill/decode ticks (``launch/engine.py``).
+
+Routes
+------
+Linear (SALRLinear) layers have two routes:
+
+  ``kernel``     fused Pallas decode+GEMM for the layer's base layout
+  ``reference``  dense decode + plain GEMM (the differentiable oracle)
+
+MoE expert compute has three (``models/moe.py``):
+
+  ``grouped``       ragged grouped GEMM, k-way FLOPs; per-tile overhead
+                    grows with the occupied-expert count, so it wins at
+                    prefill/train-eval scale and at tiny slot batches
+  ``decode_grid``   decode-specialized masked grid: ALL assignment rows
+                    in ONE M-tile, the grid iterates experts instead of
+                    row tiles (kernels/grouped_spmm.py).  E-way FLOPs on
+                    a handful of rows (cheap), compressed weight stream,
+                    no sort/scatter — wins in the mid decode band.
+                    Bitwise identical to ``grouped`` per row (same
+                    block_k accumulation order).
+  ``dense_masked``  dense masked einsum over the stacked expert axis —
+                    the parity oracle and the gradient path
+
+Crossover
+---------
+``MoECrossover`` records the measured grouped <-> decode_grid <->
+dense_masked thresholds (token counts).  The committed defaults come
+from ``benchmarks/bench_moe_grouped.py`` decode-scale entries on the
+reference container; ``launch/dryrun.py --autotune-moe-crossover``
+re-measures them on the current machine.
+
+Precedence (tests/test_plan.py)
+-------------------------------
+  explicit per-call argument  >  threaded plan route  >
+  active scope override (``salr.force_backend`` maps to a plan
+  override pushed on the stack here)  >  ``resolve_plan(cfg)`` default.
+
+No call site outside ``resolve_plan`` reads ``cfg.salr.backend``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+from typing import Optional
+
+LINEAR_ROUTES = ("kernel", "reference")
+MOE_ROUTES = ("grouped", "decode_grid", "dense_masked")
+PHASES = ("prefill", "decode", "train")
+
+# characteristic token counts used when the caller does not know the
+# phase's real shape: prefill/train batches are large (grouped regime),
+# a decode tick advances one token per slot
+_DEFAULT_PHASE_TOKENS = {"prefill": 4096, "decode": 1, "train": 4096}
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECrossover:
+    """Measured kernel-route crossover for MoE expert compute.
+
+    ``route_for(n)`` returns ``mid_route`` for token counts in
+    [``grid_min_tokens``, ``grid_max_tokens``], ``small_route`` below and
+    ``large_route`` above.  The defaults are the committed measurement
+    (bench_moe_grouped decode-scale entries): the grouped path owns the
+    extremes (fewest tiles at tiny A, k-way FLOPs at prefill scale) and
+    the decode grid owns the middle band, where grouped pays
+    ~min(E, A) tile-map overhead per call but the masked grid stays at
+    E grid steps.  On machines where the dense oracle wins the middle
+    band, autotune sets ``mid_route="dense_masked"``.
+    """
+    grid_min_tokens: int = 8
+    grid_max_tokens: int = 256
+    small_route: str = "grouped"
+    mid_route: str = "decode_grid"
+    large_route: str = "grouped"
+
+    def __post_init__(self):
+        for r in (self.small_route, self.mid_route, self.large_route):
+            if r not in MOE_ROUTES:
+                raise ValueError(f"unknown MoE route {r!r}")
+
+    def route_for(self, n_tokens: int) -> str:
+        if n_tokens < self.grid_min_tokens:
+            return self.small_route
+        if n_tokens <= self.grid_max_tokens:
+            return self.mid_route
+        return self.large_route
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def load(cls, path: str) -> "MoECrossover":
+        """Read a table written by ``dryrun --autotune-moe-crossover``."""
+        with open(path) as f:
+            d = json.load(f)
+        return cls(**{k: d[k] for k in
+                      ("grid_min_tokens", "grid_max_tokens", "small_route",
+                       "mid_route", "large_route") if k in d})
+
+
+DEFAULT_CROSSOVER = MoECrossover()
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseRoute:
+    """Concrete kernel routes for one phase: every SALR linear follows
+    ``linear``, every MoE layer follows ``moe``.  This is the object the
+    model apply paths thread (per-layer capability fallbacks still apply:
+    a base layout without a fused kernel takes the reference path
+    whatever the route says)."""
+    linear: str                    # kernel | reference
+    moe: str                       # grouped | decode_grid | dense_masked
+
+    def __post_init__(self):
+        if self.linear not in LINEAR_ROUTES:
+            raise ValueError(f"unknown linear route {self.linear!r}")
+        if self.moe not in MOE_ROUTES:
+            raise ValueError(f"unknown MoE route {self.moe!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Resolved per-phase kernel routes for one model."""
+    prefill: PhaseRoute
+    decode: PhaseRoute
+    train: PhaseRoute
+    crossover: MoECrossover = DEFAULT_CROSSOVER
+
+    def route(self, phase: str) -> PhaseRoute:
+        if phase not in PHASES:
+            raise ValueError(f"unknown phase {phase!r} (want one of {PHASES})")
+        return getattr(self, phase)
+
+    def linear_backend(self, phase: str) -> str:
+        return self.route(phase).linear
+
+    def moe_route(self, phase: str) -> str:
+        return self.route(phase).moe
+
+    def describe(self) -> dict:
+        """JSON-stable summary (dryrun plan snapshots, serve logging)."""
+        return {
+            **{ph: {"linear": self.route(ph).linear,
+                    "moe": self.route(ph).moe} for ph in PHASES},
+            "crossover": self.crossover.as_dict(),
+        }
+
+
+def uniform_plan(backend: str,
+                 crossover: MoECrossover = DEFAULT_CROSSOVER) -> ExecutionPlan:
+    """Phase-uniform plan: what a ``salr.force_backend`` scope means.
+    ``kernel`` pins the grouped MoE route at every phase (the historical
+    scope semantics); ``reference`` pins the oracle everywhere."""
+    if backend not in LINEAR_ROUTES:
+        raise ValueError(f"unknown backend {backend!r}")
+    moe = "grouped" if backend == "kernel" else "dense_masked"
+    r = PhaseRoute(linear=backend, moe=moe)
+    return ExecutionPlan(prefill=r, decode=r, train=r, crossover=crossover)
+
+
+def resolve_plan(cfg, *, backend: Optional[str] = None,
+                 phase_tokens: Optional[dict] = None,
+                 crossover: Optional[MoECrossover] = None,
+                 overrides: Optional[dict] = None) -> ExecutionPlan:
+    """Resolve a model's execution plan.  The ONLY reader of
+    ``cfg.salr.backend`` in the codebase.
+
+    ``backend``       overrides ``cfg.salr.backend`` ("kernel"/"reference").
+    ``phase_tokens``  characteristic token count per phase, consulted by
+                      the MoE crossover table (the engine passes its slot
+                      count for decode and its largest prefill bucket).
+                      Missing phases use the defaults (prefill/train
+                      large, decode 1).
+    ``crossover``     overrides the committed default table (autotune).
+    ``overrides``     {phase: {"linear": ..., "moe": ...}} applied last —
+                      e.g. pin the decode MoE route for an experiment.
+
+    The train phase always resolves to the reference formulation
+    (``reference`` linears, ``dense_masked`` MoE): gradients differentiate
+    the dense-decode GEMMs natively, and the kernel custom-VJPs replay
+    exactly that path anyway — use ``overrides`` to trace kernel forwards
+    under training.  Per-layer capability fallbacks (flat storage with no
+    fused kernel) remain with the layer, not the plan.
+    """
+    b = backend if backend is not None else cfg.salr.backend
+    if b not in LINEAR_ROUTES:
+        raise ValueError(f"unknown SALR backend {b!r}")
+    xo = crossover or DEFAULT_CROSSOVER
+    toks = dict(_DEFAULT_PHASE_TOKENS)
+    toks.update(phase_tokens or {})
+
+    if b == "kernel":
+        routes = {
+            "prefill": PhaseRoute("kernel", xo.route_for(toks["prefill"])),
+            "decode": PhaseRoute("kernel", xo.route_for(toks["decode"])),
+            "train": PhaseRoute("reference", "dense_masked"),
+        }
+    else:
+        routes = {ph: PhaseRoute("reference", "dense_masked")
+                  for ph in PHASES}
+
+    for ph, ov in (overrides or {}).items():
+        if ph not in PHASES:
+            raise ValueError(f"unknown phase {ph!r} in overrides")
+        routes[ph] = dataclasses.replace(routes[ph], **ov)
+    return ExecutionPlan(crossover=xo, **routes)
+
+
+# ---------------------------------------------------------------------------
+# scope overrides (the force_backend compatibility surface)
+# ---------------------------------------------------------------------------
+
+_PLAN_OVERRIDE: list = []          # stack of ExecutionPlan
+
+
+@contextlib.contextmanager
+def plan_scope(plan: ExecutionPlan):
+    """Scoped plan override consulted (at TRACE time) by apply paths that
+    were not handed an explicit route.  ``salr.force_backend(b)`` is
+    sugar for ``plan_scope(uniform_plan(b))``.
+
+    Phase-split plans are fine here: the model ENTRY POINTS resolve
+    their own phase from the scope (prefill/decode_step/forward_hidden
+    each read their route).  Only direct phase-less ``apply_salr`` /
+    ``apply_moe`` calls inside the scope fall back to the plan's
+    *prefill* route — push a uniform plan when that distinction
+    matters."""
+    _PLAN_OVERRIDE.append(plan)
+    try:
+        yield
+    finally:
+        _PLAN_OVERRIDE.pop()
+
+
+def current_override() -> Optional[ExecutionPlan]:
+    """Innermost active ``plan_scope`` plan, or None."""
+    return _PLAN_OVERRIDE[-1] if _PLAN_OVERRIDE else None
+
+
+# ---------------------------------------------------------------------------
+# crossover autotune (dryrun --autotune-moe-crossover)
+# ---------------------------------------------------------------------------
+
+# archs/shapes whose resolved plans are snapshot-gated by CI
+# (launch/dryrun.py --check-plan-snapshot, mirrored by tests/test_plan.py):
+# a dense arch + a MoE arch covers linear routes AND the MoE crossover
+PLAN_SNAPSHOT_ARCHS = ("smollm_135m", "granite_moe_1b_a400m")
+PLAN_SNAPSHOT_TOKENS = {"prefill": 4096, "decode": 16}
+
+
+def measure_moe_routes(cfg, token_counts=(1, 4, 16, 64, 256),
+                       iters: int = 8, batches: int = 5,
+                       routes=MOE_ROUTES, seed: int = 0) -> dict:
+    """Median us per ``apply_moe`` call for each route at every token
+    count: {n_tokens: {route: us}}.  The ONE measurement path shared by
+    the autotune pass and benchmarks/bench_moe_grouped.py (same jit +
+    warmup + median-over-batches protocol, so the committed table and
+    the gate see consistent numbers).  Imports lazily (models depend on
+    this module)."""
+    import statistics
+    import time
+
+    import jax
+
+    from repro.models.moe import apply_moe, init_moe
+
+    key = jax.random.PRNGKey(seed)
+    p = init_moe(key, cfg)
+    out = {}
+    for n in token_counts:
+        x = jax.random.normal(jax.random.fold_in(key, n),
+                              (1, n, cfg.d_model)) / 4
+        out[n] = {}
+        for route in routes:
+            f = jax.jit(lambda xx, r=route: apply_moe(p, xx, cfg, route=r))
+            jax.block_until_ready(f(x))
+            samples = []
+            for _ in range(batches):
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    y = f(x)
+                jax.block_until_ready(y)
+                samples.append((time.perf_counter() - t0) / iters * 1e6)
+            out[n][route] = statistics.median(samples)
+    return out
+
+
+def autotune_crossover(cfg, token_counts=(1, 4, 16, 64, 256),
+                       iters: int = 8) -> tuple:
+    """Measure the routes and fit the three-band table: the mid band is
+    the LONGEST CONSECUTIVE run of measured token counts whose winner is
+    not grouped (an interior count won by grouped breaks the band, so a
+    noisy non-grouped win at one extreme cannot drag slower routes over
+    the counts between them); everything outside the band stays grouped
+    (the k-way route must own prefill scale by construction).  The mid
+    route is the majority winner within the band.  Returns
+    (MoECrossover, measurements)."""
+    meas = measure_moe_routes(cfg, token_counts, iters=iters)
+    ns = sorted(meas)
+    winners = [min(meas[n], key=meas[n].get) for n in ns]
+    best_run, run_start = (0, 0), None
+    for i, w in enumerate(winners + ["grouped"]):   # sentinel closes a run
+        if w != "grouped":
+            if run_start is None:
+                run_start = i
+        elif run_start is not None:
+            if i - run_start > best_run[1] - best_run[0]:
+                best_run = (run_start, i)
+            run_start = None
+    lo, hi = best_run
+    if lo == hi:
+        table = MoECrossover(grid_min_tokens=0, grid_max_tokens=0,
+                             mid_route="decode_grid")
+    else:
+        routes = winners[lo:hi]
+        mid_route = max(set(routes), key=routes.count)
+        table = MoECrossover(grid_min_tokens=ns[lo],
+                             grid_max_tokens=ns[hi - 1],
+                             mid_route=mid_route)
+    return table, meas

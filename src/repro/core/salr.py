@@ -19,14 +19,18 @@ base representation:
     NMWeight            -> ops.nm_matmul + ops.lora_matmul
     dense / mask / flat -> reference decode + dense GEMM
 
-``backend="reference"`` (per-call, per-layer, or via ``force_backend``)
-always takes the dense decode path; gradients always do — the kernel
-forward carries a custom VJP whose backward is the reference path, so
-adapters-only fine-tuning works unchanged on kernel-planned layers.
+``backend="reference"`` (per-call, per-layer, or via a plan route —
+see ``repro.core.execplan``) always takes the dense decode path;
+gradients always do — the kernel forward carries a custom VJP whose
+backward is the reference path, so adapters-only fine-tuning works
+unchanged on kernel-planned layers.  Phase-aware route selection
+(prefill vs decode vs train) lives in ``core/execplan.py``:
+``resolve_plan`` is the only reader of ``cfg.salr.backend``, and the
+resolved ``PhaseRoute`` is threaded explicitly through the model apply
+paths down to the ``backend`` argument here.
 """
 from __future__ import annotations
 
-import contextlib
 import dataclasses
 from functools import partial
 from typing import Optional
@@ -141,33 +145,30 @@ def adapter_cat(layer: SALRLinear) -> tuple[jax.Array, jax.Array]:
 # backend dispatch
 # ---------------------------------------------------------------------------
 
-_BACKEND_OVERRIDE: list[str] = []
-
-
-@contextlib.contextmanager
 def force_backend(backend: str):
-    """Scoped backend override consulted by every ``apply_salr`` call
-    traced inside the block (e.g. the train step forces ``reference``).
-    The override is read at TRACE time: re-used jitted functions keep the
-    backend they were traced with."""
-    _BACKEND_OVERRIDE.append(backend)
-    try:
-        yield
-    finally:
-        _BACKEND_OVERRIDE.pop()
+    """Scoped backend override consulted (at TRACE time) by ``apply_salr``
+    and ``apply_moe`` calls that were not handed an explicit route.
 
-
-def current_backend(default: Optional[str] = None) -> Optional[str]:
-    """Innermost active ``force_backend`` override, or ``default``.
-    Consulted by non-SALRLinear kernel dispatchers (models/moe.py) so one
-    scope pins the execution plan for every fused path in a trace."""
-    return _BACKEND_OVERRIDE[-1] if _BACKEND_OVERRIDE else default
+    This is compatibility sugar over the execution-plan subsystem: the
+    scope maps to a phase-uniform plan override pushed on the
+    ``core.execplan`` stack (``plan_scope(uniform_plan(backend))``), which the
+    resolvers consult AFTER any explicitly threaded plan route — resolve
+    a plan and thread it instead for phase-aware dispatch."""
+    from repro.core import execplan as plan_mod
+    return plan_mod.plan_scope(plan_mod.uniform_plan(backend))
 
 
 def _resolve_backend(layer: SALRLinear, backend: Optional[str]) -> str:
     b = backend
-    if b is None and _BACKEND_OVERRIDE:
-        b = _BACKEND_OVERRIDE[-1]
+    if b is None:
+        from repro.core import execplan as plan_mod
+        override = plan_mod.current_override()
+        if override is not None:
+            # a DIRECT apply_salr call carries no phase context, so a
+            # scope plan resolves as prefill here (force_backend pushes
+            # phase-uniform plans, where this is immaterial; model entry
+            # points resolve their own phase from the scope instead)
+            b = override.linear_backend("prefill")
     if b is None:
         b = layer.backend
     if b not in ("kernel", "reference"):
@@ -257,10 +258,11 @@ def apply_salr(x: jax.Array, layer: SALRLinear,
                backend: Optional[str] = None) -> jax.Array:
     """y = x @ W_hat + (x @ A_cat) @ B_cat (+ bias).  x: (..., d_in).
 
-    ``backend`` selects the execution path (explicit arg > active
-    ``force_backend`` scope > ``layer.backend``): ``"kernel"`` routes to
-    the fused Pallas op for the layer's base representation,
-    ``"reference"`` decodes dense and runs plain GEMMs.
+    ``backend`` selects the execution path (explicit arg — usually the
+    threaded plan route's ``linear`` — then any active plan-scope
+    override, then ``layer.backend``): ``"kernel"`` routes to the fused
+    Pallas op for the layer's base representation, ``"reference"``
+    decodes dense and runs plain GEMMs.
 
     ``constrain_fn`` (optional) pins the decoded dense W_hat (rows, cols)
     to the storage-row sharding under pjit (repro.distributed.sharding);

@@ -20,6 +20,12 @@ per-layer kernels in ``salr_spmm`` / ``qsalr_spmm`` / ``nm_spmm``):
   grouped_qsalr_spmm   -- NF4 dequant + bitmap decode in-kernel
   grouped_nm_spmm      -- N:M select-network decode in-kernel
 
+A second, decode-specialized grid (``decode_*_spmm_pallas``, same four
+base representations) serves the small-token-count regime the execution
+plan's MoE crossover routes there: all assignment rows in ONE M tile,
+grid over experts with masked accumulation, no host-side grouping.  See
+the section comment below for the layout and exactness argument.
+
 All four fuse the concatenated low-rank adapter path: u = x @ A_cat[e] is
 accumulated in a VMEM scratch during the first N pass of each M-tile and
 reused for every later N tile, exactly as in ``salr_spmm``.  Adapter-free
@@ -377,3 +383,289 @@ def grouped_nm_spmm_pallas(x: jax.Array, tile_expert: jax.Array,
                          a_cat=a_cat, b_cat=b_cat,
                          block_m=block_m, block_k=block_k,
                          interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# decode-specialized grid (masked accumulation, single M tile)
+# ---------------------------------------------------------------------------
+# At decode scale (a handful of slot tokens) the ragged grouped grid pays
+# ~min(E, A) M-tiles of per-tile overhead plus the host-side
+# sort/scatter/searchsorted grouping.  The decode grid inverts the
+# layout: ALL assignment rows sit in ONE M tile, in plain assignment
+# order (token-major, no sort), and the grid iterates EXPERTS —
+# grid (n_tiles, E, k_steps).  A ``row_expert`` map rides as the
+# scalar-prefetch operand; each expert step masks the rows it owns
+# (x * [row_expert == e]) and accumulates into the shared output tile.
+# Masked-out rows contribute exact zeros, so every output row is an
+# independent dot over K in the SAME fixed block_k order as the grouped
+# kernel — the two kernel routes are bitwise identical per row, and both
+# keep the co-batching independence the serving engine relies on.
+# FLOPs are E-way (every expert step touches every row), which is the
+# deliberate trade: at a handful of rows the grid-step count, not the
+# arithmetic, is the cost.  Pad rows carry ``row_expert = -1`` and never
+# match any expert step.
+
+def _dg_zero(acc_ref, e, k):
+    @pl.when((e == 0) & (k == 0))
+    def _z():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _dg_accum_lora(xm, a_ref, u_ref, ni, e, k):
+    """u[rows of e] = x[rows of e] @ A_cat[e], masked-accumulated during
+    the first N pass; complete for expert e's rows by e's last k step."""
+    if a_ref is None:
+        return
+
+    @pl.when(ni == 0)
+    def _u():
+        @pl.when((e == 0) & (k == 0))
+        def _zu():
+            u_ref[...] = jnp.zeros_like(u_ref)
+        u_ref[...] += jax.lax.dot_general(
+            xm, a_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+def _dg_store(o_ref, acc_ref, u_ref, b_ref, mask, e, n_experts, k, k_steps):
+    """Per-expert adapter epilogue at e's last k step (u rows for e are
+    complete there — see _dg_accum_lora), final store after the last
+    expert."""
+    @pl.when(k == k_steps - 1)
+    def _ep():
+        if b_ref is not None:
+            u = (u_ref[...] * mask).astype(b_ref.dtype)
+            acc_ref[...] += jax.lax.dot_general(
+                u, b_ref[0], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+        @pl.when(e == n_experts - 1)
+        def _s():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _dgdense_kernel(re_ref, x_ref, *refs, n_experts: int, k_steps: int,
+                    adapters: bool):
+    (w_ref,), a_ref, b_ref, o_ref, acc_ref, u_ref = _split_refs(
+        refs, 1, adapters)
+    ni, e, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    _dg_zero(acc_ref, e, k)
+    mask = (re_ref[...] == e).astype(x_ref.dtype)[:, None]
+    x = x_ref[...] * mask
+    _dg_accum_lora(x, a_ref, u_ref, ni, e, k)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_ref[0].astype(x.dtype), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    _dg_store(o_ref, acc_ref, u_ref, b_ref, mask, e, n_experts, k, k_steps)
+
+
+def _dgsalr_kernel(re_ref, x_ref, *refs, cap_t: int, n_experts: int,
+                   k_steps: int, adapters: bool):
+    (words_ref, values_ref), a_ref, b_ref, o_ref, acc_ref, u_ref = \
+        _split_refs(refs, 2, adapters)
+    ni, e, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    _dg_zero(acc_ref, e, k)
+    mask = (re_ref[...] == e).astype(x_ref.dtype)[:, None]
+    x = x_ref[...] * mask
+    bk = x.shape[1]
+    _dg_accum_lora(x, a_ref, u_ref, ni, e, k)
+    wpt = words_ref.shape[-1]
+    w_tile = _decode_bitmap(words_ref[...].reshape(bk, wpt),
+                            values_ref[...].reshape(bk, cap_t),
+                            cap_t, x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    _dg_store(o_ref, acc_ref, u_ref, b_ref, mask, e, n_experts, k, k_steps)
+
+
+def _dgqsalr_kernel(re_ref, x_ref, *refs, cap_t: int, n_experts: int,
+                    k_steps: int, adapters: bool):
+    (words_ref, codes_ref, scales_ref), a_ref, b_ref, o_ref, acc_ref, \
+        u_ref = _split_refs(refs, 3, adapters)
+    ni, e, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    _dg_zero(acc_ref, e, k)
+    mask = (re_ref[...] == e).astype(x_ref.dtype)[:, None]
+    x = x_ref[...] * mask
+    bk = x.shape[1]
+    _dg_accum_lora(x, a_ref, u_ref, ni, e, k)
+    vals = _dequant_nf4(codes_ref[...].reshape(bk, cap_t // 2),
+                        scales_ref[...].reshape(bk, 1), cap_t)
+    wpt = words_ref.shape[-1]
+    w_tile = _decode_bitmap(words_ref[...].reshape(bk, wpt), vals,
+                            cap_t, x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    _dg_store(o_ref, acc_ref, u_ref, b_ref, mask, e, n_experts, k, k_steps)
+
+
+def _dgnm_kernel(re_ref, x_ref, *refs, n: int, m: int, n_experts: int,
+                 k_steps: int, adapters: bool):
+    (bits_ref, vals_ref), a_ref, b_ref, o_ref, acc_ref, u_ref = \
+        _split_refs(refs, 2, adapters)
+    ni, e, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    _dg_zero(acc_ref, e, k)
+    mask = (re_ref[...] == e).astype(x_ref.dtype)[:, None]
+    x = x_ref[...] * mask
+    bk = x.shape[1]
+    _dg_accum_lora(x, a_ref, u_ref, ni, e, k)
+    groups = bits_ref.shape[-1]
+    w_tile = _decode_nm(bits_ref[...].reshape(bk, groups),
+                        vals_ref[...].reshape(bk, groups * n), n, m, x.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    _dg_store(o_ref, acc_ref, u_ref, b_ref, mask, e, n_experts, k, k_steps)
+
+
+def _decode_call(kernel, x, row_expert, arrays, base_specs, *,
+                 n_experts: int, out_cols: int, tile_n: int, a_cat, b_cat,
+                 block_k: int, interpret: bool):
+    """Shared plumbing for the decode grid: grid (n-tiles, experts,
+    k-steps), one M tile holding every assignment row, ``row_expert``
+    as the scalar-prefetch mask source.  Expert-stacked BlockSpecs index
+    the expert grid dimension directly — no tile->expert indirection."""
+    mrows, kdim = x.shape
+    assert kdim % block_k == 0
+    assert row_expert.shape == (mrows,), (
+        "row_expert must map every assignment row to its expert "
+        "(-1 for padding rows)")
+    adapters = a_cat is not None
+    k_steps = kdim // block_k
+    grid = (out_cols // tile_n, n_experts, k_steps)
+    in_specs = [pl.BlockSpec((mrows, block_k),
+                             lambda ni, e, ki, re: (0, ki)),
+                *base_specs]
+    scratch = [pltpu.VMEM((mrows, tile_n), jnp.float32)]
+    if adapters:
+        r = a_cat.shape[-1]
+        arrays = (*arrays, a_cat, b_cat)
+        in_specs += [pl.BlockSpec((1, block_k, r),
+                                  lambda ni, e, ki, re: (e, ki, 0)),
+                     pl.BlockSpec((1, r, tile_n),
+                                  lambda ni, e, ki, re: (e, 0, ni))]
+        scratch.append(pltpu.VMEM((mrows, r), jnp.float32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((mrows, tile_n),
+                               lambda ni, e, ki, re: (0, ni)),
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        functools.partial(kernel, adapters=adapters),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mrows, out_cols), x.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(row_expert, x, *arrays)
+
+
+def decode_dense_spmm_pallas(x: jax.Array, row_expert: jax.Array,
+                             w: jax.Array, a_cat: jax.Array,
+                             b_cat: jax.Array, *,
+                             block_n: int = 128, block_k: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """Decode-grid op over a dense expert stack.
+
+    x: (M, K) assignment rows (token-major, M tiny); w: (E, K, N);
+    row_expert: (M,) int32, -1 on padding rows."""
+    e, kdim, ncols = w.shape
+    assert x.shape[1] == kdim and ncols % block_n == 0
+    assert (b_cat is None) == (a_cat is None)
+    if a_cat is not None:
+        assert b_cat.shape == (e, a_cat.shape[-1], ncols)
+    kernel = functools.partial(_dgdense_kernel, n_experts=e,
+                               k_steps=kdim // block_k)
+    base_specs = [pl.BlockSpec((1, block_k, block_n),
+                               lambda ni, ee, ki, re: (ee, ki, ni))]
+    return _decode_call(kernel, x, row_expert, (w,), base_specs,
+                        n_experts=e, out_cols=ncols, tile_n=block_n,
+                        a_cat=a_cat, b_cat=b_cat, block_k=block_k,
+                        interpret=interpret)
+
+
+def decode_salr_spmm_pallas(x: jax.Array, row_expert: jax.Array,
+                            words: jax.Array, values: jax.Array,
+                            a_cat: jax.Array, b_cat: jax.Array, *,
+                            cols: int, cap_t: int, block_k: int = 128,
+                            interpret: bool = True) -> jax.Array:
+    """Decode-grid SALR op over expert-stacked tiled bitmaps (same
+    operand layout as grouped_salr_spmm_pallas)."""
+    e, kdim, n_tiles, wpt = words.shape
+    tile = wpt * 32
+    assert x.shape[1] == kdim and n_tiles * tile == cols
+    assert values.shape == (e, kdim, n_tiles, cap_t)
+    if a_cat is not None:
+        assert b_cat.shape == (e, a_cat.shape[-1], cols)
+    kernel = functools.partial(_dgsalr_kernel, cap_t=cap_t, n_experts=e,
+                               k_steps=kdim // block_k)
+    base_specs = [
+        pl.BlockSpec((1, block_k, 1, wpt),
+                     lambda ni, ee, ki, re: (ee, ki, ni, 0)),
+        pl.BlockSpec((1, block_k, 1, cap_t),
+                     lambda ni, ee, ki, re: (ee, ki, ni, 0)),
+    ]
+    return _decode_call(kernel, x, row_expert, (words, values), base_specs,
+                        n_experts=e, out_cols=cols, tile_n=tile,
+                        a_cat=a_cat, b_cat=b_cat, block_k=block_k,
+                        interpret=interpret)
+
+
+def decode_qsalr_spmm_pallas(x: jax.Array, row_expert: jax.Array,
+                             words: jax.Array, codes: jax.Array,
+                             scales: jax.Array, a_cat: jax.Array,
+                             b_cat: jax.Array, *, cols: int, cap_t: int,
+                             block_k: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """Decode-grid QSALR op: NF4 dequant + bitmap decode in-kernel."""
+    e, kdim, n_tiles, wpt = words.shape
+    tile = wpt * 32
+    assert x.shape[1] == kdim and n_tiles * tile == cols
+    assert codes.shape == (e, kdim, n_tiles, cap_t // 2)
+    assert scales.shape == (e, kdim, n_tiles, 1)
+    kernel = functools.partial(_dgqsalr_kernel, cap_t=cap_t, n_experts=e,
+                               k_steps=kdim // block_k)
+    base_specs = [
+        pl.BlockSpec((1, block_k, 1, wpt),
+                     lambda ni, ee, ki, re: (ee, ki, ni, 0)),
+        pl.BlockSpec((1, block_k, 1, cap_t // 2),
+                     lambda ni, ee, ki, re: (ee, ki, ni, 0)),
+        pl.BlockSpec((1, block_k, 1, 1),
+                     lambda ni, ee, ki, re: (ee, ki, ni, 0)),
+    ]
+    return _decode_call(kernel, x, row_expert, (words, codes, scales),
+                        base_specs, n_experts=e, out_cols=cols, tile_n=tile,
+                        a_cat=a_cat, b_cat=b_cat, block_k=block_k,
+                        interpret=interpret)
+
+
+def decode_nm_spmm_pallas(x: jax.Array, row_expert: jax.Array,
+                          group_bits: jax.Array, values: jax.Array,
+                          a_cat: jax.Array, b_cat: jax.Array, *,
+                          n: int = 2, m: int = 4, block_n: int = 128,
+                          block_k: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """Decode-grid N:M op with the select-network decode per expert."""
+    e, kdim, ngroups = group_bits.shape
+    ncols = ngroups * m
+    assert x.shape[1] == kdim and ncols % block_n == 0
+    assert values.shape == (e, kdim, ngroups * n)
+    if a_cat is not None:
+        assert b_cat.shape == (e, a_cat.shape[-1], ncols)
+    gn = block_n // m
+    kernel = functools.partial(_dgnm_kernel, n=n, m=m, n_experts=e,
+                               k_steps=kdim // block_k)
+    base_specs = [
+        pl.BlockSpec((1, block_k, gn),
+                     lambda ni, ee, ki, re: (ee, ki, ni)),
+        pl.BlockSpec((1, block_k, gn * n),
+                     lambda ni, ee, ki, re: (ee, ki, ni)),
+    ]
+    return _decode_call(kernel, x, row_expert, (group_bits, values),
+                        base_specs, n_experts=e, out_cols=ncols,
+                        tile_n=block_n, a_cat=a_cat, b_cat=b_cat,
+                        block_k=block_k, interpret=interpret)

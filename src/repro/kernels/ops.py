@@ -20,7 +20,11 @@ from repro.core import bitmap as bm
 from repro.core.quant import quantize_nf4
 from repro.kernels.bitmap_spmm import bitmap_spmm_pallas
 from repro.kernels.fused_lora import fused_lora_pallas
-from repro.kernels.grouped_spmm import (grouped_dense_spmm_pallas,
+from repro.kernels.grouped_spmm import (decode_dense_spmm_pallas,
+                                        decode_nm_spmm_pallas,
+                                        decode_qsalr_spmm_pallas,
+                                        decode_salr_spmm_pallas,
+                                        grouped_dense_spmm_pallas,
                                         grouped_nm_spmm_pallas,
                                         grouped_qsalr_spmm_pallas,
                                         grouped_salr_spmm_pallas)
@@ -59,11 +63,17 @@ def _divisor_block(dim: int, block: int, mult: int = 1) -> int:
 
 
 def _batched_matmul(*static_argnames):
-    """Decorator unifying the five wrappers' boilerplate: jit with the
-    given static names, flatten leading batch dims of x, pad M up to the
-    block multiple, run the kernel body on the 2D view, unpad."""
+    """Decorator unifying the wrappers' boilerplate: jit with the given
+    static names, flatten leading batch dims of x, pad M up to the block
+    multiple (each body's own ``block_m`` default — 128 for the tiled
+    GEMMs, 8 for the decode grid's single M tile), run the kernel body
+    on the 2D view, unpad."""
+    import inspect
+
     def deco(body):
-        def op(x, *args, block_m: int = 128, **kw):
+        default_m = inspect.signature(body).parameters["block_m"].default
+
+        def op(x, *args, block_m: int = default_m, **kw):
             x2, lead, m = _flatten_pad(x, block_m)
             y = body(x2, *args, block_m=block_m, **kw)
             return _unflatten(y, lead, m)
@@ -236,6 +246,96 @@ def grouped_nm_matmul(x, tile_expert: jax.Array, nmw: bm.NMWeight,
                                   nmw.values, a3, b3, n=nmw.n, m=nmw.m,
                                   block_m=block_m, block_n=bn, block_k=bk,
                                   interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# decode-specialized grid (small token counts; kernels/grouped_spmm.py)
+# ---------------------------------------------------------------------------
+# ``row_expert`` maps every assignment row to its expert (-1 on padding
+# rows); the decode grid keeps rows in plain assignment order (no
+# grouping).  The decorator pads x's rows to the block_m multiple, and
+# _pad_row_expert grows the map to match (-1 rows never match an expert
+# step, so pad rows emit exact zeros).
+
+def _pad_row_expert(row_expert: jax.Array, mrows: int) -> jax.Array:
+    pad = mrows - row_expert.shape[0]
+    assert pad >= 0, (
+        f"row_expert has {row_expert.shape[0]} rows but x only {mrows}")
+    if pad:
+        row_expert = jnp.pad(row_expert, (0, pad), constant_values=-1)
+    return row_expert
+
+
+@_batched_matmul("block_n", "block_k", "interpret")
+def decode_dense_matmul(x, row_expert: jax.Array, w: jax.Array,
+                        a_cat=None, b_cat=None, *,
+                        block_m: int = 8, block_n: int = 128,
+                        block_k: int = 128,
+                        interpret: bool = _INTERPRET) -> jax.Array:
+    """Decode-grid y[t] = x[t] @ w[e(t)] (+ adapters) over assignment
+    rows.  w: (E, K, N) dense expert stack; row_expert: (M,) int32."""
+    e, kdim, ncols = w.shape
+    bk = _divisor_block(kdim, block_k)
+    bn = _divisor_block(ncols, block_n)
+    a3, b3 = _grouped_adapters(a_cat, b_cat, ncols)
+    return decode_dense_spmm_pallas(x, _pad_row_expert(row_expert,
+                                                       x.shape[0]),
+                                    w, a3, b3, block_n=bn, block_k=bk,
+                                    interpret=interpret)
+
+
+@_batched_matmul("block_k", "interpret")
+def decode_salr_matmul(x, row_expert: jax.Array,
+                       tbw: bm.TiledBitmapWeight, a_cat, b_cat, *,
+                       block_m: int = 8, block_k: int = 128,
+                       interpret: bool = _INTERPRET) -> jax.Array:
+    """Decode-grid SALR op over an expert-stacked tiled bitmap."""
+    kdim = tbw.words.shape[1]
+    cols = tbw.words.shape[2] * tbw.words.shape[3] * 32
+    bk = _divisor_block(kdim, block_k)
+    a3, b3 = _grouped_adapters(a_cat, b_cat, cols)
+    return decode_salr_spmm_pallas(x, _pad_row_expert(row_expert,
+                                                      x.shape[0]),
+                                   tbw.words, tbw.values,
+                                   a3, b3, cols=cols, cap_t=tbw.cap_t,
+                                   block_k=bk, interpret=interpret)
+
+
+@_batched_matmul("block_k", "interpret")
+def decode_qsalr_matmul(x, row_expert: jax.Array,
+                        qtbw: bm.QTiledBitmapWeight, a_cat, b_cat, *,
+                        block_m: int = 8, block_k: int = 128,
+                        interpret: bool = _INTERPRET) -> jax.Array:
+    """Decode-grid QSALR op (NF4 dequant in-kernel)."""
+    kdim = qtbw.words.shape[1]
+    cols = qtbw.words.shape[2] * qtbw.words.shape[3] * 32
+    bk = _divisor_block(kdim, block_k)
+    a3, b3 = _grouped_adapters(a_cat, b_cat, cols)
+    return decode_qsalr_spmm_pallas(x, _pad_row_expert(row_expert,
+                                                       x.shape[0]),
+                                    qtbw.words, qtbw.codes,
+                                    qtbw.scales, a3, b3, cols=cols,
+                                    cap_t=qtbw.cap_t, block_k=bk,
+                                    interpret=interpret)
+
+
+@_batched_matmul("block_n", "block_k", "interpret")
+def decode_nm_matmul(x, row_expert: jax.Array, nmw: bm.NMWeight,
+                     a_cat=None, b_cat=None, *,
+                     block_m: int = 8, block_n: int = 128,
+                     block_k: int = 128,
+                     interpret: bool = _INTERPRET) -> jax.Array:
+    """Decode-grid N:M op over an expert-stacked NMWeight."""
+    kdim = nmw.group_bits.shape[1]
+    ncols = nmw.group_bits.shape[2] * nmw.m
+    bk = _divisor_block(kdim, block_k)
+    bn = _divisor_block(ncols, block_n, mult=nmw.m)
+    a3, b3 = _grouped_adapters(a_cat, b_cat, ncols)
+    return decode_nm_spmm_pallas(x, _pad_row_expert(row_expert,
+                                                    x.shape[0]),
+                                 nmw.group_bits, nmw.values,
+                                 a3, b3, n=nmw.n, m=nmw.m, block_n=bn,
+                                 block_k=bk, interpret=interpret)
 
 
 def nf4_encode_2d(w: jax.Array):

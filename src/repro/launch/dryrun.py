@@ -26,10 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-import contextlib
-
 from repro import configs
-from repro.core.salr import force_backend
+from repro.core import execplan
 from repro.distributed import sharding as shard
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
@@ -52,22 +50,16 @@ TRAIN_MICROBATCHES = {
 }
 
 
-def _analysis_backend(kernel_plan_cell: bool):
-    """Reference-path tracing scope for kernel-plan serving cells (see
-    build_cell docstring); a no-op everywhere else."""
-    return (force_backend("reference") if kernel_plan_cell
-            else contextlib.nullcontext())
-
-
 def build_cell(cfg, shape, mesh, *, seq_shard: bool, microbatches: int,
                loss_chunk: int):
     """Lower + compile one cell; returns (record, compiled).
 
-    Serving cells on the kernel execution plan are LOWERED under
-    ``force_backend("reference")``: interpret-mode Pallas unrolls the
-    decode into HLO loops whose byte counts swamp the roofline, so the
-    analyzable program is the dense-reference path, and the kernel
-    plan's compressed-weight traffic is recorded as the adjusted
+    Serving cells on the kernel execution plan are LOWERED with a
+    reference-plan step (``make_*_step(plan=reference)``): interpret-mode
+    Pallas unrolls the decode into HLO loops whose byte counts swamp the
+    roofline, so the analyzable program is the dense-reference path, and
+    the kernel plan's compressed-weight traffic — with the per-phase MoE
+    route's FLOPs accounting — is recorded as the adjusted
     ``roofline_kernel_plan`` on top of it (DESIGN.md §5).  On a real TPU
     the kernel custom-call's operand bytes could be read off the HLO
     directly instead.
@@ -76,8 +68,19 @@ def build_cell(cfg, shape, mesh, *, seq_shard: bool, microbatches: int,
     opt = AdamW(lr=1e-4, clip_norm=1.0)
     ins = S.input_specs(cfg, shape)
 
+    # the cell's production plan, resolved with the cell's real token
+    # count so the MoE crossover picks the route that phase would run
+    cell_tokens = (shape.global_batch if shape.kind == "decode"
+                   else shape.global_batch * shape.seq_len)
+    plan = execplan.resolve_plan(cfg,
+                                 phase_tokens={shape.kind: cell_tokens})
     kernel_plan_cell = (shape.kind != "train" and cfg.salr.enabled
-                        and cfg.salr.backend == "kernel")
+                        and plan.linear_backend(shape.kind) == "kernel")
+    # interpret-mode Pallas unrolls decode loops into HLO that swamps the
+    # roofline, so kernel-plan serving cells LOWER the reference plan and
+    # the kernel plan's traffic is recorded as an adjustment below
+    analysis_plan = (execplan.resolve_plan(cfg, backend="reference")
+                     if kernel_plan_cell else plan)
 
     if seq_shard:
         shard.set_activation_sharding(
@@ -103,22 +106,20 @@ def build_cell(cfg, shape, mesh, *, seq_shard: bool, microbatches: int,
         params_abs = S.abstract_params(cfg)
         params_sh = shard.param_shardings(mesh, params_abs, fsdp=True)
         batch_sh = shard.batch_sharding(mesh, ins["batch"])
-        step = make_prefill_step(cfg)
+        step = make_prefill_step(cfg, plan=analysis_plan)
         jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
-        with _analysis_backend(kernel_plan_cell):
-            lowered = jitted.lower(params_abs, ins["batch"])
+        lowered = jitted.lower(params_abs, ins["batch"])
     else:  # decode
         params_abs = S.abstract_params(cfg)
         params_sh = shard.param_shardings(mesh, params_abs, fsdp=True)
         cache_sh = shard.cache_sharding(mesh, ins["cache"])
         tok_sh = shard.batch_sharding(mesh, ins["tokens"])
         repl = NamedSharding(mesh, P())
-        step = make_decode_step(cfg)
+        step = make_decode_step(cfg, plan=analysis_plan)
         jitted = jax.jit(step, in_shardings=(params_sh, cache_sh, tok_sh,
                                              repl))
-        with _analysis_backend(kernel_plan_cell):
-            lowered = jitted.lower(params_abs, ins["cache"], ins["tokens"],
-                                   ins["pos"])
+        lowered = jitted.lower(params_abs, ins["cache"], ins["tokens"],
+                               ins["pos"])
 
     t0 = time.time()
     compiled = lowered.compile()
@@ -139,24 +140,29 @@ def build_cell(cfg, shape, mesh, *, seq_shard: bool, microbatches: int,
     if kernel_plan_cell:
         # params_abs is in scope: kernel_plan_cell implies a serving kind
         dense_b, enc_b = roof.salr_weight_bytes(params_abs)
-        # the grouped MoE path executes k-way (not E-way) expert flops:
-        # subtract the analytic delta from the reference-path HLO flops
-        # and report model_flops on the same k-way basis (DESIGN.md §5)
-        kway = S.model_flops(cfg, shape, moe_backend="kernel")
-        flops_delta = (S.model_flops(cfg, shape) - kway) / chips
+        # the flops accounting follows the plan's PER-PHASE MoE route:
+        # only the grouped path executes k-way expert flops; the decode
+        # grid and the dense oracle run E-way (DESIGN.md §5)
+        moe_route = plan.moe_route(shape.kind)
+        routed = S.model_flops(cfg, shape, moe_backend=moe_route)
+        flops_delta = (S.model_flops(cfg, shape) - routed) / chips
         adj = roof.with_kernel_weight_traffic(terms, dense_b / chips,
                                               enc_b / chips,
                                               flops_delta=flops_delta,
-                                              model_flops=kway)
+                                              model_flops=routed)
         kernel_roofline = {
             **adj.as_dict(),
             "salr_dense_equiv_bytes_global": dense_b,
             "salr_encoded_bytes_global": enc_b,
-            "moe_flops_accounting": "k-way (grouped kernel path)",
+            "moe_route": moe_route,
+            "moe_flops_accounting": (
+                "k-way (grouped kernel path)" if moe_route == "grouped"
+                else f"E-way ({moe_route} path)"),
         }
 
     record = {
         "arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+        "plan": plan.describe(),
         "mesh": "x".join(map(str, mesh.devices.shape)),
         "axes": list(mesh.axis_names),
         "chips": chips,
@@ -217,6 +223,73 @@ def iter_cells(archs=None):
             yield arch, shape.name
 
 
+# ----------------------------------------------------- plan snapshot / tune
+
+# gated arch/token-count policy lives next to the resolver so the test
+# mirror (tests/test_plan.py) can import it without this module's
+# XLA_FLAGS side effect
+PLAN_SNAPSHOT_ARCHS = execplan.PLAN_SNAPSHOT_ARCHS
+PLAN_SNAPSHOT_TOKENS = execplan.PLAN_SNAPSHOT_TOKENS
+
+
+def plan_snapshot() -> dict:
+    """Resolved plans for the gated archs — the committed golden
+    (experiments/baselines/PLAN_snapshot.json) diffs against this, so a
+    silent route regression (resolver change, crossover-table edit)
+    fails CI rather than shipping a different kernel route."""
+    out = {}
+    for arch in PLAN_SNAPSHOT_ARCHS:
+        cfg = configs.get(arch)
+        out[arch] = execplan.resolve_plan(
+            cfg, phase_tokens=dict(PLAN_SNAPSHOT_TOKENS)).describe()
+    return out
+
+
+def run_plan_snapshot(path: str, check: bool) -> None:
+    snap = plan_snapshot()
+    if check:
+        with open(path) as f:
+            golden = json.load(f)
+        if snap != golden:
+            print("PLAN SNAPSHOT MISMATCH (resolved vs committed golden):")
+            print("  resolved:", json.dumps(snap, indent=1, sort_keys=True))
+            print("  golden:  ", json.dumps(golden, indent=1,
+                                            sort_keys=True))
+            raise SystemExit(1)
+        print(f"plan snapshot matches {path} "
+              f"({', '.join(PLAN_SNAPSHOT_ARCHS)})")
+        return
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote plan snapshot {path}")
+
+
+def run_autotune(out_dir: str, arch: str = "granite_moe_1b_a400m") -> None:
+    """Re-measure the MoE route crossover on THIS machine and record the
+    fitted table (the committed DEFAULT_CROSSOVER stays the baseline;
+    pass the written table to resolve_plan(crossover=MoECrossover.load(..))
+    or compare it against the default before promoting it)."""
+    cfg = configs.get(arch, smoke=True)
+    table, meas = execplan.autotune_crossover(cfg)
+    print(f"measured apply_moe routes on {arch} (smoke), us per call:")
+    for n in sorted(meas):
+        best = min(meas[n], key=meas[n].get)
+        line = "  ".join(f"{r}={meas[n][r]:8.0f}" for r in sorted(meas[n]))
+        print(f"  N={n:5d}  {line}  -> best={best}")
+    print(f"fitted table: {table.as_dict()}")
+    print(f"committed default: {execplan.DEFAULT_CROSSOVER.as_dict()}")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "moe_crossover.json")
+    with open(path, "w") as f:
+        json.dump({**table.as_dict(),
+                   "measurements_us": {str(n): meas[n] for n in meas},
+                   "arch": arch}, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -232,7 +305,26 @@ def main() -> None:
                     help="int8 KV cache (beyond-paper decode optimization)")
     ap.add_argument("--tag", default="")
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--plan-snapshot", metavar="PATH",
+                    help="dump the resolved execution plans for the gated "
+                         "archs to PATH and exit")
+    ap.add_argument("--check-plan-snapshot", metavar="PATH",
+                    help="diff the resolved plans against the committed "
+                         "golden at PATH; exit 1 on mismatch")
+    ap.add_argument("--autotune-moe-crossover", action="store_true",
+                    help="re-measure the MoE route crossover on this "
+                         "machine and write <out>/moe_crossover.json")
     args = ap.parse_args()
+
+    if args.plan_snapshot:
+        run_plan_snapshot(args.plan_snapshot, check=False)
+        return
+    if args.check_plan_snapshot:
+        run_plan_snapshot(args.check_plan_snapshot, check=True)
+        return
+    if args.autotune_moe_crossover:
+        run_autotune(args.out)
+        return
 
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     cells = (list(iter_cells()) if args.all

@@ -37,14 +37,18 @@ sleeping).  ``reset()`` clears ALL scheduling state and every metric
 accumulator -- warm reruns start from a clean clock while keeping the
 compiled callables and cache buffers.
 
-All forwards run the layer execution plans under
-``salr.force_backend(backend)`` — with the default ``"kernel"`` every
-compressed linear dispatches to its fused Pallas op exactly as in the
-batch serve loop, and MoE layers take the ragged grouped-GEMM path
-(k-way expert FLOPs, models/moe.py); routing stays per-token, so the
-grouped dispatch preserves the bitwise co-batching independence the
-slot batch relies on.  ``metrics()["moe_route"]`` records the dispatch
-for MoE archs.
+All forwards run a phase-aware execution plan resolved ONCE at engine
+construction (``core.execplan.resolve_plan``): the prefill ticks run the
+plan's prefill routes, the decode ticks its decode routes.  With the
+default ``backend="kernel"`` every compressed linear dispatches to its
+fused Pallas op, and MoE layers take the kernel route the plan's
+crossover table selects for each phase's token count — grouped ragged
+GEMM at prefill scale, the decode-specialized masked grid (or the dense
+oracle) at slot-batch scale.  The kernel MoE routes are bitwise
+identical per token (models/moe.py), so a phase split cannot perturb the
+co-batching independence the slot batch relies on.  Per-phase routes are
+reported truthfully: ``metrics()["moe_route_prefill"]`` /
+``["moe_route_decode"]`` for MoE archs, plus a ``plan`` echo.
 """
 from __future__ import annotations
 
@@ -58,8 +62,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import execplan
 from repro.models import model as M
-from repro.models.moe import moe_backend_route as _moe_route
+from repro.models.moe import moe_route_description as _moe_desc
 from repro.train.step import make_decode_step, make_prefill_step
 
 
@@ -72,7 +77,11 @@ class EngineConfig:
     max_ctx: int = 64             # per-slot cache capacity (prefix + prompt
     #                               + generated positions)
     buckets: tuple = ()           # prefill JIT lengths; () -> powers of two
-    backend: str = "kernel"       # SALR execution plan for all forwards
+    backend: str = "kernel"       # execution-plan backend for all forwards
+    # resolved ExecutionPlan override; None -> resolve_plan(cfg,
+    # backend=backend, phase_tokens={prefill: largest bucket,
+    # decode: n_slots}) at engine construction
+    plan: Optional[execplan.ExecutionPlan] = None
     max_prefills_per_tick: int = 1
     pad_id: int = 0
 
@@ -165,8 +174,17 @@ class ContinuousBatchingEngine:
             ecfg.buckets or default_buckets(ecfg.max_ctx - self.prefix)))
         self._time = time_fn
 
-        prefill = make_prefill_step(cfg, backend=ecfg.backend)
-        decode = make_decode_step(cfg, backend=ecfg.backend)
+        # ONE plan resolution per engine: prefill ticks run at bucket
+        # scale (batch 1 x largest bucket bounds the crossover lookup),
+        # decode ticks advance n_slots tokens.  greedy_generate parity
+        # references must be handed THIS plan so both sides take
+        # identical routes (launch/serve.py).
+        self.plan = ecfg.plan or execplan.resolve_plan(
+            cfg, backend=ecfg.backend,
+            phase_tokens={"prefill": max(self.buckets),
+                          "decode": ecfg.n_slots})
+        prefill = make_prefill_step(cfg, plan=self.plan)
+        decode = make_decode_step(cfg, plan=self.plan)
 
         def prefill_fn(params, tokens, logit_index, frontend):
             logits, cache = prefill(params, {"tokens": tokens,
@@ -348,8 +366,16 @@ class ContinuousBatchingEngine:
             "n_decode_ticks": self.n_decode_ticks,
             "n_slots": self.ecfg.n_slots,
             "buckets": self.buckets,
-            "backend": self.ecfg.backend,
-            **({"moe_route": _moe_route(self.cfg, self.ecfg.backend,
-                                        self.params)}
+            # an explicit EngineConfig.plan supersedes the backend knob;
+            # echoing the unused knob would misreport the run
+            "backend": (self.ecfg.backend if self.ecfg.plan is None
+                        else "custom-plan"),
+            "plan": self.plan.describe(),
+            **({"moe_route_prefill": _moe_desc(self.cfg,
+                                               self.plan.route("prefill"),
+                                               self.params),
+                "moe_route_decode": _moe_desc(self.cfg,
+                                              self.plan.route("decode"),
+                                              self.params)}
                if self.cfg.n_experts else {}),
         }

@@ -12,13 +12,17 @@ continuous engine's per-request tokens exactly match ``greedy_generate``
 on the same prompts (bitwise-identical decode is a design property of
 the slot masking, not a tolerance).
 
-The forward runs the layer's execution plan (DESIGN.md §2): with the
-default ``--backend kernel`` every compressed linear dispatches to the
-fused Pallas op for its base representation (bitmap -> ops.salr_matmul,
-bitmap_nf4 -> ops.qsalr_matmul, nm -> ops.nm_matmul + ops.lora_matmul).
-``--backend both`` serves the stream once per backend and reports tok/s
-for each, so the kernel-vs-reference serving delta is measured on the
-actual generation path rather than a kernel microbenchmark.
+The forward runs a phase-aware execution plan resolved once per stream
+(core/execplan.py): with the default ``--backend kernel`` every
+compressed linear dispatches to the fused Pallas op for its base
+representation (bitmap -> ops.salr_matmul, bitmap_nf4 ->
+ops.qsalr_matmul, nm -> ops.nm_matmul + ops.lora_matmul), and the MoE
+expert route is selected PER PHASE by the plan's crossover table —
+the prefill and decode routes are logged separately because they can
+legitimately diverge.  ``--backend both`` serves the stream once per
+backend and reports tok/s for each, so the kernel-vs-reference serving
+delta is measured on the actual generation path rather than a kernel
+microbenchmark.
 
 Example (CPU smoke scale):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm_135m --smoke \
@@ -36,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import salr
+from repro.core import execplan
 from repro.launch.engine import (ContinuousBatchingEngine, EngineConfig,
                                  Request)
 from repro.models import model as M
@@ -51,13 +55,19 @@ _KERNEL_ROUTES = {
 }
 
 
-def _route(cfg, backend: str, params=None) -> str:
-    route = (_KERNEL_ROUTES[cfg.salr.method] if backend == "kernel"
-             else "dense decode + GEMM")
-    if cfg.n_experts:
-        from repro.models.moe import moe_backend_route
-        route += f"; moe={moe_backend_route(cfg, backend, params)}"
-    return route
+def _route(cfg, plan, params=None) -> str:
+    """Per-phase route line: prefill and decode report separately (a
+    single label is no longer honest once the plan splits them)."""
+    parts = []
+    for phase in ("prefill", "decode"):
+        r = plan.route(phase)
+        desc = (_KERNEL_ROUTES[cfg.salr.method] if r.linear == "kernel"
+                else "dense decode + GEMM")
+        if cfg.n_experts:
+            from repro.models.moe import moe_route_description
+            desc += f"; moe={moe_route_description(cfg, r, params)}"
+        parts.append(f"route[{phase}]={desc}")
+    return "  ".join(parts)
 
 
 def _request_prompts(cfg, args, key) -> tuple:
@@ -82,7 +92,12 @@ def serve_stream(cfg, params, backend: str, args, key) -> float:
     """Batch engine: run the request stream; returns tok/s.  Consumes
     the same ``_request_prompts`` rows as the continuous engine, so the
     two engines (and the parity check) serve identical workloads."""
-    print(f"engine=batch backend={backend} route={_route(cfg, backend, params)}")
+    # the batch loop prefills at prompt_len and decodes args.batch rows
+    plan = execplan.resolve_plan(
+        cfg, backend=backend,
+        phase_tokens={"prefill": args.batch * args.prompt_len,
+                      "decode": args.batch})
+    print(f"engine=batch backend={backend} {_route(cfg, plan, params)}")
     # >= window: greedy_generate's prefill ring is always `window` wide
     # and must fit the decode-cache skeleton (same clamp as continuous)
     ctx = max(args.prompt_len + args.gen + (cfg.frontend_len or 0),
@@ -90,9 +105,8 @@ def serve_stream(cfg, params, backend: str, args, key) -> float:
     prompts, frontends = _request_prompts(cfg, args, key)
 
     def gen_fn(p, prompt, fe):
-        with salr.force_backend(backend):
-            return greedy_generate(p, cfg, prompt, n_steps=args.gen,
-                                   ctx=ctx, frontend=fe)
+        return greedy_generate(p, cfg, prompt, n_steps=args.gen,
+                               ctx=ctx, frontend=fe, plan=plan)
 
     gen = jax.jit(gen_fn)
     total_tok = 0
@@ -123,9 +137,9 @@ def serve_continuous(cfg, params, backend: str, args, key,
     metric accumulator and the warm pass measures steady-state serving.
     Parity (``--engine both``) checks the warm results bitwise against
     per-request ``greedy_generate`` for EVERY arch — MoE routing is
-    per-token and stateful mixers prefill masked, so no arch is exempt."""
-    print(f"engine=continuous backend={backend} "
-          f"route={_route(cfg, backend, params)}")
+    per-token and stateful mixers prefill masked, so no arch is exempt.
+    The parity reference runs under THE ENGINE'S resolved plan, so both
+    sides take identical per-phase routes."""
     prompts, frontends = _request_prompts(cfg, args, key)
     prefix = cfg.decode_prefix_len
     n_slots = max(2, args.batch)
@@ -133,6 +147,8 @@ def serve_continuous(cfg, params, backend: str, args, key,
     eng = ContinuousBatchingEngine(
         cfg, params, EngineConfig(n_slots=n_slots, max_ctx=max_ctx,
                                   backend=backend))
+    print(f"engine=continuous backend={backend} "
+          f"{_route(cfg, eng.plan, params)}")
     reqs = [Request(rid=i, prompt=tuple(int(t) for t in p),
                     max_new_tokens=args.gen, arrival=0.0, frontend=fe)
             for i, (p, fe) in enumerate(zip(prompts, frontends))]
@@ -151,14 +167,14 @@ def serve_continuous(cfg, params, backend: str, args, key,
 
     if check_parity:
         mismatches = 0
-        with salr.force_backend(backend):
-            for i, (p, fe) in enumerate(zip(prompts, frontends)):
-                ref = greedy_generate(
-                    params, cfg, jnp.asarray(p)[None, :],
-                    n_steps=args.gen, ctx=max_ctx,
-                    frontend=None if fe is None else jnp.asarray(fe)[None])
-                if list(np.asarray(ref[0])) != results[i].tokens:
-                    mismatches += 1
+        for i, (p, fe) in enumerate(zip(prompts, frontends)):
+            ref = greedy_generate(
+                params, cfg, jnp.asarray(p)[None, :],
+                n_steps=args.gen, ctx=max_ctx,
+                frontend=None if fe is None else jnp.asarray(fe)[None],
+                plan=eng.plan)
+            if list(np.asarray(ref[0])) != results[i].tokens:
+                mismatches += 1
         if mismatches:
             print(f"PARITY FAIL: {mismatches}/{len(prompts)} requests "
                   "diverge from greedy_generate", file=sys.stderr)
@@ -192,7 +208,7 @@ def main(argv=None) -> None:
     cfg = cfg.with_(salr=dataclasses.replace(cfg.salr, backend=emit))
     key = jax.random.PRNGKey(args.seed)
     print(f"initializing {cfg.name} (SALR {cfg.salr.method}, "
-          f"p={cfg.salr.sparsity}, plan={cfg.salr.backend})")
+          f"p={cfg.salr.sparsity}, storage={emit})")
     params = M.init_params(key, cfg)
 
     backends = (["kernel", "reference"] if args.backend == "both"

@@ -117,21 +117,27 @@ def model_flops(cfg: ArchConfig, shape: ShapeSpec,
     per token (+ attention KV reads are bytes, not flops) for decode.
 
     N is the *executed* parameter count, which depends on the MoE
-    execution backend (models/moe.py):
+    execution route (models/moe.py; ``moe_backend`` accepts both the
+    legacy backend spelling and the plan route names):
 
-      * ``moe_backend="reference"`` — the dense masked einsum runs every
-        expert over every token and zeroes non-selected outputs in the
-        combine, so E-way expert FLOPs are really spent: N = "total".
-      * ``moe_backend="kernel"`` — the ragged grouped-GEMM path computes
-        only the selected (token, expert) pairs, so only the paper-style
-        k-way expert FLOPs execute: N = "active" (routed experts per
-        token + shared experts).  Group padding (≤ block_m-1 zero rows
-        per non-empty expert) is not modeled; it vanishes against N*D at
-        the shapes the roofline covers.
+      * ``"reference"`` / ``"dense_masked"`` — the dense masked einsum
+        runs every expert over every token and zeroes non-selected
+        outputs in the combine, so E-way expert FLOPs are really spent:
+        N = "total".
+      * ``"kernel"`` / ``"grouped"`` — the ragged grouped-GEMM path
+        computes only the selected (token, expert) pairs, so only the
+        paper-style k-way expert FLOPs execute: N = "active" (routed
+        experts per token + shared experts).  Group padding (≤ block_m-1
+        zero rows per non-empty expert) is not modeled; it vanishes
+        against N*D at the shapes the roofline covers.
+      * ``"decode_grid"`` — the masked expert grid runs every expert
+        step over every assignment row, so it spends E-way FLOPs like
+        the oracle (the deliberate trade at tiny token counts, where the
+        grid-step count dominates): N = "total".
 
     The train step always runs the reference formulation (DESIGN.md §2),
     so training rooflines keep the default."""
-    which = "active" if moe_backend == "kernel" else "total"
+    which = ("active" if moe_backend in ("kernel", "grouped") else "total")
     n = param_count(cfg)[which]
     tokens = shape.global_batch * shape.seq_len
     if shape.kind == "train":

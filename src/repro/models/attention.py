@@ -239,10 +239,12 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
               positions: jax.Array, mode: str,
               cache=None, pos=None, causal: bool = True,
               memory: Optional[jax.Array] = None,
-              last_pos: Optional[jax.Array] = None, **_):
+              last_pos: Optional[jax.Array] = None, route=None, **_):
     """GQA/MQA self-attention (or cross-attention when ``memory`` given).
 
     mode: train | prefill | decode.  Returns (y, new_cache).
+    ``route`` (core.execplan.PhaseRoute): the phase's resolved kernel
+    route, threaded into every projection.
     ``last_pos`` ((B,) int32, prefill only): last real position of a
     right-padded prompt -- the rolling-window cache build keeps the last
     ``window`` REAL positions per row instead of the padded tail, so
@@ -253,14 +255,14 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
     h, kh = cfg.n_heads, cfg.n_kv_heads
     window = cfg.window if local else 0
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
-    q = _split_heads(apply_linear(p["wq"], xn), h, hd)
+    q = _split_heads(apply_linear(p["wq"], xn, route), h, hd)
 
     kv_src = memory if memory is not None else xn
     is_cross = memory is not None
 
     if mode in ("train", "prefill"):
-        k = _split_heads(apply_linear(p["wk"], kv_src), kh, hd)
-        v = _split_heads(apply_linear(p["wv"], kv_src), kh, hd)
+        k = _split_heads(apply_linear(p["wk"], kv_src, route), kh, hd)
+        v = _split_heads(apply_linear(p["wv"], kv_src, route), kh, hd)
         if not is_cross:
             q = apply_rope(q, positions, cfg.rope_theta)
             kpos = positions
@@ -271,7 +273,7 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
         if mode == "prefill":
             new_cache = _build_cache(k, v, cfg, local, is_cross,
                                      last_pos=last_pos)
-        y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * hd))
+        y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * hd), route)
         return x + y, new_cache
 
     # decode (``pos`` scalar, or (B,) per-slot for continuous batching)
@@ -288,8 +290,8 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
         rows = jnp.arange(b)
         posb = pv[:, None]
         q = apply_rope(q, posb, cfg.rope_theta)
-        k = _split_heads(apply_linear(p["wk"], xn), kh, hd)
-        v = _split_heads(apply_linear(p["wv"], xn), kh, hd)
+        k = _split_heads(apply_linear(p["wk"], xn, route), kh, hd)
+        v = _split_heads(apply_linear(p["wv"], xn, route), kh, hd)
         k = apply_rope(k, posb, cfg.rope_theta)
         if local:
             w = cache.k.shape[1]
@@ -319,7 +321,7 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
             new_cache = KVCache(k=kc, v=vc)
             k_read, v_read = new_cache.k, new_cache.v
         y = decode_attention(q, k_read, v_read, valid)
-    y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * hd))
+    y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * hd), route)
     return x + y, new_cache
 
 
@@ -397,23 +399,25 @@ def init_mla(key: jax.Array, cfg: ArchConfig):
     }
 
 
-def _mla_qkv(p, xn, cfg, positions):
+def _mla_qkv(p, xn, cfg, positions, route=None):
     """Decompressed q, k, v for train/prefill plus the latent (for cache)."""
     m = cfg.mla
     h = cfg.n_heads
     b, s, _ = xn.shape
-    cq = apply_rmsnorm(p["qnorm"], apply_linear(p["dq"], xn), cfg.norm_eps)
-    q = apply_linear(p["uq"], cq).reshape(b, s, h, -1)
+    cq = apply_rmsnorm(p["qnorm"], apply_linear(p["dq"], xn, route),
+                       cfg.norm_eps)
+    q = apply_linear(p["uq"], cq, route).reshape(b, s, h, -1)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    dkv = apply_linear(p["dkv"], xn)
+    dkv = apply_linear(p["dkv"], xn, route)
     ckv, krope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
     ckv = apply_rmsnorm(p["kvnorm"], ckv, cfg.norm_eps)
     krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)
 
-    k_nope = apply_linear(p["uk"], ckv).reshape(b, s, h, m.qk_nope_head_dim)
-    v = apply_linear(p["uv"], ckv).reshape(b, s, h, m.v_head_dim)
+    k_nope = apply_linear(p["uk"], ckv, route).reshape(b, s, h,
+                                                       m.qk_nope_head_dim)
+    v = apply_linear(p["uv"], ckv, route).reshape(b, s, h, m.v_head_dim)
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
     k_full = jnp.concatenate(
         [k_nope, jnp.broadcast_to(krope, (b, s, h, m.qk_rope_head_dim))],
@@ -422,7 +426,7 @@ def _mla_qkv(p, xn, cfg, positions):
 
 
 def apply_mla(p, x: jax.Array, cfg: ArchConfig, *, positions, mode: str,
-              cache=None, pos=None, **_):
+              cache=None, pos=None, route=None, **_):
     """MLA attention.  Prefill caches only (c_kv, k_rope); decode uses the
     absorb trick (q projected into latent space) so per-step work is
     O(ctx * kv_rank), not O(ctx * heads * head_dim)."""
@@ -431,10 +435,11 @@ def apply_mla(p, x: jax.Array, cfg: ArchConfig, *, positions, mode: str,
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
 
     if mode in ("train", "prefill"):
-        q, k, v, ckv, krope = _mla_qkv(p, xn, cfg, positions)
+        q, k, v, ckv, krope = _mla_qkv(p, xn, cfg, positions, route)
         y = blockwise_attention(q, k, v, causal=True)
         new_cache = LatentCache(ckv=ckv, krope=krope) if mode == "prefill" else None
-        y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * m.v_head_dim))
+        y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * m.v_head_dim),
+                         route)
         return x + y, new_cache
 
     # decode with absorbed projections (``pos`` scalar or (B,) per-slot)
@@ -442,12 +447,13 @@ def apply_mla(p, x: jax.Array, cfg: ArchConfig, *, positions, mode: str,
     pv = pos_vector(pos, b)
     rows = jnp.arange(b)
     posb = pv[:, None]
-    cq = apply_rmsnorm(p["qnorm"], apply_linear(p["dq"], xn), cfg.norm_eps)
-    q = apply_linear(p["uq"], cq).reshape(b, 1, h, -1)
+    cq = apply_rmsnorm(p["qnorm"], apply_linear(p["dq"], xn, route),
+                       cfg.norm_eps)
+    q = apply_linear(p["uq"], cq, route).reshape(b, 1, h, -1)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
     q_rope = apply_rope(q_rope, posb, cfg.rope_theta)
 
-    dkv = apply_linear(p["dkv"], xn)
+    dkv = apply_linear(p["dkv"], xn, route)
     ckv_new, krope_new = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
     ckv_new = apply_rmsnorm(p["kvnorm"], ckv_new, cfg.norm_eps)
     krope_new = apply_rope(krope_new[:, :, None, :], posb,
@@ -473,7 +479,7 @@ def apply_mla(p, x: jax.Array, cfg: ArchConfig, *, positions, mode: str,
     wuv = _dense_weight(p["uv"]).reshape(m.kv_lora_rank, h, m.v_head_dim)
     o = jnp.einsum("bhr,rhv->bhv", o_lat, wuv.astype(jnp.float32))
     y = o.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
-    y = apply_linear(p["wo"], y)
+    y = apply_linear(p["wo"], y, route)
     return x + y, new_cache
 
 

@@ -22,6 +22,10 @@ def _dtype(cfg: ArchConfig):
 
 def salr_cfg_for(cfg: ArchConfig) -> SALRConfig:
     s = cfg.salr
+    # ``backend`` here selects the STORAGE layout compress_linear emits
+    # (kernel-native tiled vs flat); which kernel actually runs a given
+    # forward is the execution plan's decision (core/execplan.py —
+    # resolve_plan is the only dispatch-time reader of cfg.salr.backend).
     return SALRConfig(sparsity=s.sparsity, method=s.method,
                       lora_rank=s.lora_rank, res_rank=s.res_rank,
                       dtype=cfg.dtype, backend=s.backend)
@@ -37,13 +41,17 @@ def init_linear(key: jax.Array, d_in: int, d_out: int, cfg: ArchConfig,
     return {"w": w.astype(dt)}
 
 
-def apply_linear(p, x: jax.Array, backend: str = None) -> jax.Array:
+def apply_linear(p, x: jax.Array, route=None,
+                 backend: str = None) -> jax.Array:
     """SALR layers dispatch on their execution plan: explicit ``backend``
-    wins, then any active ``salr.force_backend`` scope (the train step
-    forces "reference" for differentiability), then the plan the layer
-    was compressed with (``SALRModelConfig.backend``)."""
+    wins, then the threaded phase ``route`` (a ``core.execplan.PhaseRoute``
+    resolved once per model and passed down the apply paths), then any
+    active plan-scope override, then the plan the layer was compressed
+    with (``SALRModelConfig.backend``)."""
     if isinstance(p, SALRLinear):
         from repro.distributed.sharding import constrain_weight_rows
+        if backend is None and route is not None:
+            backend = route.linear
         return apply_salr(x, p, constrain_fn=constrain_weight_rows,
                           backend=backend)
     return x @ p["w"]
@@ -96,16 +104,17 @@ def init_mlp(key: jax.Array, cfg: ArchConfig, kind: str):
     raise ValueError(kind)
 
 
-def apply_mlp(p, x: jax.Array, kind: str) -> jax.Array:
+def apply_mlp(p, x: jax.Array, kind: str, route=None) -> jax.Array:
     if kind == "swiglu":
-        h = jax.nn.silu(apply_linear(p["gate"], x)) * apply_linear(p["up"], x)
-        return apply_linear(p["down"], h)
+        h = jax.nn.silu(apply_linear(p["gate"], x, route)) * \
+            apply_linear(p["up"], x, route)
+        return apply_linear(p["down"], h, route)
     if kind == "relu2":
-        h = jnp.square(jax.nn.relu(apply_linear(p["up"], x)))
-        return apply_linear(p["down"], h)
+        h = jnp.square(jax.nn.relu(apply_linear(p["up"], x, route)))
+        return apply_linear(p["down"], h, route)
     if kind == "gelu":
-        h = jax.nn.gelu(apply_linear(p["up"], x))
-        return apply_linear(p["down"], h)
+        h = jax.nn.gelu(apply_linear(p["up"], x, route))
+        return apply_linear(p["down"], h, route)
     raise ValueError(kind)
 
 

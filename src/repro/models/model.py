@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, LayerGroup
+from repro.core import execplan
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import recurrent as rec
@@ -94,33 +95,38 @@ def init_params(key: jax.Array, cfg: ArchConfig):
 
 def apply_layer(p, x, cfg: ArchConfig, kind: str, mlp_kind: str, *,
                 mode: str, positions=None, cache=None, pos=None,
-                memory=None, causal=True, last_pos=None):
+                memory=None, causal=True, last_pos=None, route=None):
     """One block: mixer (+cross-attn) (+mlp).  Returns (x, new_cache).
     ``last_pos`` ((B,) int32, prefill only): last real position of a
     right-padded prompt, consumed by stateful mixers (masked-state
-    prefill) and the rolling-window cache build."""
+    prefill) and the rolling-window cache build.  ``route``
+    (core.execplan.PhaseRoute): the entry point's resolved kernel route,
+    threaded into every projection and the MoE dispatch."""
     mixer_cache = cache.get("mixer") if cache else None
     x, new_mixer = MIXER_APPLY[kind](
         p["mixer"], x, cfg, positions=positions, mode=mode,
-        cache=mixer_cache, pos=pos, causal=causal, last_pos=last_pos)
+        cache=mixer_cache, pos=pos, causal=causal, last_pos=last_pos,
+        route=route)
     new_cache = {"mixer": new_mixer}
     if "cross" in p:
         cross_cache = cache.get("cross") if cache else None
         x, new_cross = attn.apply_gqa(
             p["cross"], x, cfg, local=False, positions=positions, mode=mode,
-            cache=cross_cache, pos=pos, memory=memory, causal=False)
+            cache=cross_cache, pos=pos, memory=memory, causal=False,
+            route=route)
         new_cache["cross"] = new_cross
     if mlp_kind == "moe":
-        x = moe_mod.apply_moe(p["moe"], x, cfg)
+        x = moe_mod.apply_moe(p["moe"], x, cfg, route=route)
     elif mlp_kind != "none":
         x = x + apply_mlp(p["mlp"], apply_rmsnorm(p["mlp_norm"], x,
-                                                  cfg.norm_eps), mlp_kind)
+                                                  cfg.norm_eps), mlp_kind,
+                          route=route)
     return x, new_cache
 
 
 def apply_group(gp, x, cfg: ArchConfig, group: LayerGroup, *, mode: str,
                 positions=None, caches=None, pos=None, memory=None,
-                causal=True, remat=True, last_pos=None):
+                causal=True, remat=True, last_pos=None, route=None):
     """Scan over ``repeats``; the pattern is applied inside the body."""
     mlp_kind = _group_mlp(cfg, group)
 
@@ -132,7 +138,7 @@ def apply_group(gp, x, cfg: ArchConfig, group: LayerGroup, *, mode: str,
             xc, nc = apply_layer(params_sl[pi], xc, cfg, kind, mlp_kind,
                                  mode=mode, positions=positions, cache=c,
                                  pos=pos, memory=memory, causal=causal,
-                                 last_pos=last_pos)
+                                 last_pos=last_pos, route=route)
             new_caches.append(nc)
         return xc, new_caches
 
@@ -154,42 +160,53 @@ def _embed_inputs(params, cfg: ArchConfig, tokens, frontend_embeds):
     return x
 
 
-def _encode(params, cfg: ArchConfig, frontend_embeds):
-    """Encoder stack over frontend embeddings (enc-dec archs)."""
+def _encode(params, cfg: ArchConfig, frontend_embeds, route=None):
+    """Encoder stack over frontend embeddings (enc-dec archs).  ``route``
+    is the calling entry point's phase route (the encoder always runs
+    full-sequence non-causal, but its kernel routes follow the phase
+    that invoked it)."""
     x = frontend_embeds
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     for gi, g in enumerate(cfg.encoder_groups):
         x, _ = apply_group(params["encoder"]["groups"][gi], x, cfg, g,
                            mode="train", positions=positions, causal=False,
-                           remat=False)
+                           remat=False, route=route)
     return apply_rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
 
 
 def forward_hidden(params, cfg: ArchConfig, tokens: jax.Array,
-                   frontend_embeds: Optional[jax.Array] = None) -> jax.Array:
-    """Teacher-forced forward up to the final norm (no LM head)."""
+                   frontend_embeds: Optional[jax.Array] = None,
+                   plan: Optional[execplan.ExecutionPlan] = None
+                   ) -> jax.Array:
+    """Teacher-forced forward up to the final norm (no LM head).
+    Runs the ``train`` phase of ``plan`` (default: the model's resolved
+    plan — reference formulation, see execplan.resolve_plan)."""
     from repro.distributed.sharding import constrain_activation
+    route = (plan or execplan.current_override()
+             or execplan.resolve_plan(cfg)).route("train")
     memory = None
     if cfg.family == "encdec":
-        memory = _encode(params, cfg, frontend_embeds)
+        memory = _encode(params, cfg, frontend_embeds, route)
     x = _embed_inputs(params, cfg, tokens, frontend_embeds)
     x = constrain_activation(x)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     for gi, g in enumerate(cfg.layer_groups):
         x, _ = apply_group(params["groups"][gi], x, cfg, g, mode="train",
-                           positions=positions, memory=memory)
+                           positions=positions, memory=memory, route=route)
         x = constrain_activation(x)
     return apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
 
 
 def forward_train(params, cfg: ArchConfig, tokens: jax.Array,
-                  frontend_embeds: Optional[jax.Array] = None) -> jax.Array:
+                  frontend_embeds: Optional[jax.Array] = None,
+                  plan: Optional[execplan.ExecutionPlan] = None
+                  ) -> jax.Array:
     """Full-sequence teacher-forced forward.  Returns logits
     (B, S_total, padded_vocab); for frontend archs S_total includes the
     prefix positions (caller masks them in the loss)."""
-    x = forward_hidden(params, cfg, tokens, frontend_embeds)
+    x = forward_hidden(params, cfg, tokens, frontend_embeds, plan)
     return apply_lm_head(params["lm_head"], x)
 
 
@@ -241,8 +258,11 @@ def init_cache(cfg: ArchConfig, batch: int, ctx: int):
 
 def prefill(params, cfg: ArchConfig, tokens: jax.Array,
             frontend_embeds: Optional[jax.Array] = None, *,
-            logit_index=None):
+            logit_index=None,
+            plan: Optional[execplan.ExecutionPlan] = None):
     """Process the prompt; returns (one-position logits, cache).
+    Runs the ``prefill`` phase of ``plan`` (default: the model's
+    resolved plan).
 
     By default the logits are taken at the last prompt position.
     ``logit_index`` (scalar or (B,) int32, traced ok) selects another
@@ -255,9 +275,11 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array,
     (rglru/mlstm/slstm) treat positions beyond it as identity
     transitions and the rolling-window cache keeps only real tokens, so
     padded prefill ends in bitwise the exact-length state."""
+    route = (plan or execplan.current_override()
+             or execplan.resolve_plan(cfg)).route("prefill")
     memory = None
     if cfg.family == "encdec":
-        memory = _encode(params, cfg, frontend_embeds)
+        memory = _encode(params, cfg, frontend_embeds, route)
     x = _embed_inputs(params, cfg, tokens, frontend_embeds)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -269,7 +291,7 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array,
     for gi, g in enumerate(cfg.layer_groups):
         x, nc = apply_group(params["groups"][gi], x, cfg, g, mode="prefill",
                             positions=positions, memory=memory,
-                            last_pos=last_pos)
+                            last_pos=last_pos, route=route)
         caches.append(nc)
     x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if logit_index is None:
@@ -285,11 +307,15 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array,
 
 
 def decode_step(params, cfg: ArchConfig, cache, tokens: jax.Array,
-                pos: jax.Array):
+                pos: jax.Array,
+                plan: Optional[execplan.ExecutionPlan] = None):
     """One token step.  tokens: (B, 1); pos: absolute position of this
     token — a scalar int32 (uniform batch) or a (B,) int32 vector
     (continuous batching: each slot decodes at its own position).
-    Returns (logits, new_cache)."""
+    Runs the ``decode`` phase of ``plan`` (default: the model's resolved
+    plan).  Returns (logits, new_cache)."""
+    route = (plan or execplan.current_override()
+             or execplan.resolve_plan(cfg)).route("decode")
     x = apply_embedding(params["embed"], tokens)
     memory = cache.get("memory")
     b = x.shape[0]
@@ -299,7 +325,7 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: jax.Array,
     for gi, g in enumerate(cfg.layer_groups):
         x, nc = apply_group(params["groups"][gi], x, cfg, g, mode="decode",
                             positions=positions, caches=cache["groups"][gi],
-                            pos=pos, memory=memory)
+                            pos=pos, memory=memory, route=route)
         new_groups.append(nc)
     x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = apply_lm_head(params["lm_head"], x)

@@ -1,5 +1,5 @@
 """Mixture-of-Experts substrate: length-invariant per-token top-k
-routing + SALR-compressed experts, with two expert-compute backends.
+routing + SALR-compressed experts, with three expert-compute routes.
 
 Design (DESIGN.md §4 EP, §7 serving exactness; docs/serving.md):
   * routing is strictly per-token: a token's expert set, combine
@@ -9,37 +9,42 @@ Design (DESIGN.md §4 EP, §7 serving exactness; docs/serving.md):
     `forward_train` (S tokens), bucket-padded `prefill` (W tokens), and
     per-slot `decode_step` (n_slots tokens) route identically, which
     the continuous-batching engine needs for bitwise serving parity;
-  * expert compute dispatches on ``backend`` (explicit arg >
-    ``salr.force_backend`` scope > ``cfg.salr.backend``), mirroring
-    ``apply_salr``'s execution plans.  Gradients always take the
-    reference formulation via a custom VJP.
+  * expert compute dispatches on the execution-plan route (explicit
+    arg > threaded ``PhaseRoute`` > plan-scope override >
+    ``resolve_plan(cfg)`` — ``core.execplan``).  Gradients always take
+    the reference formulation via a custom VJP.
 
-Routing & dispatch semantics by backend:
+Routes (``core.execplan.MOE_ROUTES``):
 
-  | property                  | ``reference``            | ``kernel``                  |
-  |---------------------------|--------------------------|-----------------------------|
-  | expert selection          | per-token top-k + thresh | identical (same route)      |
-  | expert FLOPs per token    | E-way (masked combine)   | k-way (ragged grouped GEMM) |
-  | zero-token experts        | computed, then zeroed    | skipped (zero tiles)        |
-  | capacity / drops          | none beyond threshold    | none beyond threshold       |
-  | co-batch independence     | bitwise (independent dots)| bitwise (independent rows) |
-  | combine order             | expert-id order (0..E-1) | top-k slot order (0..k-1)   |
-  | gradients                 | native autodiff          | reference VJP (exact match) |
+  | property              | ``dense_masked``     | ``grouped``           | ``decode_grid``        |
+  |-----------------------|----------------------|-----------------------|------------------------|
+  | expert selection      | per-token top-k      | identical             | identical              |
+  | expert FLOPs/token    | E-way (masked)       | k-way (ragged GEMM)   | E-way (masked in-grid) |
+  | grid shape            | (no Pallas grid)     | m-tiles x n x k       | n x experts x k        |
+  | zero-token experts    | computed, zeroed     | skipped (zero tiles)  | zero-row expert steps  |
+  | host-side grouping    | none                 | sort+scatter+gather   | none (assignment order)|
+  | co-batch independence | bitwise              | bitwise               | bitwise                |
+  | combine order         | expert-id (0..E-1)   | top-k slot (0..k-1)   | top-k slot (0..k-1)    |
+  | gradients             | native autodiff      | reference VJP         | reference VJP          |
 
-The two backends agree to ~1e-4 relative (float summation order of the
-combine differs); each is bitwise *self*-consistent across co-batched
+``grouped`` and ``decode_grid`` are bitwise IDENTICAL per output row
+(same fixed block_k accumulation order; the decode grid's masked-out
+expert steps add exact zeros), so the plan may cross between them at
+any token count without perturbing served tokens.  ``dense_masked``
+agrees to ~1e-4 relative (float summation order of the combine
+differs); each route is bitwise *self*-consistent across co-batched
 token counts, which is the serving-parity property
-(tests/test_invariants.py, tests/test_parity_backends.py).
+(tests/test_invariants.py, tests/test_plan.py).
 
-The ``kernel`` backend is the ragged grouped-GEMM path
-(kernels/grouped_spmm.py): assignments are stable-sorted by expert into
-contiguous block-aligned groups (ragged offsets, no capacity, no drops
-beyond the per-token threshold) and one Pallas grid computes only the
-selected (token, expert) pairs, decoding bitmap / NF4 / N:M expert
-bases in-kernel.  The ``reference`` backend is the dense masked einsum
-over the stacked expert axis — every expert runs over every token and
-the combine weights zero the rest — kept as the parity oracle and the
-gradient path.
+``grouped`` is the ragged grouped-GEMM path (kernels/grouped_spmm.py):
+assignments stable-sorted by expert into contiguous block-aligned
+groups, one Pallas grid computing only the selected (token, expert)
+pairs, bitmap / NF4 / N:M expert bases decoded in-kernel.
+``decode_grid`` is the decode-specialized masked grid for small token
+counts: all assignment rows in one M tile, grid over experts, no
+grouping — the plan's crossover table decides which kernel route a
+phase takes.  ``dense_masked`` is the dense masked einsum over the
+stacked expert axis, kept as the parity oracle and the gradient path.
 """
 from __future__ import annotations
 
@@ -51,8 +56,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import bitmap as bm
-from repro.core.salr import (QBitmapWeight, SALRLinear, apply_salr,
-                             current_backend)
+from repro.core import execplan
+from repro.core.salr import QBitmapWeight, SALRLinear, apply_salr
 from repro.models.layers import (apply_linear, apply_rmsnorm, init_linear,
                                  init_rmsnorm)
 
@@ -123,35 +128,43 @@ def init_moe(key: jax.Array, cfg: ArchConfig):
 # reference backend: dense masked einsum over the stacked expert axis
 # ---------------------------------------------------------------------------
 
-def _expert_matmul(stack, x: jax.Array) -> jax.Array:
+def _expert_matmul(stack, x: jax.Array, backend=None) -> jax.Array:
     """Apply every expert to its token block.
 
     x: (N, d_in) shared input (every expert sees every token) or
     (E, N, d_in) per-expert hidden states.  Returns (E, N, d_out).
     Each output element is an independent dot over d_in, so a token's
     expert outputs are bitwise invariant to the co-batched token count
-    -- the property the serving parity checks rely on."""
+    -- the property the serving parity checks rely on.  ``backend``
+    threads the phase's linear route into the vmapped ``apply_salr``
+    (None keeps the per-layer/scope default)."""
     shared = x.ndim == 2
     if isinstance(stack, SALRLinear):
         if shared:
-            return jax.vmap(lambda lin: apply_salr(x, lin))(stack)
-        return jax.vmap(lambda lin, xe: apply_salr(xe, lin))(stack, x)
+            return jax.vmap(lambda lin: apply_salr(x, lin,
+                                                   backend=backend))(stack)
+        return jax.vmap(lambda lin, xe: apply_salr(xe, lin,
+                                                   backend=backend))(stack, x)
     w = stack["w"].astype(x.dtype)
     eq = "nd,edf->enf" if shared else "end,edf->enf"
     return jnp.einsum(eq, x, w)
 
 
 def _experts_reference(p, tokens: jax.Array, top_i: jax.Array,
-                       w: jax.Array, cfg: ArchConfig) -> jax.Array:
+                       w: jax.Array, cfg: ArchConfig,
+                       linear_backend=None) -> jax.Array:
     """E-way dense masked compute: every expert runs over the full token
     set (expert axis EP-sharded); the combine einsum zeroes non-selected
     experts and its reduction over E is the EP all-reduce.  This is the
-    parity oracle and the gradient path for the kernel backend."""
+    parity oracle and the gradient path for the kernel routes."""
     from repro.distributed.sharding import constrain_expert_stack
     cw = combine_weights(top_i, w, cfg.n_experts).astype(tokens.dtype)
-    gate = constrain_expert_stack(_expert_matmul(p["gate"], tokens))
-    up = constrain_expert_stack(_expert_matmul(p["up"], tokens))
-    out = _expert_matmul(p["down"], jax.nn.silu(gate) * up)   # (E, N, d)
+    gate = constrain_expert_stack(
+        _expert_matmul(p["gate"], tokens, linear_backend))
+    up = constrain_expert_stack(
+        _expert_matmul(p["up"], tokens, linear_backend))
+    out = _expert_matmul(p["down"], jax.nn.silu(gate) * up,
+                         linear_backend)                      # (E, N, d)
     return jnp.einsum("ne,end->nd", cw, out)
 
 
@@ -300,16 +313,74 @@ def _grouped_ffn(cfg: ArchConfig, p, tokens: jax.Array, top_i: jax.Array,
     return jnp.einsum("nk,nkd->nd", w.astype(per.dtype), per)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _experts_kernel(cfg: ArchConfig, p, tokens, top_i, w):
-    return _grouped_ffn(cfg, p, tokens, top_i, w)
+# ---------------------------------------------------------------------------
+# decode_grid route: masked expert grid over assignment-order rows
+# ---------------------------------------------------------------------------
+
+def _decode_grid_linear(stack, xs: jax.Array,
+                        row_expert: jax.Array) -> jax.Array:
+    """One decode-grid expert matmul: dispatch on the stack's base layout
+    to the matching kernels/grouped_spmm.py decode op."""
+    from repro.kernels import ops  # deferred: kernels import core.bitmap
+    if not isinstance(stack, SALRLinear):
+        return ops.decode_dense_matmul(xs, row_expert,
+                                       stack["w"].astype(xs.dtype))
+    a_cat, b_cat = _stacked_adapter_cat(stack)
+    base = stack.base
+    if isinstance(base, bm.TiledBitmapWeight):
+        y = ops.decode_salr_matmul(xs, row_expert, base, a_cat, b_cat)
+    elif isinstance(base, bm.QTiledBitmapWeight):
+        y = ops.decode_qsalr_matmul(xs, row_expert, base, a_cat, b_cat)
+    elif isinstance(base, bm.NMWeight):
+        y = ops.decode_nm_matmul(xs, row_expert, base, a_cat, b_cat)
+    else:                                # dense / mask array base
+        y = ops.decode_dense_matmul(xs, row_expert, base.astype(xs.dtype),
+                                    a_cat, b_cat)
+    return y[:, :stack.d_out]
 
 
-def _experts_kernel_fwd(cfg, p, tokens, top_i, w):
-    return _grouped_ffn(cfg, p, tokens, top_i, w), (p, tokens, top_i, w)
+def _decode_grid_ffn(cfg: ArchConfig, p, tokens: jax.Array,
+                     top_i: jax.Array, w: jax.Array) -> jax.Array:
+    """Expert FFN over the decode-specialized masked grid.
+
+    No grouping: row ``a`` of the buffer is assignment ``a`` in plain
+    token-major order (token a//k, slot a%k), and the grid's expert
+    steps mask the rows they own.  Per-row arithmetic is the same fixed
+    block_k accumulation as the grouped kernels, so the output is
+    bitwise identical to ``_grouped_ffn`` — and bitwise invariant to
+    co-batched tokens (DESIGN.md §7)."""
+    from repro.distributed.sharding import constrain_grouped_tokens
+    n, k = top_i.shape
+    d = tokens.shape[-1]
+    a = n * k
+    m_pad = _round_up(a, 8)
+    xs = jnp.repeat(tokens, k, axis=0)
+    xs = jnp.pad(xs, ((0, m_pad - a), (0, 0)))
+    row_expert = jnp.pad(top_i.reshape(a).astype(jnp.int32),
+                         (0, m_pad - a), constant_values=-1)
+    xs = constrain_grouped_tokens(xs)
+    gate = _decode_grid_linear(p["gate"], xs, row_expert)
+    up = _decode_grid_linear(p["up"], xs, row_expert)
+    hs = constrain_grouped_tokens(jax.nn.silu(gate) * up)
+    out = _decode_grid_linear(p["down"], hs, row_expert)    # (m_pad, d)
+    per = out[:a].reshape(n, k, d)                          # assignment order
+    return jnp.einsum("nk,nkd->nd", w.astype(per.dtype), per)
 
 
-def _experts_kernel_bwd(cfg, res, grad):
+_KERNEL_FFNS = {"grouped": _grouped_ffn, "decode_grid": _decode_grid_ffn}
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _experts_kernel(cfg: ArchConfig, route: str, p, tokens, top_i, w):
+    return _KERNEL_FFNS[route](cfg, p, tokens, top_i, w)
+
+
+def _experts_kernel_fwd(cfg, route, p, tokens, top_i, w):
+    return (_KERNEL_FFNS[route](cfg, p, tokens, top_i, w),
+            (p, tokens, top_i, w))
+
+
+def _experts_kernel_bwd(cfg, route, res, grad):
     # Pallas kernels carry no AD rules; the backward pass runs the exact
     # reference formulation (same convention as salr._kernel_forward:
     # reference grads, frozen bases un-differentiated).
@@ -327,13 +398,24 @@ _experts_kernel.defvjp(_experts_kernel_fwd, _experts_kernel_bwd)
 # public entry points
 # ---------------------------------------------------------------------------
 
-def _resolve_moe_backend(cfg: ArchConfig, backend: Optional[str]) -> str:
-    b = backend if backend is not None else current_backend()
-    if b is None:
-        b = cfg.salr.backend
-    if b not in ("kernel", "reference"):
-        raise ValueError(f"unknown MoE backend {b!r}")
-    return b
+def _resolve_moe_route(cfg: ArchConfig, route, backend: Optional[str]) -> str:
+    """Resolve the expert-compute route: explicit ``route`` (a string or
+    a threaded ``PhaseRoute``) > explicit ``backend`` (compat: "kernel"
+    means the grouped path, "reference" the oracle) > active plan-scope
+    override > ``execplan.resolve_plan(cfg)``.  Direct calls with no
+    phase context resolve as prefill."""
+    if isinstance(route, execplan.PhaseRoute):
+        route = route.moe
+    if route is None and backend is not None:
+        if backend not in ("kernel", "reference"):
+            raise ValueError(f"unknown MoE backend {backend!r}")
+        route = "grouped" if backend == "kernel" else "dense_masked"
+    if route is None:
+        pl = execplan.current_override() or execplan.resolve_plan(cfg)
+        route = pl.moe_route("prefill")
+    if route not in execplan.MOE_ROUTES:
+        raise ValueError(f"unknown MoE route {route!r}")
+    return route
 
 
 def _params_grouped_capable(params) -> bool:
@@ -358,52 +440,67 @@ def _params_grouped_capable(params) -> bool:
     return True
 
 
-def moe_backend_route(cfg: ArchConfig, backend: Optional[str] = None,
-                      params=None) -> str:
+_ROUTE_DESCRIPTIONS = {
+    "grouped": "grouped ragged GEMM, k-way FLOPs (kernels/grouped_spmm.py)",
+    "decode_grid": ("decode-specialized masked grid, single M tile "
+                    "(kernels/grouped_spmm.py)"),
+    "dense_masked": "dense masked einsum over the expert stack "
+                    "(E-way oracle)",
+}
+
+
+def moe_route_description(cfg: ArchConfig, route, params=None) -> str:
     """Human-readable dispatch description for serve/engine logging.
-    Pass ``params`` to account for the silent capability fallback: flat
-    (reference-emitted) expert storage has no grouped kernel, so a
-    "kernel" resolution still executes the reference path there."""
-    b = _resolve_moe_backend(cfg, backend)
-    if b == "kernel" and (params is None or _params_grouped_capable(params)):
-        return ("grouped ragged GEMM, k-way FLOPs "
-                "(kernels/grouped_spmm.py)")
-    if b == "kernel":
-        return ("dense masked einsum (E-way oracle; expert stacks lack "
-                "grouped-kernel storage — see salr.plan)")
-    return "dense masked einsum over the expert stack (E-way oracle)"
+    ``route`` is a route string or a ``PhaseRoute``.  Pass ``params`` to
+    account for the silent capability fallback: flat (reference-emitted)
+    expert storage has no grouped/decode-grid kernel, so a kernel-route
+    resolution still executes the oracle there."""
+    r = _resolve_moe_route(cfg, route, None)
+    if r != "dense_masked" and params is not None and \
+            not _params_grouped_capable(params):
+        return (f"{_ROUTE_DESCRIPTIONS['dense_masked']}; plan route "
+                f"{r!r} unavailable: expert stacks lack kernel storage "
+                "— see salr.plan")
+    return _ROUTE_DESCRIPTIONS[r]
 
 
-def apply_moe(p, x: jax.Array, cfg: ArchConfig,
+def apply_moe(p, x: jax.Array, cfg: ArchConfig, route=None,
               backend: Optional[str] = None) -> jax.Array:
     """x: (B, S, d) -> x + moe(x).
 
     Every token is routed independently (``route_tokens``); expert
-    compute dispatches on ``backend`` (explicit arg > active
-    ``salr.force_backend`` scope > ``cfg.salr.backend``): ``"kernel"``
-    runs the ragged grouped-GEMM path (k-way FLOPs, zero-token experts
-    skipped), ``"reference"`` the dense masked einsum oracle (E-way).
-    Expert stacks without a grouped kernel (flat bitmap storage) always
-    take the reference path.  Gradients are reference grads either way."""
+    compute dispatches on the execution-plan route
+    (``_resolve_moe_route``): ``"grouped"`` runs the ragged grouped-GEMM
+    path (k-way FLOPs, zero-token experts skipped), ``"decode_grid"``
+    the small-batch masked expert grid (bitwise identical to grouped
+    per row), ``"dense_masked"`` the dense masked einsum oracle (E-way).
+    ``route`` is usually the threaded ``PhaseRoute``; ``backend``
+    ("kernel"/"reference") is the per-call compatibility spelling.
+    Expert stacks without kernel storage (flat bitmap) always take the
+    oracle.  Gradients are reference grads on every route."""
     b, s, d = x.shape
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
     tokens = xn.reshape(b * s, d)
 
     top_i, w, _ = route_tokens(p["router"]["w"], tokens, cfg)
-    grouped = (_resolve_moe_backend(cfg, backend) == "kernel"
-               and all(_grouped_capable(p[t]) for t in ("gate", "up",
-                                                        "down")))
-    if grouped:
-        y = _experts_kernel(cfg, {t: p[t] for t in ("gate", "up", "down")},
-                            tokens, top_i, w)
+    r = _resolve_moe_route(cfg, route, backend)
+    if r != "dense_masked" and not all(
+            _grouped_capable(p[t]) for t in ("gate", "up", "down")):
+        r = "dense_masked"
+    if r == "dense_masked":
+        lb = route.linear if isinstance(route, execplan.PhaseRoute) else None
+        y = _experts_reference(p, tokens, top_i, w, cfg, linear_backend=lb)
     else:
-        y = _experts_reference(p, tokens, top_i, w, cfg)
+        y = _experts_kernel(cfg, r,
+                            {t: p[t] for t in ("gate", "up", "down")},
+                            tokens, top_i, w)
     y = y.reshape(b, s, d).astype(x.dtype)
 
     if "shared" in p:
-        hs = jax.nn.silu(apply_linear(p["shared"]["gate"], xn)) * \
-            apply_linear(p["shared"]["up"], xn)
-        y = y + apply_linear(p["shared"]["down"], hs)
+        lin = route if isinstance(route, execplan.PhaseRoute) else None
+        hs = jax.nn.silu(apply_linear(p["shared"]["gate"], xn, lin)) * \
+            apply_linear(p["shared"]["up"], xn, lin)
+        y = y + apply_linear(p["shared"]["down"], hs, lin)
     return x + y
 
 

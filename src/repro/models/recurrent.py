@@ -71,9 +71,9 @@ def _causal_conv(x: jax.Array, w: jax.Array, tail: jax.Array | None):
     return out
 
 
-def _rglru_gates(p, x: jax.Array):
-    r = jax.nn.sigmoid(apply_linear(p["w_r"], x).astype(jnp.float32))
-    i = jax.nn.sigmoid(apply_linear(p["w_i"], x).astype(jnp.float32))
+def _rglru_gates(p, x: jax.Array, route=None):
+    r = jax.nn.sigmoid(apply_linear(p["w_r"], x, route).astype(jnp.float32))
+    i = jax.nn.sigmoid(apply_linear(p["w_i"], x, route).astype(jnp.float32))
     log_a = -_C * jax.nn.softplus(p["lam"]) * r
     a = jnp.exp(log_a)
     gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
@@ -81,7 +81,7 @@ def _rglru_gates(p, x: jax.Array):
 
 
 def rglru_scan(p, x: jax.Array, h0: jax.Array | None = None,
-               valid: jax.Array | None = None) -> tuple:
+               valid: jax.Array | None = None, route=None) -> tuple:
     """Parallel linear recurrence over (B, S, dr).  Returns (y, h_last).
 
     ``valid`` (B, S) masks padded positions to the recurrence identity
@@ -89,7 +89,7 @@ def rglru_scan(p, x: jax.Array, h0: jax.Array | None = None,
     right-padded prefill ends in bitwise the same state as an
     exact-length one (identity combines are exact in floating point, and
     ``associative_scan``'s tree for prefix t depends only on t)."""
-    a, b = _rglru_gates(p, x)
+    a, b = _rglru_gates(p, x, route)
     if valid is not None:
         a = jnp.where(valid[..., None], a, 1.0)
         b = jnp.where(valid[..., None], b, 0.0)
@@ -108,7 +108,7 @@ def rglru_scan(p, x: jax.Array, h0: jax.Array | None = None,
 
 def apply_rglru(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
                 cache: RGLRUState | None = None,
-                last_pos: jax.Array | None = None, **_):
+                last_pos: jax.Array | None = None, route=None, **_):
     """Returns (x + block(x), new_cache).
 
     ``last_pos`` ((B,) int32, prefill only): index of the last real
@@ -116,8 +116,8 @@ def apply_rglru(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
     transitions for the recurrence and excluded from the conv tail, so
     the cached state equals an exact-length prefill's bitwise."""
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
-    gate = jax.nn.gelu(apply_linear(p["in_gate"], xn))
-    xr = apply_linear(p["in_x"], xn)
+    gate = jax.nn.gelu(apply_linear(p["in_gate"], xn, route))
+    xr = apply_linear(p["in_x"], xn, route)
 
     if mode in ("train", "prefill"):
         s = x.shape[1]
@@ -125,7 +125,7 @@ def apply_rglru(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
         valid = None
         if mode == "prefill" and last_pos is not None:
             valid = jnp.arange(s)[None, :] <= last_pos[:, None]
-        y, h_last = rglru_scan(p, xc, valid=valid)
+        y, h_last = rglru_scan(p, xc, valid=valid, route=route)
         new_cache = None
         if mode == "prefill":
             cw = cfg.conv_width
@@ -144,14 +144,14 @@ def apply_rglru(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
                                    conv_tail=tail.astype(x.dtype))
     else:
         xc = _causal_conv(xr, p["conv_w"], cache.conv_tail)
-        a, b = _rglru_gates(p, xc)
+        a, b = _rglru_gates(p, xc, route)
         h = a[:, 0] * cache.h.astype(jnp.float32) + b[:, 0]
         y = h[:, None, :].astype(x.dtype)
         tail = jnp.concatenate([cache.conv_tail[:, 1:],
                                 xr.astype(cache.conv_tail.dtype)], axis=1)
         new_cache = RGLRUState(h=h.astype(x.dtype), conv_tail=tail)
 
-    out = apply_linear(p["out"], y * gate)
+    out = apply_linear(p["out"], y * gate, route)
     return x + out, new_cache
 
 

@@ -63,14 +63,14 @@ def init_mlstm(key: jax.Array, cfg: ArchConfig):
     }
 
 
-def _mlstm_qkvif(p, xu: jax.Array, cfg: ArchConfig):
+def _mlstm_qkvif(p, xu: jax.Array, cfg: ArchConfig, route=None):
     b, s, du = xu.shape
     h = cfg.n_heads
     dk = (du // 2) // h
     dv = du // h
-    q = apply_linear(p["wq"], xu).reshape(b, s, h, dk)
-    k = apply_linear(p["wk"], xu).reshape(b, s, h, dk)
-    v = apply_linear(p["wv"], xu).reshape(b, s, h, dv)
+    q = apply_linear(p["wq"], xu, route).reshape(b, s, h, dk)
+    k = apply_linear(p["wk"], xu, route).reshape(b, s, h, dk)
+    v = apply_linear(p["wv"], xu, route).reshape(b, s, h, dv)
     gif = xu.astype(jnp.float32) @ p["wif"]["w"] + p["wif"]["b"]
     ig, fg = jnp.split(gif, 2, axis=-1)                 # (b, s, h)
     log_f = jax.nn.log_sigmoid(fg)
@@ -174,16 +174,16 @@ def mlstm_decode_step(state: MLSTMState, q, k, v, ig, log_f):
 
 def apply_mlstm(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
                 cache: MLSTMState | None = None,
-                last_pos: jax.Array | None = None, **_):
+                last_pos: jax.Array | None = None, route=None, **_):
     """``last_pos`` ((B,) int32, prefill only) marks the last real token
     of a right-padded prompt: pad positions get i=-inf (no input) and
     f=1 (no decay), which zeroes their contribution to the closed-form
     final state without touching real positions (pads sit causally
     after every real query, so the parallel output is unchanged)."""
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
-    xu = apply_linear(p["up"], xn)
-    xg = apply_linear(p["gate"], xn)
-    q, k, v, ig, log_f = _mlstm_qkvif(p, xu, cfg)
+    xu = apply_linear(p["up"], xn, route)
+    xg = apply_linear(p["gate"], xn, route)
+    q, k, v, ig, log_f = _mlstm_qkvif(p, xu, cfg, route)
     bsz, s = x.shape[0], x.shape[1]
 
     if mode in ("train", "prefill"):
@@ -198,7 +198,7 @@ def apply_mlstm(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
             cache, q[:, 0], k[:, 0], v[:, 0], ig[:, 0], log_f[:, 0])
         hout = hstep[:, None].astype(x.dtype)
     hflat = hout.reshape(bsz, s, -1).astype(x.dtype)
-    y = apply_linear(p["down"], hflat * jax.nn.silu(xg))
+    y = apply_linear(p["down"], hflat * jax.nn.silu(xg), route)
     return x + y, new_cache
 
 
@@ -273,15 +273,15 @@ def _slstm_step(p, cfg: ArchConfig, state: SLSTMState,
 
 def apply_slstm(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
                 cache: SLSTMState | None = None,
-                last_pos: jax.Array | None = None, **_):
+                last_pos: jax.Array | None = None, route=None, **_):
     """``last_pos`` ((B,) int32, prefill only): the sequential scan
     carries the state through padded steps unchanged, so a right-padded
     prefill ends in the exact-length state bitwise."""
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
-    xz = apply_linear(p["wz"], xn)
-    xi = apply_linear(p["wi"], xn)
-    xf = apply_linear(p["wf"], xn)
-    xo = apply_linear(p["wo"], xn)
+    xz = apply_linear(p["wz"], xn, route)
+    xi = apply_linear(p["wi"], xn, route)
+    xf = apply_linear(p["wf"], xn, route)
+    xo = apply_linear(p["wo"], xn, route)
     bsz, s = x.shape[0], x.shape[1]
 
     if mode in ("train", "prefill"):
@@ -311,7 +311,7 @@ def apply_slstm(p, x: jax.Array, cfg: ArchConfig, *, mode: str,
                              xo[:, 0])
         y = h[:, None].astype(x.dtype)
         new_cache = st2
-    return x + apply_linear(p["out"], y), new_cache
+    return x + apply_linear(p["out"], y, route), new_cache
 
 
 def init_slstm_cache(cfg: ArchConfig, batch: int, dtype) -> SLSTMState:

@@ -179,12 +179,18 @@ def with_kernel_weight_traffic(terms: RooflineTerms, dense_bytes: float,
     on TPU for the per-layer kernels (no sparse MXU -> their FLOPs are
     unchanged).
 
-    The MoE grouped-GEMM path additionally executes FEWER flops than the
-    analyzed reference program (k-way instead of E-way expert compute,
-    models/moe.py): ``flops_delta`` is the per-device executed-flops
-    reduction to subtract, and ``model_flops`` replaces the analytic
-    reference (``launch.specs.model_flops(..., moe_backend="kernel")``)
-    so useful_ratio / roofline_fraction compare like with like."""
+    The MoE expert route can additionally execute FEWER flops than the
+    analyzed reference program (k-way grouped GEMM instead of E-way
+    compute, models/moe.py): ``flops_delta`` is the per-device
+    executed-flops reduction to subtract, and ``model_flops`` replaces
+    the analytic reference so useful_ratio / roofline_fraction compare
+    like with like.  The caller passes the PER-PHASE plan route's
+    accounting (``launch.specs.model_flops(..., moe_backend=route)``):
+    only the ``grouped`` route is k-way — the ``decode_grid`` route the
+    plan may select at decode scale spends E-way flops on its masked
+    expert steps and therefore carries ``flops_delta=0`` (truthful
+    per-phase reporting; ``launch/dryrun.py`` records the route string
+    alongside these terms)."""
     adjusted = max(terms.hbm_bytes - dense_bytes + encoded_bytes,
                    encoded_bytes)
     return RooflineTerms(flops=max(terms.flops - flops_delta, 0.0),

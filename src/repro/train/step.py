@@ -8,15 +8,14 @@ repro.distributed.collectives).
 """
 from __future__ import annotations
 
-import contextlib
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import execplan
 from repro.core.pytree import combine
-from repro.core.salr import force_backend
 from repro.models import model as M
 from repro.optim.adamw import AdamW, residual_lr_scale_tree
 from repro.train.state import TrainState
@@ -26,21 +25,22 @@ def _prefix_len(cfg: ArchConfig) -> int:
     return cfg.decode_prefix_len
 
 
-def make_loss_fn(cfg: ArchConfig, loss_chunk: int = 512):
+def make_loss_fn(cfg: ArchConfig, loss_chunk: int = 512,
+                 plan: Optional[execplan.ExecutionPlan] = None):
     prefix = _prefix_len(cfg)
+    # Resolved once per step function; the train phase of the default
+    # plan is the reference formulation (dense-decode GEMMs differentiate
+    # natively, dense-masked MoE) — the serving steps below keep the
+    # kernel routes of their own phases.
+    plan = plan or execplan.resolve_plan(cfg)
 
     def loss_fn(trainable, frozen, batch):
-        # Gradient computation always traces the reference SALR path:
-        # the dense-decode GEMMs differentiate natively, while the frozen
-        # base would add nothing but kernel-VJP plumbing here.  Serving
-        # steps below keep each layer's own (kernel) execution plan.
-        with force_backend("reference"):
-            params = combine(trainable, frozen)
-            x = M.forward_hidden(params, cfg, batch["tokens"],
-                                 batch.get("frontend"))
-            # frontend prefix positions carry no labels
-            return M.lm_loss_chunked(params["lm_head"], x, batch["labels"],
-                                     prefix_len=prefix, chunk=loss_chunk)
+        params = combine(trainable, frozen)
+        x = M.forward_hidden(params, cfg, batch["tokens"],
+                             batch.get("frontend"), plan=plan)
+        # frontend prefix positions carry no labels
+        return M.lm_loss_chunked(params["lm_head"], x, batch["labels"],
+                                 prefix_len=prefix, chunk=loss_chunk)
 
     return loss_fn
 
@@ -86,39 +86,57 @@ def make_train_step(cfg: ArchConfig, opt: AdamW, *, microbatches: int = 1,
 
 # ------------------------------------------------------------- serving
 
-def make_prefill_step(cfg: ArchConfig, backend: Optional[str] = None):
-    """``backend`` pins the SALR execution plan at trace time (the
-    continuous-batching engine passes "kernel").  The optional
-    ``logit_index`` batch entry reads the logits at the true last prompt
-    token of a right-padded (bucketed) prompt."""
+def _serving_plan(cfg: ArchConfig,
+                  plan: Optional[execplan.ExecutionPlan],
+                  backend: Optional[str]) -> Optional[execplan.ExecutionPlan]:
+    """Explicit plan wins; a bare ``backend`` string (compat spelling)
+    resolves through the plan resolver; None defers to the model entry
+    points (scope override, then the cfg-resolved default)."""
+    if plan is not None:
+        return plan
+    if backend is not None:
+        return execplan.resolve_plan(cfg, backend=backend)
+    return None
+
+
+def make_prefill_step(cfg: ArchConfig, backend: Optional[str] = None,
+                      plan: Optional[execplan.ExecutionPlan] = None):
+    """``plan`` pins the execution plan at trace time (the
+    continuous-batching engine passes its resolved plan; ``backend`` is
+    the compatibility spelling).  The optional ``logit_index`` batch
+    entry reads the logits at the true last prompt token of a
+    right-padded (bucketed) prompt."""
+    plan = _serving_plan(cfg, plan, backend)
+
     def prefill_step(params, batch):
-        ctx = (contextlib.nullcontext() if backend is None
-               else force_backend(backend))
-        with ctx:
-            return M.prefill(params, cfg, batch["tokens"],
-                             batch.get("frontend"),
-                             logit_index=batch.get("logit_index"))
+        return M.prefill(params, cfg, batch["tokens"],
+                         batch.get("frontend"),
+                         logit_index=batch.get("logit_index"), plan=plan)
     return prefill_step
 
 
-def make_decode_step(cfg: ArchConfig, backend: Optional[str] = None):
+def make_decode_step(cfg: ArchConfig, backend: Optional[str] = None,
+                     plan: Optional[execplan.ExecutionPlan] = None):
     """``pos`` may be a scalar (uniform batch) or a (B,) vector of
     per-slot absolute positions (continuous batching)."""
+    plan = _serving_plan(cfg, plan, backend)
+
     def decode_step(params, cache, tokens, pos):
-        ctx = (contextlib.nullcontext() if backend is None
-               else force_backend(backend))
-        with ctx:
-            return M.decode_step(params, cfg, cache, tokens, pos)
+        return M.decode_step(params, cfg, cache, tokens, pos, plan=plan)
     return decode_step
 
 
 def greedy_generate(params, cfg: ArchConfig, prompt: jax.Array,
                     n_steps: int, ctx: int,
-                    frontend: Optional[jax.Array] = None) -> jax.Array:
-    """Batched greedy decoding (examples / serving benchmark)."""
+                    frontend: Optional[jax.Array] = None,
+                    plan: Optional[execplan.ExecutionPlan] = None
+                    ) -> jax.Array:
+    """Batched greedy decoding (examples / serving benchmark).
+    ``plan`` pins per-phase routes — pass the SAME plan the engine under
+    parity test uses, so both sides take identical routes."""
     b, s = prompt.shape
     prefix = _prefix_len(cfg)
-    logits, cache = M.prefill(params, cfg, prompt, frontend)
+    logits, cache = M.prefill(params, cfg, prompt, frontend, plan=plan)
     skeleton = M.init_cache(cfg, b, ctx)
 
     def place(small, big):
@@ -135,7 +153,7 @@ def greedy_generate(params, cfg: ArchConfig, prompt: jax.Array,
     def body(carry, i):
         cache, tok = carry
         pos = prefix + s + i
-        lg, cache = M.decode_step(params, cfg, cache, tok, pos)
+        lg, cache = M.decode_step(params, cfg, cache, tok, pos, plan=plan)
         nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return (cache, nxt), tok[:, 0]
 

@@ -1,0 +1,297 @@
+"""Execution-plan subsystem (core/execplan.py): resolver precedence,
+crossover bands, per-phase route parity, and engine bitwise parity under
+a kernel plan.
+
+Precedence contract (resolver docstring): explicit per-call argument >
+threaded plan route > plan-scope override (``salr.force_backend`` maps
+to one) > ``resolve_plan(cfg)`` default — and ``resolve_plan`` is the
+only reader of ``cfg.salr.backend``."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import execplan
+from repro.core.execplan import (MoECrossover, PhaseRoute, plan_scope,
+                                 resolve_plan, uniform_plan)
+from repro.core.salr import SALRConfig, apply_salr, compress_linear, force_backend
+from repro.models import model as M
+from repro.models.layers import apply_linear
+
+REL_TOL = 1e-4
+
+
+def _rel(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-12))
+
+
+def _layer(backend="kernel"):
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (96, 104)) / np.sqrt(96)
+    cfg = SALRConfig(sparsity=0.5, method="bitmap", lora_rank=8, res_rank=8,
+                     cap_align=8, backend=backend)
+    return compress_linear(key, w, cfg)
+
+
+# ----------------------------------------------------------- resolver
+
+def test_resolver_default_routes():
+    """kernel-backed cfg: serving phases run kernel linears with the
+    crossover's MoE pick; the train phase is ALWAYS the reference
+    formulation (differentiable oracle)."""
+    cfg = configs.get("granite_moe_1b_a400m", smoke=True)
+    pl = resolve_plan(cfg)
+    assert pl.prefill == PhaseRoute("kernel", "grouped")
+    assert pl.decode == PhaseRoute("kernel", "grouped")   # 1 token default
+    assert pl.train == PhaseRoute("reference", "dense_masked")
+
+    ref = resolve_plan(cfg, backend="reference")
+    for phase in ("prefill", "decode", "train"):
+        assert ref.route(phase) == PhaseRoute("reference", "dense_masked")
+
+
+def test_resolver_is_the_only_reader_of_cfg_backend():
+    """A reference-emitting cfg resolves reference everywhere; the
+    explicit ``backend`` argument overrides the cfg field."""
+    cfg = configs.get("smollm_135m", smoke=True)
+    cfg = cfg.with_(salr=dataclasses.replace(cfg.salr, backend="reference"))
+    assert resolve_plan(cfg).prefill.linear == "reference"
+    assert resolve_plan(cfg, backend="kernel").prefill.linear == "kernel"
+
+
+def test_crossover_bands():
+    """Token counts map through the committed three-band table: grouped
+    below the grid band, decode_grid inside it, grouped above."""
+    cfg = configs.get("granite_moe_1b_a400m", smoke=True)
+    xo = execplan.DEFAULT_CROSSOVER
+    for n, want in ((1, "grouped"), (xo.grid_min_tokens - 1, "grouped"),
+                    (xo.grid_min_tokens, "decode_grid"),
+                    (xo.grid_max_tokens, "decode_grid"),
+                    (xo.grid_max_tokens + 1, "grouped"), (4096, "grouped")):
+        got = resolve_plan(cfg, phase_tokens={"decode": n}).moe_route(
+            "decode")
+        assert got == want, (n, got, want)
+    # a custom table reroutes without touching the resolver
+    table = MoECrossover(grid_min_tokens=0, grid_max_tokens=10 ** 9,
+                         mid_route="dense_masked")
+    assert resolve_plan(cfg, crossover=table).moe_route("decode") == \
+        "dense_masked"
+
+
+def test_resolver_overrides_and_validation():
+    cfg = configs.get("granite_moe_1b_a400m", smoke=True)
+    pl = resolve_plan(cfg, overrides={"decode": {"moe": "dense_masked"}})
+    assert pl.decode == PhaseRoute("kernel", "dense_masked")
+    assert pl.prefill == PhaseRoute("kernel", "grouped")
+    with pytest.raises(ValueError):
+        resolve_plan(cfg, backend="banana")
+    with pytest.raises(ValueError):
+        resolve_plan(cfg, overrides={"decoding": {}})
+    with pytest.raises(ValueError):
+        PhaseRoute("kernel", "banana")
+    with pytest.raises(ValueError):
+        pl.route("serve")
+
+
+# --------------------------------------------------------- precedence
+
+def test_explicit_arg_beats_scope_override():
+    layer = _layer()
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, layer.d_in)) / 4
+    want_ref = apply_salr(x, layer, backend="reference")
+    with plan_scope(uniform_plan("kernel")):
+        got = apply_salr(x, layer, backend="reference")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_ref))
+
+
+def test_force_backend_maps_to_plan_override():
+    """The legacy scope IS a plan override now: it installs a
+    phase-uniform plan on the execplan stack, consulted by both
+    apply_salr and apply_moe."""
+    from repro.models.moe import apply_moe, init_moe
+    with force_backend("reference"):
+        ov = execplan.current_override()
+        assert ov is not None
+        assert ov.route("decode") == PhaseRoute("reference", "dense_masked")
+    assert execplan.current_override() is None
+
+    cfg = configs.get("granite_moe_1b_a400m", smoke=True)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 5, cfg.d_model)) / 4
+    with force_backend("reference"):
+        got = apply_moe(p, x, cfg)
+    want = apply_moe(p, x, cfg, route="dense_masked")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_threaded_route_beats_scope_override():
+    layer = _layer()
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, layer.d_in)) / 4
+    want_kernel = apply_salr(x, layer, backend="kernel")
+    with force_backend("reference"):
+        got = apply_linear(layer, x, route=PhaseRoute("kernel", "grouped"))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_kernel))
+
+
+def test_entry_points_respect_scope_override():
+    """force_backend around a whole model call still pins every phase
+    (the entry points consult the override before the cfg default)."""
+    cfg = configs.get("smollm_135m", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 6),
+                                0, cfg.vocab_size)
+    want, _ = M.prefill(params, cfg, tokens,
+                        plan=resolve_plan(cfg, backend="reference"))
+    with force_backend("reference"):
+        got, _ = M.prefill(params, cfg, tokens)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------- decode_grid route
+
+@pytest.mark.parametrize("method", ["bitmap", "bitmap_nf4", "nm", "dense",
+                                    "mask"])
+def test_decode_grid_matches_oracle_and_grouped(method):
+    """The decode grid matches the dense oracle ≤1e-4 for every expert
+    base representation AND is bitwise identical to the grouped route
+    (same fixed block_k accumulation per row) — the property that lets
+    the plan cross between the kernel routes without perturbing served
+    tokens."""
+    from repro.models.moe import apply_moe, init_moe
+    cfg = configs.get("granite_moe_1b_a400m", smoke=True)
+    cfg = cfg.with_(salr=dataclasses.replace(cfg.salr, method=method))
+    key = jax.random.PRNGKey(3)
+    p = init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (1, 13, cfg.d_model)) / 4
+    y_grid = apply_moe(p, x, cfg, route="decode_grid")
+    y_grouped = apply_moe(p, x, cfg, route="grouped")
+    y_ref = apply_moe(p, x, cfg, route="dense_masked")
+    assert _rel(y_grid, y_ref) <= REL_TOL, method
+    np.testing.assert_array_equal(np.asarray(y_grid), np.asarray(y_grouped))
+
+
+def test_decode_grid_grads_are_reference_grads():
+    from repro.core.pytree import combine, split_trainable
+    from repro.models.moe import apply_moe, init_moe
+    cfg = configs.get("granite_moe_1b_a400m", smoke=True)
+    key = jax.random.PRNGKey(4)
+    p = init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (2, 5, cfg.d_model)) / 4
+    train, frozen = split_trainable(p)
+
+    def loss(tp, route):
+        return jnp.sum(apply_moe(combine(tp, frozen), x, cfg,
+                                 route=route) ** 2)
+
+    gk = jax.grad(lambda tp: loss(tp, "decode_grid"))(train)
+    gr = jax.grad(lambda tp: loss(tp, "dense_masked"))(train)
+    for a, b in zip(jax.tree_util.tree_leaves(gk),
+                    jax.tree_util.tree_leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------ per-phase parity sweep
+
+@pytest.mark.parametrize("arch", ["smollm_135m", "granite_moe_1b_a400m"])
+def test_phase_routes_match_reference(arch):
+    """Each phase of the kernel plan (prefill / decode / train entry
+    points) agrees with the reference plan ≤1e-4 — the route split never
+    changes what is computed, only which kernel computes it."""
+    cfg = configs.get(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8),
+                                0, cfg.vocab_size)
+    kplan = resolve_plan(cfg, backend="kernel",
+                         phase_tokens={"prefill": 16, "decode": 2})
+    rplan = resolve_plan(cfg, backend="reference")
+
+    # train phase (forward_train); the default train route IS reference,
+    # so force kernel routes through overrides to exercise the split
+    ktrain = resolve_plan(cfg, overrides={
+        "train": {"linear": "kernel", "moe": "grouped"}})
+    lt_k = M.forward_train(params, cfg, tokens, plan=ktrain)
+    lt_r = M.forward_train(params, cfg, tokens, plan=rplan)
+    assert _rel(lt_k, lt_r) <= REL_TOL
+
+    # prefill phase
+    lp_k, cache_k = M.prefill(params, cfg, tokens, plan=kplan)
+    lp_r, cache_r = M.prefill(params, cfg, tokens, plan=rplan)
+    assert _rel(lp_k, lp_r) <= REL_TOL
+
+    # decode phase (one step off each plan's own prefill cache)
+    skel = M.init_cache(cfg, 2, 16)
+
+    def grow(c):
+        def place(small, big):
+            if small.shape != big.shape:
+                pads = [(0, bs - ss) for ss, bs in zip(small.shape,
+                                                       big.shape)]
+                return jnp.pad(small, pads).astype(big.dtype)
+            return small.astype(big.dtype)
+        return jax.tree_util.tree_map(place, c, skel)
+
+    nxt = jnp.argmax(lp_k[:, -1], -1).astype(jnp.int32)[:, None]
+    ld_k, _ = M.decode_step(params, cfg, grow(cache_k), nxt, jnp.int32(8),
+                            plan=kplan)
+    ld_r, _ = M.decode_step(params, cfg, grow(cache_r), nxt, jnp.int32(8),
+                            plan=rplan)
+    assert _rel(ld_k, ld_r) <= REL_TOL
+
+
+def test_engine_parity_bitwise_under_kernel_plan():
+    """The engine's per-phase kernel routes (grouped/decode-grid MoE,
+    fused linears) serve bitwise the same tokens as greedy_generate
+    under THE SAME plan — the phase split cannot perturb serving."""
+    from repro.launch.engine import (ContinuousBatchingEngine, EngineConfig,
+                                     Request)
+    from repro.train.step import greedy_generate
+    cfg = configs.get("granite_moe_1b_a400m", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatchingEngine(
+        cfg, params, EngineConfig(n_slots=2, max_ctx=16, backend="kernel"))
+    # the resolved plan is phase-aware: decode at n_slots tokens,
+    # prefill at the largest bucket
+    assert eng.plan.linear_backend("decode") == "kernel"
+    prompts = [tuple(int(t) for t in np.asarray(
+        jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(7), i),
+                           (L,), 0, cfg.vocab_size)))
+        for i, L in enumerate((5, 9, 4))]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=2)
+            for i, p in enumerate(prompts)]
+    results, metrics = eng.run(reqs)
+    assert "moe_route_prefill" in metrics and "moe_route_decode" in metrics
+    assert metrics["plan"] == eng.plan.describe()
+    for r in reqs:
+        ref = greedy_generate(params, cfg, jnp.asarray(r.prompt)[None],
+                              n_steps=2, ctx=16, plan=eng.plan)
+        assert results[r.rid].tokens == list(np.asarray(ref[0])), r.rid
+
+
+# --------------------------------------------------- snapshot golden
+
+def test_plan_snapshot_matches_committed_golden():
+    """Mirror of the CI dryrun plan-snapshot gate: the resolved plans
+    for the gated archs must equal the committed golden (regenerate with
+    ``python -m repro.launch.dryrun --plan-snapshot
+    experiments/baselines/PLAN_snapshot.json`` after a deliberate
+    resolver/crossover change)."""
+    path = os.path.join("experiments", "baselines", "PLAN_snapshot.json")
+    if not os.path.exists(path):
+        pytest.skip("no committed plan snapshot")
+    golden = json.load(open(path))
+    assert set(golden) == set(execplan.PLAN_SNAPSHOT_ARCHS)
+    for arch, want in golden.items():
+        got = resolve_plan(
+            configs.get(arch),
+            phase_tokens=dict(execplan.PLAN_SNAPSHOT_TOKENS)).describe()
+        assert got == want, arch
