@@ -60,6 +60,7 @@ from typing import Optional
 
 LINEAR_ROUTES = ("kernel", "reference")
 MOE_ROUTES = ("grouped", "decode_grid", "dense_masked")
+KV_ROUTES = ("dense", "paged")
 PHASES = ("prefill", "decode", "train")
 
 # characteristic token counts used when the caller does not know the
@@ -119,18 +120,32 @@ DEFAULT_CROSSOVER = MoECrossover()
 @dataclasses.dataclass(frozen=True)
 class PhaseRoute:
     """Concrete kernel routes for one phase: every SALR linear follows
-    ``linear``, every MoE layer follows ``moe``.  This is the object the
-    model apply paths thread (per-layer capability fallbacks still apply:
-    a base layout without a fused kernel takes the reference path
-    whatever the route says)."""
+    ``linear``, every MoE layer follows ``moe``, and the phase's KV cache
+    layout follows ``kv``.  This is the object the model apply paths
+    thread (per-layer capability fallbacks still apply: a base layout
+    without a fused kernel takes the reference path whatever the route
+    says).
+
+    ``kv`` decides the attention-cache LAYOUT the serving engine
+    allocates for the phase: ``dense`` is the fixed (slots, max_ctx)
+    ring, ``paged`` the block-paged pool + per-slot page table
+    (kernels/paged_attention.py).  The layout is orthogonal to the GEMM
+    backend — paged storage serves under both ``kernel`` and
+    ``reference`` linears — and non-pageable leaves (rolling-window
+    rings, recurrent state, cross-attention memory) stay dense whatever
+    the route says, the same per-layer capability rule the linears
+    follow."""
     linear: str                    # kernel | reference
     moe: str                       # grouped | decode_grid | dense_masked
+    kv: str = "dense"              # dense | paged
 
     def __post_init__(self):
         if self.linear not in LINEAR_ROUTES:
             raise ValueError(f"unknown linear route {self.linear!r}")
         if self.moe not in MOE_ROUTES:
             raise ValueError(f"unknown MoE route {self.moe!r}")
+        if self.kv not in KV_ROUTES:
+            raise ValueError(f"unknown KV route {self.kv!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,11 +167,15 @@ class ExecutionPlan:
     def moe_route(self, phase: str) -> str:
         return self.route(phase).moe
 
+    def kv_layout(self, phase: str) -> str:
+        return self.route(phase).kv
+
     def describe(self) -> dict:
         """JSON-stable summary (dryrun plan snapshots, serve logging)."""
         return {
             **{ph: {"linear": self.route(ph).linear,
-                    "moe": self.route(ph).moe} for ph in PHASES},
+                    "moe": self.route(ph).moe,
+                    "kv": self.route(ph).kv} for ph in PHASES},
             "crossover": self.crossover.as_dict(),
         }
 
@@ -196,6 +215,13 @@ def resolve_plan(cfg, *, backend: Optional[str] = None,
     exactly that path anyway — use ``overrides`` to trace kernel forwards
     under training.  Per-layer capability fallbacks (flat storage with no
     fused kernel) remain with the layer, not the plan.
+
+    The decode phase resolves to the ``paged`` KV layout for BOTH
+    backends: the cache layout is storage, not arithmetic (paged decode
+    is bitwise identical to the dense ring per row), so the reference
+    plan exercises paging too and the engine parity sweep covers it.
+    Prefill and train stay ``dense`` (they build fresh caches / none).
+    Pin ``overrides={"decode": {"kv": "dense"}}`` for a no-paging run.
     """
     b = backend if backend is not None else cfg.salr.backend
     if b not in LINEAR_ROUTES:
@@ -207,12 +233,16 @@ def resolve_plan(cfg, *, backend: Optional[str] = None,
     if b == "kernel":
         routes = {
             "prefill": PhaseRoute("kernel", xo.route_for(toks["prefill"])),
-            "decode": PhaseRoute("kernel", xo.route_for(toks["decode"])),
+            "decode": PhaseRoute("kernel", xo.route_for(toks["decode"]),
+                                 kv="paged"),
             "train": PhaseRoute("reference", "dense_masked"),
         }
     else:
-        routes = {ph: PhaseRoute("reference", "dense_masked")
-                  for ph in PHASES}
+        routes = {
+            "prefill": PhaseRoute("reference", "dense_masked"),
+            "decode": PhaseRoute("reference", "dense_masked", kv="paged"),
+            "train": PhaseRoute("reference", "dense_masked"),
+        }
 
     for ph, ov in (overrides or {}).items():
         if ph not in PHASES:

@@ -1,0 +1,276 @@
+"""Pallas TPU paged-attention decode kernels.
+
+Block-paged KV decode (launch/engine.py): each cache kind keeps a global
+page pool -- leaves shaped ``(n_pages, page_size, ...)`` with NO batch
+axis -- and every serving slot owns a row of a ``page_table``
+``(n_slots, max_pages)`` mapping logical page j of the slot's context to
+a physical pool page.  The page table rides the grid as a
+**scalar-prefetch** operand (``pltpu.PrefetchScalarGridSpec``): the K/V
+pool BlockSpecs index with ``pt[b, p]``, so grid step (b, p) DMAs
+exactly ONE live page of slot b's context -- the same tile->expert map
+idiom as ``kernels/grouped_spmm.py``, with pages in place of experts.
+Dead page-table entries point at the reserved null page 0 (a scratch
+page never referenced by any live position), so inactive slots stream a
+constant page instead of faulting.
+
+Three variants share the grid skeleton:
+
+  paged_gqa_attention        -- bf16/f32 K/V pools (PagedKVCache)
+  paged_quant_gqa_attention  -- int8 pools + per-(pos, head) scales,
+                                dequantized in-kernel (PagedQuantKVCache)
+  paged_mla_attention        -- latent pools (PagedLatentCache): scores
+                                against c_kv/k_rope with ABSORBED
+                                queries, returns the latent-space output
+                                (matrix absorption stays in
+                                models/attention.py)
+
+Exactness property the serving engine relies on (the paged analogue of
+DESIGN.md §7): grid step (b, p) copies page ``pt[b, p]`` into a VMEM
+gather buffer at logical offset ``p * page_size``; after the last page
+the kernel computes the SAME op sequence as the dense reference
+(``models/attention.py decode_attention`` / the MLA absorb path): f32
+score dots, ``/ sqrt(d)``, ``where(valid, s, NEG_INF)``,
+``jax.nn.softmax``, f32 PV dot.  Positions beyond ``pos[b]`` are masked
+to NEG_INF exactly as the dense path masks its stale slot tail, and a
+NEG_INF score contributes an EXACT float zero through softmax
+(``exp(-1e30 - m) == 0.0`` in f32), so the output is bitwise INVARIANT
+to whatever garbage the null page, a reused pool page, or the masked
+page tail holds (tests/test_invariants.py pins this).  Against the
+dense reference the per-row values agree to f32 ulp (same op sequence,
+different XLA fusion), and the engine's parity tests pin the
+end-to-end consequence: served tokens bitwise equal to
+``greedy_generate`` for every registered arch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+from repro.kernels.ops import _INTERPRET
+
+NEG_INF = -1e30
+
+
+def _gather_page(dst_ref, src_ref, p, page_size: int):
+    """Copy grid step p's page (already DMA'd by the BlockSpec index map)
+    into the gather buffer at its logical offset."""
+    dst_ref[pl.ds(p * page_size, page_size)] = src_ref[0]
+
+
+# --------------------------------------------------------------- GQA
+
+def _gqa_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, kg, vg, *,
+                page_size: int, n_pages: int, groups: int):
+    del pt_ref  # consumed by the BlockSpec index maps
+    b, p = pl.program_id(0), pl.program_id(1)
+    _gather_page(kg, k_ref, p, page_size)
+    _gather_page(vg, v_ref, p, page_size)
+
+    @pl.when(p == n_pages - 1)
+    def _attend():
+        h, dk = q_ref.shape[1], q_ref.shape[2]
+        kh = h // groups
+        w = n_pages * page_size
+        # op-for-op the dense reference (decode_attention), minus the
+        # batch axis: slot b's row of the batched einsum
+        qg = q_ref[0].reshape(kh, groups, dk).astype(jnp.float32)
+        s = jnp.einsum("hgd,khd->hgk", qg, kg[...].astype(jnp.float32))
+        s = s / jnp.sqrt(jnp.float32(dk))
+        valid = jnp.arange(w) <= pos_ref[b]
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("hgk,khd->hgd", pr, vg[...].astype(jnp.float32))
+        o_ref[0] = out.reshape(h, -1).astype(o_ref.dtype)
+
+
+def paged_gqa_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        page_table: jax.Array, pos: jax.Array, *,
+                        interpret: bool = _INTERPRET) -> jax.Array:
+    """One-token GQA attention over paged K/V pools.
+
+    q: (B, 1, H, dk); pools: (P, page_size, KH, d); page_table:
+    (B, n_pages) int32 (entry j = pool page holding positions
+    [j*ps, (j+1)*ps)); pos: (B,) int32 last live position per slot.
+    Returns (B, 1, H, dv)."""
+    b, _, h, dk = q.shape
+    p_total, ps, kh, _ = k_pool.shape
+    dv = v_pool.shape[-1]
+    n_pages = page_table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, dk), lambda bi, pi, pt, pv: (bi, 0, 0)),
+            pl.BlockSpec((1, ps, kh, dk),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, ps, kh, dv),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dv), lambda bi, pi, pt, pv: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_pages * ps, kh, dk), k_pool.dtype),
+            pltpu.VMEM((n_pages * ps, kh, dv), v_pool.dtype),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_gqa_kernel, page_size=ps, n_pages=n_pages,
+                          groups=h // kh),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(page_table, pos, q.reshape(b, h, dk), k_pool, v_pool)
+    return out.reshape(b, 1, h, dv)
+
+
+# --------------------------------------------------------- int8 GQA
+
+def _quant_gqa_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                      o_ref, kg, vg, ksg, vsg, *, page_size: int,
+                      n_pages: int, groups: int, out_dtype):
+    del pt_ref
+    b, p = pl.program_id(0), pl.program_id(1)
+    _gather_page(kg, k_ref, p, page_size)
+    _gather_page(vg, v_ref, p, page_size)
+    _gather_page(ksg, ks_ref, p, page_size)
+    _gather_page(vsg, vs_ref, p, page_size)
+
+    @pl.when(p == n_pages - 1)
+    def _attend():
+        h, dk = q_ref.shape[1], q_ref.shape[2]
+        kh = h // groups
+        dv = vg.shape[-1]
+        w = n_pages * page_size
+        # dequant mirrors attention._dq8 exactly (int8 * scale -> model
+        # dtype), then the f32 cast of the dense reference read path
+        k_read = (kg[...].astype(jnp.float32)
+                  * ksg[...][..., None]).astype(out_dtype)
+        v_read = (vg[...].astype(jnp.float32)
+                  * vsg[...][..., None]).astype(out_dtype)
+        qg = q_ref[0].reshape(kh, groups, dk).astype(jnp.float32)
+        s = jnp.einsum("hgd,khd->hgk", qg, k_read.astype(jnp.float32))
+        s = s / jnp.sqrt(jnp.float32(dk))
+        valid = jnp.arange(w) <= pos_ref[b]
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("hgk,khd->hgd", pr, v_read.astype(jnp.float32))
+        o_ref[0] = out.reshape(h, dv).astype(o_ref.dtype)
+
+
+def paged_quant_gqa_attention(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, ks_pool: jax.Array,
+                              vs_pool: jax.Array, page_table: jax.Array,
+                              pos: jax.Array, *,
+                              interpret: bool = _INTERPRET) -> jax.Array:
+    """int8-KV variant: pools (P, ps, KH, d) int8 with per-(position,
+    kv-head) scales (P, ps, KH) f32, dequantized in-kernel."""
+    b, _, h, dk = q.shape
+    _, ps, kh, _ = k_pool.shape
+    dv = v_pool.shape[-1]
+    n_pages = page_table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, dk), lambda bi, pi, pt, pv: (bi, 0, 0)),
+            pl.BlockSpec((1, ps, kh, dk),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, ps, kh, dv),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, ps, kh),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0)),
+            pl.BlockSpec((1, ps, kh),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dv), lambda bi, pi, pt, pv: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_pages * ps, kh, dk), jnp.int8),
+            pltpu.VMEM((n_pages * ps, kh, dv), jnp.int8),
+            pltpu.VMEM((n_pages * ps, kh), jnp.float32),
+            pltpu.VMEM((n_pages * ps, kh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_quant_gqa_kernel, page_size=ps, n_pages=n_pages,
+                          groups=h // kh, out_dtype=q.dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(page_table, pos, q.reshape(b, h, dk), k_pool, v_pool, ks_pool, vs_pool)
+    return out.reshape(b, 1, h, dv)
+
+
+# --------------------------------------------------------------- MLA
+
+def _mla_kernel(pt_ref, pos_ref, ql_ref, qr_ref, ckv_ref, kr_ref, o_ref,
+                cg, rg, *, page_size: int, n_pages: int, qk_dim: int):
+    del pt_ref
+    b, p = pl.program_id(0), pl.program_id(1)
+    _gather_page(cg, ckv_ref, p, page_size)
+    _gather_page(rg, kr_ref, p, page_size)
+
+    @pl.when(p == n_pages - 1)
+    def _attend():
+        w = n_pages * page_size
+        # the absorb-trick decode of apply_mla, minus the batch axis:
+        # scores against the latent cache, output in latent space
+        s = jnp.einsum("hr,kr->hk", ql_ref[0], cg[...].astype(jnp.float32))
+        s = s + jnp.einsum("hd,kd->hk", qr_ref[0],
+                           rg[...].astype(jnp.float32))
+        s = s / jnp.sqrt(jnp.float32(qk_dim))
+        valid = jnp.arange(w) <= pos_ref[b]
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_ref[0] = jnp.einsum("hk,kr->hr", pr, cg[...].astype(jnp.float32))
+
+
+def paged_mla_attention(q_lat: jax.Array, q_rope: jax.Array,
+                        ckv_pool: jax.Array, krope_pool: jax.Array,
+                        page_table: jax.Array, pos: jax.Array, *,
+                        qk_dim: int,
+                        interpret: bool = _INTERPRET) -> jax.Array:
+    """MLA absorbed decode over paged latent pools.
+
+    q_lat: (B, H, kv_rank) f32 (queries already absorbed through W_uk);
+    q_rope: (B, H, rope_dim) f32; ckv_pool: (P, ps, kv_rank);
+    krope_pool: (P, ps, rope_dim); ``qk_dim`` is the full
+    nope+rope query dimension the score scale divides by.
+    Returns o_lat (B, H, kv_rank) f32 (caller applies W_uv + W_o)."""
+    b, h, r = q_lat.shape
+    rd = q_rope.shape[-1]
+    ps = ckv_pool.shape[1]
+    n_pages = page_table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, r), lambda bi, pi, pt, pv: (bi, 0, 0)),
+            pl.BlockSpec((1, h, rd), lambda bi, pi, pt, pv: (bi, 0, 0)),
+            pl.BlockSpec((1, ps, r),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0)),
+            pl.BlockSpec((1, ps, rd),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, r), lambda bi, pi, pt, pv: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_pages * ps, r), ckv_pool.dtype),
+            pltpu.VMEM((n_pages * ps, rd), krope_pool.dtype),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_mla_kernel, page_size=ps, n_pages=n_pages,
+                          qk_dim=qk_dim),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(page_table, pos, q_lat, q_rope, ckv_pool, krope_pool)

@@ -37,6 +37,32 @@ sleeping).  ``reset()`` clears ALL scheduling state and every metric
 accumulator -- warm reruns start from a clean clock while keeping the
 compiled callables and cache buffers.
 
+KV storage is PAGED when the resolved plan's decode route says so
+(``plan.route("decode").kv == "paged"``, the resolver default — the
+engine applies the plan, it does not pick layouts itself): pageable
+cache leaves (full-context GQA incl. int8, MLA latents) live in global
+page pools of ``page_size``-position blocks with a per-slot
+``page_table``, so HBM cost follows the pages actually allocated, not
+``n_slots * max_ctx`` worst-case rings.  A host-side reference-counted
+``PagePool`` hands out pages at admission (ceil(positions/page_size)
+per request) and a ``RadixCache`` — a page-granularity radix tree over
+prompt token ids — lets later requests reuse full prompt pages a
+previous request already prefilled: the hit prefix is gathered into a
+dense batch=1 cache and only the prompt SUFFIX is prefilled
+(continuation prefill, ``M.prefill(prefix_cache=, pos_offset=)``),
+which is where the TTFT win comes from.  Admission becomes
+memory-pressure-aware: the FIFO head is admitted only while free pages
+suffice (after trying LRU eviction of unreferenced radix leaves);
+shared pages are never freed while any request or the tree still
+references them.  Decode rides the Pallas paged-attention kernels
+(``kernels/paged_attention.py``), whose per-slot math is bitwise equal
+to the dense reference, so the greedy-parity contract above survives
+the layout change.  Prefix sharing is enabled per-arch only when every
+mixer is pageable (no rings/recurrent state/frontend/enc-dec) and the
+cache is not quantized (a re-gathered int8 prefix would attend over
+dequantized values where the original prefill attended over raw ones —
+not bitwise); paging itself applies to any arch's pageable leaves.
+
 All forwards run a phase-aware execution plan resolved ONCE at engine
 construction (``core.execplan.resolve_plan``): the prefill ticks run the
 plan's prefill routes, the decode ticks its decode routes.  With the
@@ -84,6 +110,14 @@ class EngineConfig:
     plan: Optional[execplan.ExecutionPlan] = None
     max_prefills_per_tick: int = 1
     pad_id: int = 0
+    # paged KV layout (used when the plan's decode route says kv="paged")
+    page_size: int = 8            # cache positions per pool page
+    # total pool pages INCLUDING the reserved null page 0; None sizes the
+    # pool so every slot can hold max_ctx (n_slots * ceil(max_ctx /
+    # page_size) + 1) — shrink it to serve more slots than dense HBM
+    # would allow and let admission block on page pressure instead
+    n_pages: Optional[int] = None
+    prefix_sharing: bool = True   # radix prefix cache (eligible archs)
 
 
 def default_buckets(max_ctx: int, lo: int = 8) -> tuple:
@@ -142,6 +176,131 @@ class _Active:
     req: Request
     result: RequestResult
     slot: int
+    pages: Optional[list] = None  # pool pages this request references
+
+
+# ------------------------------------------------------- paged KV bookkeeping
+
+class PagePool:
+    """Host-side reference-counted page allocator over a global pool.
+
+    Page 0 is the reserved null page (the scatter/stream target of dead
+    page-table entries) and is never handed out.  A page's refcount is
+    the number of active requests reading it plus one if the radix tree
+    holds it; it returns to the free list only at refcount zero, so
+    admission pressure can never reclaim a page something still reads."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self.refs = np.zeros((n_pages,), np.int32)
+        self._free = list(range(n_pages - 1, 0, -1))  # pop() -> lowest first
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[list]:
+        """n fresh pages at refcount 1, or None if the pool can't cover."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self.refs[p] = 1
+        return pages
+
+    def incref(self, pages) -> None:
+        for p in pages:
+            assert self.refs[p] > 0, f"incref on free page {p}"
+            self.refs[p] += 1
+
+    def decref(self, pages) -> list:
+        freed = []
+        for p in pages:
+            self.refs[p] -= 1
+            assert self.refs[p] >= 0, f"decref underflow on page {p}"
+            if self.refs[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
+
+class _RadixNode:
+    __slots__ = ("children", "key", "page", "parent", "last_used")
+
+    def __init__(self, key=None, page=None, parent=None):
+        self.children: dict = {}
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.last_used = 0
+
+
+class RadixCache:
+    """Page-granularity radix tree over prompt token ids.
+
+    A node is one FULL page keyed by its page_size-token tuple (child
+    edges are exact-page matches, so lookup is a straight walk).
+    Holding a node counts as one pool reference on its page; eviction
+    drops least-recently-used LEAVES whose page the tree alone
+    references (refcount 1) — a page an active request still reads is
+    skipped, it merely leaves the tree when evicted later and is freed
+    by the request's own decref."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.root = _RadixNode()
+        self._clock = 0
+
+    def match(self, page_keys) -> list:
+        """Longest-prefix match; returns the hit pages (touches LRU)."""
+        self._clock += 1
+        node, pages = self.root, []
+        for key in page_keys:
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.last_used = self._clock
+            pages.append(child.page)
+            node = child
+        return pages
+
+    def insert(self, page_keys, pages) -> None:
+        """Register a prompt's full-page path.  A key already present is
+        only LRU-touched — the caller's duplicate private page stays
+        request-owned and is freed at finish."""
+        self._clock += 1
+        node = self.root
+        for key, page in zip(page_keys, pages):
+            child = node.children.get(key)
+            if child is None:
+                child = _RadixNode(key=key, page=page, parent=node)
+                node.children[key] = child
+                self.pool.incref([page])      # the tree's own reference
+            child.last_used = self._clock
+            node = child
+
+    def evict(self, n: int) -> int:
+        """Free up to n pages by dropping LRU leaves at refcount 1.
+        Returns the number actually freed (0 when every leaf is still
+        referenced by an active request)."""
+        freed = 0
+        while freed < n:
+            victim = None
+            stack = [self.root]
+            while stack:
+                nd = stack.pop()
+                for ch in nd.children.values():
+                    if ch.children:
+                        stack.append(ch)
+                    elif self.pool.refs[ch.page] == 1 and (
+                            victim is None or ch.last_used < victim.last_used):
+                        victim = ch
+            if victim is None:
+                return freed
+            del victim.parent.children[victim.key]
+            self.pool.decref([victim.page])
+            freed += 1
+        return freed
 
 
 # ----------------------------------------------------------------- engine
@@ -186,10 +345,28 @@ class ContinuousBatchingEngine:
         prefill = make_prefill_step(cfg, plan=self.plan)
         decode = make_decode_step(cfg, plan=self.plan)
 
-        def prefill_fn(params, tokens, logit_index, frontend):
+        # KV layout comes from the PLAN, not an engine knob: the
+        # resolver routes decode to paged storage, the engine applies it
+        self.paged = self.plan.kv_layout("decode") == "paged"
+        self.page_size = ecfg.page_size
+        self.max_pages = -(-ecfg.max_ctx // ecfg.page_size)
+        self.n_pages = (ecfg.n_pages if ecfg.n_pages is not None
+                        else ecfg.n_slots * self.max_pages + 1)
+        # radix sharing needs every mixer's prompt state pageable (rings,
+        # recurrent state and enc-dec/frontend prefixes are per-slot) and
+        # an unquantized cache (see module docstring)
+        self.sharable = (self.paged and ecfg.prefix_sharing
+                         and kinds <= set(M.PAGEABLE_KINDS)
+                         and not cfg.frontend and not cfg.encoder_groups
+                         and cfg.kv_cache != "int8")
+
+        def prefill_fn(params, tokens, logit_index, frontend, prefix_cache,
+                       pos_offset):
             logits, cache = prefill(params, {"tokens": tokens,
                                              "logit_index": logit_index,
-                                             "frontend": frontend})
+                                             "frontend": frontend,
+                                             "prefix_cache": prefix_cache},
+                                    pos_offset)
             tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return tok0, cache
 
@@ -198,14 +375,30 @@ class ContinuousBatchingEngine:
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return nxt, cache
 
+        if self.paged:
+            def insert_fn(cache, rcache, slot, start):
+                return M.insert_paged_cache_slot(cache, rcache, slot, start)
+        else:
+            def insert_fn(cache, rcache, slot, start):
+                del start
+                return M.insert_cache_slot(cache, rcache, slot)
+
         # the slot cache is donated on the hot paths: self.cache is
         # rebound to the result each call, so the old buffers would
         # otherwise be a full KV-cache copy per decode tick
-        self._prefill = jax.jit(prefill_fn)   # compiles once per bucket
+        self._prefill = jax.jit(prefill_fn, static_argnums=(5,))
         self._decode = jax.jit(decode_fn, donate_argnums=(1,))
-        self._insert = jax.jit(M.insert_cache_slot, donate_argnums=(0,))
+        self._insert = jax.jit(insert_fn, donate_argnums=(0,))
+        self._gather = jax.jit(
+            lambda cache, page_row: M.gather_prefix_cache(cache, cfg,
+                                                          page_row))
 
-        self.cache = M.init_slot_cache(cfg, ecfg.n_slots, ecfg.max_ctx)
+        if self.paged:
+            self.cache = M.init_paged_slot_cache(
+                cfg, ecfg.n_slots, ecfg.max_ctx,
+                page_size=ecfg.page_size, n_pages=self.n_pages)
+        else:
+            self.cache = M.init_slot_cache(cfg, ecfg.n_slots, ecfg.max_ctx)
         self.reset()
 
     def reset(self) -> None:
@@ -227,6 +420,17 @@ class ContinuousBatchingEngine:
         self._bucket_counts: dict = {}        # prefill bucket -> count
         self.n_prefills = 0
         self.n_decode_ticks = 0
+        # paged-KV state: fresh pool/radix (deterministic allocation
+        # order), all page-table rows to the null page
+        self.pool = PagePool(self.n_pages) if self.paged else None
+        self.radix = RadixCache(self.pool) if self.paged else None
+        self.n_evictions = 0
+        self._pages_per_req: list = []
+        self._shared_prompt_tokens = 0
+        self._total_prompt_tokens = 0
+        if self.paged:
+            self._page_table = np.zeros((n, self.max_pages), np.int32)
+            self.cache["page_table"] = jnp.asarray(self._page_table)
 
     # ------------------------------------------------------------- intake
 
@@ -239,6 +443,14 @@ class ContinuousBatchingEngine:
                 f"request {req.rid}: prefix {self.prefix} + prompt {length} "
                 f"+ {req.max_new_tokens} new tokens does not fit "
                 f"max_ctx={self.ecfg.max_ctx}")
+        if self.paged:
+            worst = max(self.prefix + bucket, last_pos + 1)
+            need = -(-worst // self.page_size)
+            if need > self.n_pages - 1:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} pages but the pool "
+                    f"holds {self.n_pages - 1} (page 0 is reserved); it "
+                    f"could never be admitted")
         if self.cfg.frontend or self.cfg.encoder_groups:
             want = (self.cfg.frontend_len, self.cfg.d_model)
             got = None if req.frontend is None \
@@ -259,30 +471,113 @@ class ContinuousBatchingEngine:
 
     # ---------------------------------------------------------- scheduler
 
+    def _page_keys(self, prompt) -> list:
+        ps = self.page_size
+        return [tuple(prompt[i * ps:(i + 1) * ps])
+                for i in range(len(prompt) // ps)]
+
+    def _page_plan(self, req: Request):
+        """Sharing + allocation plan: (hit_pages, n_new, bucket, lp).
+
+        ``hit_pages`` are radix pages covering the first ``lp`` prompt
+        tokens — clamped so at least one suffix token remains to
+        prefill (the admission needs its logits) and so the suffix
+        bucket still fits the slot's page-table extent.  ``n_new`` is
+        the fresh-page count covering max(prefill write extent, prompt +
+        generation)."""
+        length = len(req.prompt)
+        ps = self.page_size
+        hit: list = []
+        if self.sharable:
+            hit = self.radix.match(self._page_keys(req.prompt))
+            usable = min(len(hit), (length - 1) // ps)
+            cap = self.max_pages * ps
+            while usable and (usable * ps
+                              + pick_bucket(length - usable * ps,
+                                            self.buckets) > cap):
+                usable -= 1
+            hit = hit[:usable]
+        lp = len(hit) * ps
+        bucket = pick_bucket(length - lp, self.buckets)
+        total_pos = max(self.prefix + lp + bucket,
+                        self.prefix + length + req.max_new_tokens)
+        n_total = min(-(-total_pos // ps), self.max_pages)
+        return hit, n_total - len(hit), bucket, lp
+
+    def _pages_available(self, req: Request) -> bool:
+        """Can the FIFO head be admitted right now?  Tries LRU radix
+        eviction to cover the shortfall; never touches referenced pages."""
+        if not self.paged:
+            return True
+        hit, n_new, _, _ = self._page_plan(req)
+        if n_new > self.pool.n_free:
+            # shield the head's own hit path: a tree-only hit page is
+            # otherwise a legal eviction victim, which would invalidate
+            # the plan we just computed
+            self.pool.incref(hit)
+            self.n_evictions += self.radix.evict(n_new - self.pool.n_free)
+            self.pool.decref(hit)
+        return n_new <= self.pool.n_free
+
     def _admit(self, req: Request, slot: int) -> None:
         length = len(req.prompt)
-        bucket = pick_bucket(length, self.buckets)
+        hit: list = []
+        lp = 0
+        if self.paged:
+            # step() already verified feasibility via _pages_available;
+            # the re-match returns the same pages (nothing mutated since)
+            hit, n_new, bucket, lp = self._page_plan(req)
+            new_pages = self.pool.alloc(n_new)
+            assert new_pages is not None, "admission without free pages"
+            self.pool.incref(hit)         # this request's ref on shared pages
+            pages = hit + new_pages
+            row = np.zeros((self.max_pages,), np.int32)
+            row[:len(pages)] = pages
+            self._page_table[slot] = row
+            self.cache["page_table"] = jnp.asarray(self._page_table)
+            self._pages_per_req.append(len(pages))
+            self._shared_prompt_tokens += lp
+            self._total_prompt_tokens += length
+        else:
+            pages = None
+            bucket = pick_bucket(length, self.buckets)
+        suffix = req.prompt[lp:]
         padded = np.full((1, bucket), self.ecfg.pad_id, np.int32)
-        padded[0, :length] = np.asarray(req.prompt, np.int32)
+        padded[0, :len(suffix)] = np.asarray(suffix, np.int32)
         fe = (None if req.frontend is None
               else jnp.asarray(req.frontend)[None])
         # queue wait is time spent pending, not the request's own prefill
         self._admit_waits.append(max(0.0, self.now - req.arrival))
         t0 = self._time()
-        tok0, rcache = self._prefill(self.params, jnp.asarray(padded),
-                                     jnp.int32(self.prefix + length - 1),
-                                     fe)
-        self.cache = self._insert(self.cache, rcache, jnp.int32(slot))
+        if lp:
+            # continuation prefill: gather the shared pages into a dense
+            # batch=1 prefix, prefill only the suffix at offset lp
+            prefix_cache = self._gather(self.cache,
+                                        jnp.asarray(hit, jnp.int32))
+            tok0, rcache = self._prefill(self.params, jnp.asarray(padded),
+                                         jnp.int32(len(suffix) - 1),
+                                         fe, prefix_cache, lp)
+        else:
+            tok0, rcache = self._prefill(self.params, jnp.asarray(padded),
+                                         jnp.int32(self.prefix + length - 1),
+                                         fe, None, 0)
+        self.cache = self._insert(self.cache, rcache, jnp.int32(slot),
+                                  jnp.int32(lp))
         tok0 = int(tok0[0])
         jax.block_until_ready(jax.tree_util.tree_leaves(self.cache)[0])
         self.now += self._time() - t0
         self.n_prefills += 1
         self._bucket_counts[bucket] = self._bucket_counts.get(bucket, 0) + 1
+        if self.sharable:
+            # register this prompt's FULL pages (hit + freshly prefilled;
+            # partial tail/generation pages never enter the tree)
+            keys = self._page_keys(req.prompt)
+            self.radix.insert(keys, pages[:len(keys)])
 
         res = RequestResult(rid=req.rid, tokens=[tok0], arrival=req.arrival,
                             admitted_at=self.now, first_token_at=self.now,
                             finished_at=float("nan"))
-        act = _Active(req=req, result=res, slot=slot)
+        act = _Active(req=req, result=res, slot=slot, pages=pages)
         self._last_tok[slot] = tok0
         self._pos[slot] = self.prefix + length
         self.slots[slot] = act
@@ -293,6 +588,14 @@ class ContinuousBatchingEngine:
         act.result.finished_at = self.now
         self.results[act.req.rid] = act.result
         self.slots[act.slot] = None           # slot reusable immediately
+        if self.paged and act.pages is not None:
+            # pages at refcount zero (generation tail, unshared prompt)
+            # return to the pool; tree-held pages stay until evicted.
+            # The slot's table row drops to the null page so its stale
+            # decode writes can never corrupt a reallocated page.
+            self.pool.decref(act.pages)
+            self._page_table[act.slot] = 0
+            self.cache["page_table"] = jnp.asarray(self._page_table)
 
     def _decode_tick(self) -> None:
         tokens = jnp.asarray(self._last_tok[:, None])
@@ -321,6 +624,8 @@ class ContinuousBatchingEngine:
         while (self.pending and self.slots.count(None)
                and self.pending[0][0] <= self.now
                and admitted < self.ecfg.max_prefills_per_tick):
+            if not self._pages_available(self.pending[0][2]):
+                break                 # head-of-line blocks on page pressure
             _, _, req = self.pending.pop(0)
             self._admit(req, self.free_slots()[0])
             admitted += 1
@@ -366,6 +671,16 @@ class ContinuousBatchingEngine:
             "n_decode_ticks": self.n_decode_ticks,
             "n_slots": self.ecfg.n_slots,
             "buckets": self.buckets,
+            "kv_layout": "paged" if self.paged else "dense",
+            "page_size": self.page_size if self.paged else 0,
+            "n_pages": self.n_pages if self.paged else 0,
+            "pages_free": self.pool.n_free if self.paged else 0,
+            "pages_per_request_mean": (float(np.mean(self._pages_per_req))
+                                       if self._pages_per_req else 0.0),
+            "prefix_hit_rate": (self._shared_prompt_tokens
+                                / self._total_prompt_tokens
+                                if self._total_prompt_tokens else 0.0),
+            "evictions": self.n_evictions,
             # an explicit EngineConfig.plan supersedes the backend knob;
             # echoing the unused knob would misreport the run
             "backend": (self.ecfg.backend if self.ecfg.plan is None

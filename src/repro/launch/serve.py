@@ -164,6 +164,14 @@ def serve_continuous(cfg, params, backend: str, args, key,
           f"queue depth mean {metrics['queue_depth_mean']:.1f}, "
           f"slot occupancy {metrics['slot_occupancy_mean']:.2f}/"
           f"{metrics['n_slots']}")
+    if metrics["kv_layout"] == "paged":
+        print(f"engine=continuous backend={backend}: kv=paged "
+              f"(page_size={metrics['page_size']}, "
+              f"pool={metrics['n_pages']} pages, "
+              f"free={metrics['pages_free']}); "
+              f"pages/request mean {metrics['pages_per_request_mean']:.1f}, "
+              f"prefix hit rate {metrics['prefix_hit_rate']:.2f}, "
+              f"evictions {metrics['evictions']}")
 
     if check_parity:
         mismatches = 0

@@ -17,6 +17,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels.paged_attention import (paged_gqa_attention,
+                                           paged_mla_attention,
+                                           paged_quant_gqa_attention)
 from repro.models.layers import (apply_linear, apply_rmsnorm, apply_rope,
                                  init_linear, init_rmsnorm)
 
@@ -67,6 +70,40 @@ class QuantKVCache:
     v: jax.Array        # (B, W, KH, dv) int8
     k_scale: jax.Array  # (B, W, KH) f32
     v_scale: jax.Array  # (B, W, KH) f32
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=("k", "v"),
+         meta_fields=())
+@dataclasses.dataclass
+class PagedKVCache:
+    """Block-paged full-context cache: a global page pool with NO batch
+    axis.  Pool page ``page_table[slot, j]`` holds the slot's positions
+    ``[j*page_size, (j+1)*page_size)``; pool page 0 is the reserved null
+    page -- dead page-table entries point there, so stale slots stream
+    and scatter into scratch the position mask zeroes exactly."""
+    k: jax.Array   # (P, page_size, KH, dk)
+    v: jax.Array   # (P, page_size, KH, dv)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("k", "v", "k_scale", "v_scale"), meta_fields=())
+@dataclasses.dataclass
+class PagedQuantKVCache:
+    """Paged int8 pools + per-(position, kv-head) scales; the paged
+    decode kernel dequantizes in-kernel, mirroring ``_dq8`` exactly."""
+    k: jax.Array        # (P, page_size, KH, dk) int8
+    v: jax.Array        # (P, page_size, KH, dv) int8
+    k_scale: jax.Array  # (P, page_size, KH) f32
+    v_scale: jax.Array  # (P, page_size, KH) f32
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=("ckv", "krope"),
+         meta_fields=())
+@dataclasses.dataclass
+class PagedLatentCache:
+    """Paged MLA latent pools (c_kv + shared rope key)."""
+    ckv: jax.Array     # (P, page_size, kv_rank)
+    krope: jax.Array   # (P, page_size, rope_dim)
 
 
 def _q8(x):
@@ -239,7 +276,9 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
               positions: jax.Array, mode: str,
               cache=None, pos=None, causal: bool = True,
               memory: Optional[jax.Array] = None,
-              last_pos: Optional[jax.Array] = None, route=None, **_):
+              last_pos: Optional[jax.Array] = None, route=None,
+              page_table: Optional[jax.Array] = None,
+              prefix=None, q_offset: int = 0, **_):
     """GQA/MQA self-attention (or cross-attention when ``memory`` given).
 
     mode: train | prefill | decode.  Returns (y, new_cache).
@@ -250,6 +289,13 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
     ``window`` REAL positions per row instead of the padded tail, so
     bucket padding never evicts prompt tokens (full-context caches
     ignore it; pad entries there are masked/overwritten by decode).
+    ``page_table`` ((B, max_pages) int32, decode only): slot -> pool-page
+    map when ``cache`` is a Paged* pool.
+    ``prefix`` (dense KVCache, prefill only) + ``q_offset`` (STATIC int):
+    continuation prefill for radix prefix sharing -- attend over the
+    gathered prefix K/V (absolute positions [0, q_offset)) concatenated
+    with this call's suffix, but cache only the suffix.  ``positions``
+    must already be offset by the caller.
     """
     hd = cfg.resolved_head_dim
     h, kh = cfg.n_heads, cfg.n_kv_heads
@@ -267,8 +313,18 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
             q = apply_rope(q, positions, cfg.rope_theta)
             kpos = positions
             k = apply_rope(k, kpos, cfg.rope_theta)
-        y = blockwise_attention(q, k, v, causal=causal and not is_cross,
-                                window=window)
+        if prefix is not None and not is_cross:
+            # shared-prefix rows were cached roped at their absolute
+            # positions, so concat gives the same K/V stack a full
+            # prefill of prefix+suffix would have built (row-wise
+            # bitwise: rope and the k/v projections are per-position)
+            k_att = jnp.concatenate([prefix.k.astype(k.dtype), k], axis=1)
+            v_att = jnp.concatenate([prefix.v.astype(v.dtype), v], axis=1)
+        else:
+            k_att, v_att = k, v
+        y = blockwise_attention(q, k_att, v_att,
+                                causal=causal and not is_cross,
+                                window=window, q_offset=q_offset)
         new_cache = None
         if mode == "prefill":
             new_cache = _build_cache(k, v, cfg, local, is_cross,
@@ -302,7 +358,29 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
             valid = ((ring >= 0) & (ring <= posb)
                      & (ring > posb - window))          # (B, W)
             new_cache = RingKVCache(k=kc, v=vc, ring_pos=ring)
-            k_read, v_read = new_cache.k, new_cache.v
+            y = decode_attention(q, kc, vc, valid)
+        elif isinstance(cache, PagedQuantKVCache):
+            ps = cache.k.shape[1]
+            pages = page_table[rows, pv // ps]
+            off = pv % ps
+            kq, ks = _q8(k)
+            vq, vs = _q8(v)
+            kc = cache.k.at[pages, off].set(kq[:, 0])
+            vc = cache.v.at[pages, off].set(vq[:, 0])
+            ksc = cache.k_scale.at[pages, off].set(ks[:, 0])
+            vsc = cache.v_scale.at[pages, off].set(vs[:, 0])
+            new_cache = PagedQuantKVCache(k=kc, v=vc, k_scale=ksc,
+                                          v_scale=vsc)
+            y = paged_quant_gqa_attention(q, kc, vc, ksc, vsc,
+                                          page_table, pv)
+        elif isinstance(cache, PagedKVCache):
+            ps = cache.k.shape[1]
+            pages = page_table[rows, pv // ps]
+            off = pv % ps
+            kc = cache.k.at[pages, off].set(k[:, 0])
+            vc = cache.v.at[pages, off].set(v[:, 0])
+            new_cache = PagedKVCache(k=kc, v=vc)
+            y = paged_gqa_attention(q, kc, vc, page_table, pv)
         elif isinstance(cache, QuantKVCache):
             kq, ks = _q8(k)
             vq, vs = _q8(v)
@@ -312,15 +390,14 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
             vsc = cache.v_scale.at[rows, pv].set(vs[:, 0])
             valid = jnp.arange(cache.k.shape[1])[None, :] <= posb
             new_cache = QuantKVCache(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
-            k_read = _dq8(kc, ksc, x.dtype)
-            v_read = _dq8(vc, vsc, x.dtype)
+            y = decode_attention(q, _dq8(kc, ksc, x.dtype),
+                                 _dq8(vc, vsc, x.dtype), valid)
         else:
             kc = cache.k.at[rows, pv].set(k[:, 0])
             vc = cache.v.at[rows, pv].set(v[:, 0])
             valid = jnp.arange(cache.k.shape[1])[None, :] <= posb
             new_cache = KVCache(k=kc, v=vc)
-            k_read, v_read = new_cache.k, new_cache.v
-        y = decode_attention(q, k_read, v_read, valid)
+            y = decode_attention(q, kc, vc, valid)
     y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * hd), route)
     return x + y, new_cache
 
@@ -375,6 +452,21 @@ def init_gqa_cache(cfg: ArchConfig, batch: int, ctx: int, local: bool,
     return KVCache(k=k, v=v)
 
 
+def init_paged_gqa_cache(cfg: ArchConfig, n_pages: int, page_size: int,
+                         dtype):
+    """Global K/V page pool (page 0 = reserved null page)."""
+    hd = cfg.resolved_head_dim
+    kh = cfg.n_kv_heads
+    if cfg.kv_cache == "int8":
+        return PagedQuantKVCache(
+            k=jnp.zeros((n_pages, page_size, kh, hd), jnp.int8),
+            v=jnp.zeros((n_pages, page_size, kh, hd), jnp.int8),
+            k_scale=jnp.zeros((n_pages, page_size, kh), jnp.float32),
+            v_scale=jnp.zeros((n_pages, page_size, kh), jnp.float32))
+    return PagedKVCache(k=jnp.zeros((n_pages, page_size, kh, hd), dtype),
+                        v=jnp.zeros((n_pages, page_size, kh, hd), dtype))
+
+
 # ------------------------------------------------------------------ MLA
 
 def init_mla(key: jax.Array, cfg: ArchConfig):
@@ -426,17 +518,36 @@ def _mla_qkv(p, xn, cfg, positions, route=None):
 
 
 def apply_mla(p, x: jax.Array, cfg: ArchConfig, *, positions, mode: str,
-              cache=None, pos=None, route=None, **_):
+              cache=None, pos=None, route=None,
+              page_table: Optional[jax.Array] = None,
+              prefix=None, q_offset: int = 0, **_):
     """MLA attention.  Prefill caches only (c_kv, k_rope); decode uses the
     absorb trick (q projected into latent space) so per-step work is
-    O(ctx * kv_rank), not O(ctx * heads * head_dim)."""
+    O(ctx * kv_rank), not O(ctx * heads * head_dim).
+
+    ``page_table``/``prefix``/``q_offset``: see ``apply_gqa``.  A shared
+    prefix arrives as a dense LatentCache; its K/V are re-decompressed
+    through W_uk/W_uv here -- per-row linears, so bitwise what a full
+    prefill over prefix+suffix computes for those rows."""
     m = cfg.mla
     h = cfg.n_heads
     xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
 
     if mode in ("train", "prefill"):
         q, k, v, ckv, krope = _mla_qkv(p, xn, cfg, positions, route)
-        y = blockwise_attention(q, k, v, causal=True)
+        if prefix is not None:
+            b, lp = prefix.ckv.shape[0], prefix.ckv.shape[1]
+            k_nope_p = apply_linear(p["uk"], prefix.ckv, route).reshape(
+                b, lp, h, m.qk_nope_head_dim)
+            v_p = apply_linear(p["uv"], prefix.ckv, route).reshape(
+                b, lp, h, m.v_head_dim)
+            k_p = jnp.concatenate(
+                [k_nope_p,
+                 jnp.broadcast_to(prefix.krope[:, :, None, :],
+                                  (b, lp, h, m.qk_rope_head_dim))], axis=-1)
+            k = jnp.concatenate([k_p.astype(k.dtype), k], axis=1)
+            v = jnp.concatenate([v_p.astype(v.dtype), v], axis=1)
+        y = blockwise_attention(q, k, v, causal=True, q_offset=q_offset)
         new_cache = LatentCache(ckv=ckv, krope=krope) if mode == "prefill" else None
         y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * m.v_head_dim),
                          route)
@@ -459,23 +570,39 @@ def apply_mla(p, x: jax.Array, cfg: ArchConfig, *, positions, mode: str,
     krope_new = apply_rope(krope_new[:, :, None, :], posb,
                            cfg.rope_theta)[:, :, 0, :]
 
-    ckv = cache.ckv.at[rows, pv].set(ckv_new[:, 0])
-    krope = cache.krope.at[rows, pv].set(krope_new[:, 0])
-    new_cache = LatentCache(ckv=ckv, krope=krope)
+    paged = isinstance(cache, PagedLatentCache)
+    if paged:
+        ps = cache.ckv.shape[1]
+        pages = page_table[rows, pv // ps]
+        off = pv % ps
+        ckv = cache.ckv.at[pages, off].set(ckv_new[:, 0])
+        krope = cache.krope.at[pages, off].set(krope_new[:, 0])
+        new_cache = PagedLatentCache(ckv=ckv, krope=krope)
+    else:
+        ckv = cache.ckv.at[rows, pv].set(ckv_new[:, 0])
+        krope = cache.krope.at[rows, pv].set(krope_new[:, 0])
+        new_cache = LatentCache(ckv=ckv, krope=krope)
 
     # absorb: q_lat[h] = q_nope[h] @ W_uk[h]^T  -> score against latent
     wuk = _dense_weight(p["uk"])                     # (kv_rank, h*nope)
     wuk = wuk.reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
     q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
                        wuk.astype(jnp.float32))
-    s = jnp.einsum("bhr,bkr->bhk", q_lat, ckv.astype(jnp.float32))
-    s = s + jnp.einsum("bhd,bkd->bhk", q_rope[:, 0].astype(jnp.float32),
-                       krope.astype(jnp.float32))
-    s = s / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
-    valid = jnp.arange(ckv.shape[1])[None, :] <= posb    # (B, W)
-    s = jnp.where(valid[:, None, :], s, NEG_INF)
-    pr = jax.nn.softmax(s, axis=-1)
-    o_lat = jnp.einsum("bhk,bkr->bhr", pr, ckv.astype(jnp.float32))
+    if paged:
+        o_lat = paged_mla_attention(
+            q_lat, q_rope[:, 0].astype(jnp.float32), ckv, krope,
+            page_table, pv,
+            qk_dim=m.qk_nope_head_dim + m.qk_rope_head_dim)
+    else:
+        s = jnp.einsum("bhr,bkr->bhk", q_lat, ckv.astype(jnp.float32))
+        s = s + jnp.einsum("bhd,bkd->bhk", q_rope[:, 0].astype(jnp.float32),
+                           krope.astype(jnp.float32))
+        s = s / jnp.sqrt(jnp.float32(m.qk_nope_head_dim
+                                     + m.qk_rope_head_dim))
+        valid = jnp.arange(ckv.shape[1])[None, :] <= posb    # (B, W)
+        s = jnp.where(valid[:, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhk,bkr->bhr", pr, ckv.astype(jnp.float32))
     wuv = _dense_weight(p["uv"]).reshape(m.kv_lora_rank, h, m.v_head_dim)
     o = jnp.einsum("bhr,rhv->bhv", o_lat, wuv.astype(jnp.float32))
     y = o.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
@@ -497,3 +624,11 @@ def init_mla_cache(cfg: ArchConfig, batch: int, ctx: int, dtype):
     return LatentCache(
         ckv=jnp.zeros((batch, ctx, m.kv_lora_rank), dtype),
         krope=jnp.zeros((batch, ctx, m.qk_rope_head_dim), dtype))
+
+
+def init_paged_mla_cache(cfg: ArchConfig, n_pages: int, page_size: int,
+                         dtype):
+    m = cfg.mla
+    return PagedLatentCache(
+        ckv=jnp.zeros((n_pages, page_size, m.kv_lora_rank), dtype),
+        krope=jnp.zeros((n_pages, page_size, m.qk_rope_head_dim), dtype))

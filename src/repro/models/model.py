@@ -95,18 +95,24 @@ def init_params(key: jax.Array, cfg: ArchConfig):
 
 def apply_layer(p, x, cfg: ArchConfig, kind: str, mlp_kind: str, *,
                 mode: str, positions=None, cache=None, pos=None,
-                memory=None, causal=True, last_pos=None, route=None):
+                memory=None, causal=True, last_pos=None, route=None,
+                page_table=None, prefix_cache=None, q_offset: int = 0):
     """One block: mixer (+cross-attn) (+mlp).  Returns (x, new_cache).
     ``last_pos`` ((B,) int32, prefill only): last real position of a
     right-padded prompt, consumed by stateful mixers (masked-state
     prefill) and the rolling-window cache build.  ``route``
     (core.execplan.PhaseRoute): the entry point's resolved kernel route,
-    threaded into every projection and the MoE dispatch."""
+    threaded into every projection and the MoE dispatch.
+    ``page_table`` (decode) / ``prefix_cache`` + ``q_offset`` (prefill
+    continuation) reach only the self-attention mixer; cross-attention
+    K/V stay slot-dense and are never prefix-shared."""
     mixer_cache = cache.get("mixer") if cache else None
     x, new_mixer = MIXER_APPLY[kind](
         p["mixer"], x, cfg, positions=positions, mode=mode,
         cache=mixer_cache, pos=pos, causal=causal, last_pos=last_pos,
-        route=route)
+        route=route, page_table=page_table,
+        prefix=prefix_cache.get("mixer") if prefix_cache else None,
+        q_offset=q_offset)
     new_cache = {"mixer": new_mixer}
     if "cross" in p:
         cross_cache = cache.get("cross") if cache else None
@@ -126,19 +132,26 @@ def apply_layer(p, x, cfg: ArchConfig, kind: str, mlp_kind: str, *,
 
 def apply_group(gp, x, cfg: ArchConfig, group: LayerGroup, *, mode: str,
                 positions=None, caches=None, pos=None, memory=None,
-                causal=True, remat=True, last_pos=None, route=None):
-    """Scan over ``repeats``; the pattern is applied inside the body."""
+                causal=True, remat=True, last_pos=None, route=None,
+                page_table=None, prefix_caches=None, q_offset: int = 0):
+    """Scan over ``repeats``; the pattern is applied inside the body.
+    ``page_table`` is scan-invariant (every repeat indexes the same
+    slot->page map); ``prefix_caches`` are per-repeat stacked like
+    ``caches`` and ride the scan xs."""
     mlp_kind = _group_mlp(cfg, group)
 
     def body(xc, sl):
-        params_sl, cache_sl = sl
+        params_sl, cache_sl, prefix_sl = sl
         new_caches = []
         for pi, kind in enumerate(group.pattern):
             c = cache_sl[pi] if cache_sl is not None else None
+            pc = prefix_sl[pi] if prefix_sl is not None else None
             xc, nc = apply_layer(params_sl[pi], xc, cfg, kind, mlp_kind,
                                  mode=mode, positions=positions, cache=c,
                                  pos=pos, memory=memory, causal=causal,
-                                 last_pos=last_pos, route=route)
+                                 last_pos=last_pos, route=route,
+                                 page_table=page_table, prefix_cache=pc,
+                                 q_offset=q_offset)
             new_caches.append(nc)
         return xc, new_caches
 
@@ -148,7 +161,8 @@ def apply_group(gp, x, cfg: ArchConfig, group: LayerGroup, *, mode: str,
     def scan_body(xc, sl):
         return body(xc, sl)
 
-    xs = (gp, caches if caches is not None else None)
+    xs = (gp, caches if caches is not None else None,
+          prefix_caches if prefix_caches is not None else None)
     x, new_caches = jax.lax.scan(scan_body, x, xs, length=group.repeats)
     return x, new_caches
 
@@ -259,10 +273,20 @@ def init_cache(cfg: ArchConfig, batch: int, ctx: int):
 def prefill(params, cfg: ArchConfig, tokens: jax.Array,
             frontend_embeds: Optional[jax.Array] = None, *,
             logit_index=None,
-            plan: Optional[execplan.ExecutionPlan] = None):
+            plan: Optional[execplan.ExecutionPlan] = None,
+            prefix_cache=None, pos_offset: int = 0):
     """Process the prompt; returns (one-position logits, cache).
     Runs the ``prefill`` phase of ``plan`` (default: the model's
     resolved plan).
+
+    ``prefix_cache`` + ``pos_offset`` (STATIC Python int): continuation
+    prefill for radix prefix sharing.  ``tokens`` then hold only the
+    prompt SUFFIX; the shared prefix arrives as a dense batch=1 cache
+    (``gather_prefix_cache``) covering absolute positions
+    [0, pos_offset), and the returned cache covers only the suffix
+    (the engine's page table stitches prefix + suffix back together for
+    decode).  ``pos_offset`` must be static because blockwise
+    attention's triangular schedule consumes it in Python arithmetic.
 
     By default the logits are taken at the last prompt position.
     ``logit_index`` (scalar or (B,) int32, traced ok) selects another
@@ -282,16 +306,19 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array,
         memory = _encode(params, cfg, frontend_embeds, route)
     x = _embed_inputs(params, cfg, tokens, frontend_embeds)
     b, s, _ = x.shape
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    positions = jnp.broadcast_to(
+        pos_offset + jnp.arange(s, dtype=jnp.int32), (b, s))
     last_pos = None
     if logit_index is not None:
         last_pos = jnp.broadcast_to(jnp.asarray(logit_index, jnp.int32),
                                     (b,))
     caches = []
     for gi, g in enumerate(cfg.layer_groups):
+        pcs = prefix_cache["groups"][gi] if prefix_cache else None
         x, nc = apply_group(params["groups"][gi], x, cfg, g, mode="prefill",
                             positions=positions, memory=memory,
-                            last_pos=last_pos, route=route)
+                            last_pos=last_pos, route=route,
+                            prefix_caches=pcs, q_offset=pos_offset)
         caches.append(nc)
     x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if logit_index is None:
@@ -318,6 +345,7 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: jax.Array,
              or execplan.resolve_plan(cfg)).route("decode")
     x = apply_embedding(params["embed"], tokens)
     memory = cache.get("memory")
+    page_table = cache.get("page_table")
     b = x.shape[0]
     pos = attn.pos_vector(pos, b)
     positions = pos[:, None]
@@ -325,13 +353,16 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: jax.Array,
     for gi, g in enumerate(cfg.layer_groups):
         x, nc = apply_group(params["groups"][gi], x, cfg, g, mode="decode",
                             positions=positions, caches=cache["groups"][gi],
-                            pos=pos, memory=memory, route=route)
+                            pos=pos, memory=memory, route=route,
+                            page_table=page_table)
         new_groups.append(nc)
     x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = apply_lm_head(params["lm_head"], x)
     new_cache = {"groups": new_groups}
     if memory is not None:
         new_cache["memory"] = memory
+    if page_table is not None:
+        new_cache["page_table"] = page_table
     return logits, new_cache
 
 
@@ -374,6 +405,138 @@ def insert_cache_slot(cache, request_cache, slot):
         new["memory"] = jax.lax.dynamic_update_slice(cache["memory"], mem,
                                                      start)
     return new
+
+
+PAGEABLE_KINDS = ("attn", "mla")
+
+
+def init_paged_slot_cache(cfg: ArchConfig, n_slots: int, ctx: int, *,
+                          page_size: int, n_pages: int):
+    """Paged decode cache: pageable mixers (full-context GQA incl. int8,
+    MLA latents) share global page pools with NO batch axis; everything
+    position-bounded (rolling-window rings, recurrent state, cross-attn
+    K/V, encoder memory) stays slot-indexed dense.  Adds ``page_table``
+    (n_slots, max_pages) int32 with max_pages = ceil(ctx / page_size);
+    pool page 0 is the reserved null page, so the all-zero table is the
+    safe "no pages owned" state."""
+    dtype = jnp.dtype(cfg.dtype)
+    is_encdec = bool(cfg.encoder_groups)
+    enc_len = cfg.frontend_len if is_encdec else 0
+    max_pages = -(-ctx // page_size)
+    groups = []
+    for g in cfg.layer_groups:
+        per_pos = []
+        for kind in g.pattern:
+            if kind == "attn":
+                one = {"mixer": attn.init_paged_gqa_cache(
+                    cfg, n_pages, page_size, dtype)}
+            elif kind == "mla":
+                one = {"mixer": attn.init_paged_mla_cache(
+                    cfg, n_pages, page_size, dtype)}
+            else:
+                one = {"mixer": init_block_cache(
+                    cfg, kind, n_slots, ctx, dtype, False, 0)["mixer"]}
+            if is_encdec:
+                hd = cfg.resolved_head_dim
+                one["cross"] = attn.KVCache(
+                    k=jnp.zeros((n_slots, enc_len, cfg.n_kv_heads, hd),
+                                dtype),
+                    v=jnp.zeros((n_slots, enc_len, cfg.n_kv_heads, hd),
+                                dtype))
+            per_pos.append(jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (g.repeats,) + a.shape), one))
+        groups.append(per_pos)
+    cache = {"groups": groups,
+             "page_table": jnp.zeros((n_slots, max_pages), jnp.int32)}
+    if is_encdec:
+        cache["memory"] = jnp.zeros((n_slots, enc_len, cfg.d_model), dtype)
+    return cache
+
+
+def insert_paged_cache_slot(cache, request_cache, slot, start):
+    """Paged counterpart of ``insert_cache_slot``: scatter a batch=1
+    dense prefill cache into the pool pages slot ``slot`` owns.
+
+    The engine must have written the slot's ``page_table`` row BEFORE
+    calling this: request positions ``start + [0, T)`` land at pool page
+    ``page_table[slot, pos // ps]``, offset ``pos % ps``.  ``start`` is
+    the absolute position of the request cache's first entry (the shared
+    prefix length under radix sharing, else 0).  Pad-tail positions
+    beyond the slot's allocation map to the null page 0 — scratch the
+    position mask keeps invisible.  Non-pageable leaves place dense at
+    row ``slot`` exactly as the dense insert does.  ``slot``/``start``
+    may be traced (jits once per prefill bucket)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    page_row = cache["page_table"][slot]             # (max_pages,)
+
+    def place(small, big):
+        st = (jnp.int32(0), slot) + (jnp.int32(0),) * (big.ndim - 2)
+        return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                            st)
+
+    def scatter(pool, req):
+        # pool (repeats, P, ps, ...); req (repeats, 1, T, ...)
+        ps, t = pool.shape[2], req.shape[2]
+        positions = start + jnp.arange(t, dtype=jnp.int32)
+        return pool.at[:, page_row[positions // ps], positions % ps].set(
+            req[:, 0].astype(pool.dtype))
+
+    def place_obj(slot_obj, req_obj):
+        if isinstance(slot_obj, attn.PagedQuantKVCache):
+            return attn.PagedQuantKVCache(
+                k=scatter(slot_obj.k, req_obj.k),
+                v=scatter(slot_obj.v, req_obj.v),
+                k_scale=scatter(slot_obj.k_scale, req_obj.k_scale),
+                v_scale=scatter(slot_obj.v_scale, req_obj.v_scale))
+        if isinstance(slot_obj, attn.PagedKVCache):
+            return attn.PagedKVCache(k=scatter(slot_obj.k, req_obj.k),
+                                     v=scatter(slot_obj.v, req_obj.v))
+        if isinstance(slot_obj, attn.PagedLatentCache):
+            return attn.PagedLatentCache(
+                ckv=scatter(slot_obj.ckv, req_obj.ckv),
+                krope=scatter(slot_obj.krope, req_obj.krope))
+        return jax.tree_util.tree_map(place, req_obj, slot_obj)
+
+    groups = [[{key: place_obj(c[key], rc[key]) for key in c}
+               for c, rc in zip(gcs, rgcs)]
+              for gcs, rgcs in zip(cache["groups"],
+                                   request_cache["groups"])]
+    new = dict(cache, groups=groups)
+    if "memory" in cache:
+        mem = request_cache["memory"].astype(cache["memory"].dtype)
+        st = (slot,) + (jnp.int32(0),) * (cache["memory"].ndim - 1)
+        new["memory"] = jax.lax.dynamic_update_slice(cache["memory"], mem,
+                                                     st)
+    return new
+
+
+def gather_prefix_cache(cache, cfg: ArchConfig, page_row):
+    """Gather the pool pages listed in ``page_row`` ((n_hit,) int32)
+    into a dense batch=1 prefix cache for continuation prefill.
+
+    Only meaningful for archs whose every mixer is pageable (the
+    engine's radix-sharing eligibility check); jits once per n_hit."""
+    n_hit = page_row.shape[0]
+
+    def dense(pool):
+        # (repeats, P, ps, ...) -> (repeats, 1, n_hit*ps, ...)
+        g = pool[:, page_row]
+        return g.reshape((pool.shape[0], 1, n_hit * pool.shape[2])
+                         + pool.shape[3:])
+
+    def gather(obj):
+        if isinstance(obj, attn.PagedKVCache):
+            return attn.KVCache(k=dense(obj.k), v=dense(obj.v))
+        if isinstance(obj, attn.PagedLatentCache):
+            return attn.LatentCache(ckv=dense(obj.ckv),
+                                    krope=dense(obj.krope))
+        raise TypeError(
+            f"prefix sharing requires pageable caches, got {type(obj)}")
+
+    groups = [[{"mixer": gather(c["mixer"])} for c in gcs]
+              for gcs in cache["groups"]]
+    return {"groups": groups}
 
 
 def clear_cache_slot(cache, slot):

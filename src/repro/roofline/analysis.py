@@ -201,6 +201,50 @@ def with_kernel_weight_traffic(terms: RooflineTerms, dense_bytes: float,
                          chips=terms.chips)
 
 
+def kv_position_bytes(cfg) -> int:
+    """HBM bytes ONE decoded position's KV state occupies, summed over
+    every pageable attention layer (model.PAGEABLE_KINDS: global "attn"
+    and "mla"; ring-windowed / recurrent kinds hold O(window) state and
+    are excluded from the paged pool).  int8 KV counts 1-byte k/v plus
+    the per-(position, kv-head) f32 scales; MLA counts the latent row
+    (kv_lora_rank + qk_rope_head_dim) — the decompressed heads are never
+    resident.  This is the ``row`` term of the paged-vs-dense decode
+    traffic model below."""
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    per_layer = {}
+    if cfg.kv_cache == "int8":
+        per_layer["attn"] = 2 * cfg.n_kv_heads * (cfg.resolved_head_dim + 4)
+    else:
+        per_layer["attn"] = 2 * cfg.n_kv_heads * cfg.resolved_head_dim * dt
+    if cfg.mla is not None:
+        per_layer["mla"] = (cfg.mla.kv_lora_rank
+                            + cfg.mla.qk_rope_head_dim) * dt
+    total = 0
+    for g in cfg.layer_groups:
+        for kind in g.pattern:
+            total += per_layer.get(kind, 0) * g.repeats
+    return total
+
+
+def paged_kv_decode_traffic(cfg, positions, *, ctx: int,
+                            page_size: int) -> dict:
+    """Decode-step KV read traffic: dense slot ring vs paged pool.
+
+    ``positions`` is the per-slot absolute decode position (the engine's
+    ``pos`` vector).  The dense layout streams every slot's full
+    ``ctx``-wide ring each step regardless of fill; the paged kernel's
+    grid covers only the pages the slot's table actually maps, i.e.
+    ``ceil((pos+1)/page_size)`` pages of ``page_size`` positions.  The
+    ratio is the bandwidth-side win of paging at the roofline's
+    ``t_memory`` term (decode is memory-bound, so bytes ~ time)."""
+    row = kv_position_bytes(cfg)
+    dense = len(positions) * ctx * row
+    paged = sum(-(-(int(p) + 1) // page_size) * page_size * row
+                for p in positions)
+    return {"kv_row_bytes": row, "dense_bytes": dense, "paged_bytes": paged,
+            "traffic_ratio": paged / dense if dense else 0.0}
+
+
 def analyze(compiled, hlo_text: str, model_flops: float,
             chips: int) -> RooflineTerms:
     """Trip-count-aware terms (repro.roofline.hlo_cost): XLA's own

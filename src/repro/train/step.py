@@ -105,13 +105,18 @@ def make_prefill_step(cfg: ArchConfig, backend: Optional[str] = None,
     continuous-batching engine passes its resolved plan; ``backend`` is
     the compatibility spelling).  The optional ``logit_index`` batch
     entry reads the logits at the true last prompt token of a
-    right-padded (bucketed) prompt."""
+    right-padded (bucketed) prompt.  The optional ``prefix_cache`` batch
+    entry plus the ``pos_offset`` argument (STATIC int — jit callers
+    must mark it static) run a continuation prefill over a shared-prefix
+    cache (radix prefix sharing; see model.prefill)."""
     plan = _serving_plan(cfg, plan, backend)
 
-    def prefill_step(params, batch):
+    def prefill_step(params, batch, pos_offset: int = 0):
         return M.prefill(params, cfg, batch["tokens"],
                          batch.get("frontend"),
-                         logit_index=batch.get("logit_index"), plan=plan)
+                         logit_index=batch.get("logit_index"), plan=plan,
+                         prefix_cache=batch.get("prefix_cache"),
+                         pos_offset=pos_offset)
     return prefill_step
 
 

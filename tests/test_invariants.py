@@ -178,3 +178,64 @@ def test_dryrun_record_schema():
     for key in ("t_compute_s", "t_memory_s", "t_collective_s",
                 "bottleneck", "useful_ratio", "roofline_fraction"):
         assert key in t, key
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(1, 3), kh=st.sampled_from([1, 2]),
+       g=st.sampled_from([1, 2]), ps=st.sampled_from([4, 8]),
+       seed=st.integers(0, 1000))
+def test_paged_decode_equals_ring_decode(b, kh, g, ps, seed):
+    """Paged decode over a scattered page pool vs ring decode_attention
+    over the same rows, for any batch / head grouping / page size /
+    per-row position.  Two layers of the guarantee:
+
+    * GARBAGE INVARIANCE is bitwise: whatever the masked tail holds
+      (reused pages, the null page), the kernel output is bit-identical
+      to the same call over a zeroed pool — NEG_INF masking contributes
+      exact float zeros, so pool reuse can never perturb decode.
+    * NUMERICAL equality with the dense ring path is ulp-level (same f32
+      op sequence, different XLA fusion) — tight allclose, and the
+      engine's own tests pin the end-to-end consequence: bitwise TOKEN
+      parity with greedy_generate."""
+    from repro.kernels.paged_attention import paged_gqa_attention
+    from repro.models.attention import decode_attention
+    key = jax.random.PRNGKey(seed)
+    d, n_row_pages = 8, 3
+    h, w = kh * g, ps * n_row_pages
+    q = jax.random.normal(key, (b, 1, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, w, kh, d),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, w, kh, d),
+                          jnp.float32)
+    pos = np.asarray(jax.random.randint(jax.random.fold_in(key, 3), (b,),
+                                        0, w))
+    n_pool = 1 + b * n_row_pages
+    table = np.zeros((b, n_row_pages), np.int32)
+
+    def build_pool(fill):
+        kp = jnp.full((n_pool, ps, kh, d), fill, jnp.float32)
+        vp = jnp.full((n_pool, ps, kh, d), -fill, jnp.float32)
+        for i in range(b):
+            for p in range(n_row_pages):
+                idx = 1 + i * n_row_pages + p
+                # only live positions are real; the masked tail keeps
+                # the fill garbage
+                live = max(0, min(ps, int(pos[i]) + 1 - p * ps))
+                if live:
+                    kp = kp.at[idx, :live].set(k[i, p * ps:p * ps + live])
+                    vp = vp.at[idx, :live].set(v[i, p * ps:p * ps + live])
+                table[i, p] = idx
+        return kp, vp
+
+    kp_g, vp_g = build_pool(7.25)     # garbage-filled dead regions
+    kp_z, vp_z = build_pool(0.0)      # zero-filled dead regions
+    got = paged_gqa_attention(q, kp_g, vp_g, jnp.asarray(table),
+                              jnp.asarray(pos))
+    clean = paged_gqa_attention(q, kp_z, vp_z, jnp.asarray(table),
+                                jnp.asarray(pos))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(clean))
+
+    valid = jnp.arange(w)[None, :] <= pos[:, None]
+    want = decode_attention(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)

@@ -49,12 +49,14 @@ def test_resolver_default_routes():
     cfg = configs.get("granite_moe_1b_a400m", smoke=True)
     pl = resolve_plan(cfg)
     assert pl.prefill == PhaseRoute("kernel", "grouped")
-    assert pl.decode == PhaseRoute("kernel", "grouped")   # 1 token default
+    # 1 token default; decode is the paged-KV phase on every backend
+    assert pl.decode == PhaseRoute("kernel", "grouped", kv="paged")
     assert pl.train == PhaseRoute("reference", "dense_masked")
 
     ref = resolve_plan(cfg, backend="reference")
-    for phase in ("prefill", "decode", "train"):
+    for phase in ("prefill", "train"):
         assert ref.route(phase) == PhaseRoute("reference", "dense_masked")
+    assert ref.decode == PhaseRoute("reference", "dense_masked", kv="paged")
 
 
 def test_resolver_is_the_only_reader_of_cfg_backend():
@@ -88,14 +90,19 @@ def test_crossover_bands():
 def test_resolver_overrides_and_validation():
     cfg = configs.get("granite_moe_1b_a400m", smoke=True)
     pl = resolve_plan(cfg, overrides={"decode": {"moe": "dense_masked"}})
-    assert pl.decode == PhaseRoute("kernel", "dense_masked")
+    assert pl.decode == PhaseRoute("kernel", "dense_masked", kv="paged")
     assert pl.prefill == PhaseRoute("kernel", "grouped")
+    # kv is overridable per phase like the other route axes
+    dense_pl = resolve_plan(cfg, overrides={"decode": {"kv": "dense"}})
+    assert dense_pl.kv_layout("decode") == "dense"
     with pytest.raises(ValueError):
         resolve_plan(cfg, backend="banana")
     with pytest.raises(ValueError):
         resolve_plan(cfg, overrides={"decoding": {}})
     with pytest.raises(ValueError):
         PhaseRoute("kernel", "banana")
+    with pytest.raises(ValueError):
+        PhaseRoute("kernel", "grouped", kv="ring")
     with pytest.raises(ValueError):
         pl.route("serve")
 
