@@ -21,11 +21,24 @@ Gate rules:
 
 ``--update`` rewrites the baseline from the fresh run instead of gating
 (commit the result when a deliberate perf change moves the numbers).
+
+Trend mode (CI bench-history artifact):
+
+    PYTHONPATH=src python -m benchmarks.compare --trend .bench-history
+
+reads every ``BENCH_*.json`` in the directory (filenames carry the run
+timestamp, so lexical order is chronological), and prints a markdown
+trend table — per entry the latest us_per_call plus the delta over the
+last ``--last`` runs — which CI appends to the job summary.  Trend
+output never gates; it exists so a slow drift that stays inside the
+single-run threshold is still visible across runs.
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
+import os
 import shutil
 import sys
 
@@ -90,17 +103,69 @@ def compare(baseline: dict, fresh: dict, threshold: float,
     return failures
 
 
+def trend(history_dir: str, last: int) -> list:
+    """Markdown trend lines over the BENCH_*.json files in ``history_dir``.
+
+    Filenames embed a UTC timestamp (``BENCH_smoke_20260808T031500Z.json``)
+    so lexical sort is chronological.  Per entry: the latest us_per_call,
+    the delta vs ``last`` runs back (or the oldest run if fewer exist),
+    and a sparkline-ish min/max over the window.  Informational only --
+    the single-run gate in ``compare`` stays the enforcement point.
+    """
+    paths = sorted(glob.glob(os.path.join(history_dir, "BENCH_*.json")))
+    if not paths:
+        return [f"no BENCH_*.json history found in {history_dir}"]
+    window = paths[-(last + 1):]
+    runs = [(os.path.basename(p), load(p)) for p in window]
+    lines = [f"### bench trend ({len(runs)} run(s), newest: {runs[-1][0]})",
+             "", "| entry | latest us | vs {} run(s) back | window min..max |"
+             .format(len(runs) - 1),
+             "|---|---|---|---|"]
+    newest = runs[-1][1]
+    for name in sorted(newest):
+        if name.endswith(GATE_EXCLUDE_SUFFIX):
+            continue
+        series = [r[name]["us_per_call"] for _, r in runs if name in r]
+        latest = series[-1]
+        if latest <= 0:        # untimed / derived-only entries
+            note = newest[name].get("derived", "")
+            lines.append(f"| {name} | - | - | {note} |")
+            continue
+        if len(series) > 1 and series[0] > 0:
+            delta = (latest / series[0] - 1.0) * 100.0
+            dcol = f"{delta:+.1f}%"
+        else:
+            dcol = "new"
+        lines.append(f"| {name} | {latest:.1f} | {dcol} | "
+                     f"{min(series):.1f}..{max(series):.1f} |")
+    return lines
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("baseline")
-    ap.add_argument("fresh")
+    ap.add_argument("baseline", nargs="?")
+    ap.add_argument("fresh", nargs="?")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed fractional us_per_call regression")
     ap.add_argument("--min-us", type=float, default=20.0,
                     help="baseline timings below this are not gated")
     ap.add_argument("--update", action="store_true",
                     help="overwrite the baseline with the fresh run")
+    ap.add_argument("--trend", metavar="DIR",
+                    help="print a markdown trend table over the BENCH_*.json "
+                         "history in DIR instead of gating")
+    ap.add_argument("--last", type=int, default=5,
+                    help="trend window: compare the newest run against this "
+                         "many runs back")
     args = ap.parse_args(argv)
+
+    if args.trend:
+        for line in trend(args.trend, args.last):
+            print(line)
+        return 0
+
+    if not args.baseline or not args.fresh:
+        ap.error("baseline and fresh are required unless --trend is given")
 
     if args.update:
         shutil.copyfile(args.fresh, args.baseline)

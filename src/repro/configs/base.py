@@ -36,6 +36,17 @@ class SALRModelConfig:
     # "reference" keeps flat storage and the dense decode+GEMM path.
     # Gradients always take the reference path (custom VJP).
     backend: str = "kernel"
+    # dual-representation emission: compress_linear additionally stores a
+    # requantized NF4 twin of the base (SALRLinear.qbase, sharing the
+    # sparse structure and the adapters) so a plan can serve decode from
+    # fewer bytes (PhaseRoute.repr) while prefill/train read the native
+    # base.
+    dual_repr: bool = False
+    # cfg-default decode base representation consumed by
+    # execplan.resolve_plan: None/"native" streams the primary base;
+    # "nf4"/"bitmap_nf4" serve decode from the qbase twin (implies
+    # dual_repr emission is wanted).
+    decode_repr: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,7 +105,13 @@ class ArchConfig:
     # numerics
     norm_eps: float = 1e-5
     dtype: str = "bfloat16"
-    kv_cache: str = "native"         # native | int8 (quantized decode cache)
+    kv_cache: str = "native"         # native | int8 | nf4 (cache precision
+    #                                  of BOTH cache-writing phases)
+    # decode-only KV precision (None = follow kv_cache): prefill builds a
+    # native cache and the engine quantizes at slot insert, so only the
+    # decode phase reads quantized k/v (execplan.resolve_plan maps this
+    # to the decode route's kv_dtype).
+    decode_kv_cache: Optional[str] = None
     # compression
     salr: SALRModelConfig = SALRModelConfig()
     # which shapes this arch supports (sub-quadratic archs add long_500k)

@@ -61,6 +61,8 @@ from typing import Optional
 LINEAR_ROUTES = ("kernel", "reference")
 MOE_ROUTES = ("grouped", "decode_grid", "dense_masked")
 KV_ROUTES = ("dense", "paged")
+REPR_ROUTES = ("native", "nf4", "bitmap_nf4")
+KV_DTYPES = ("native", "int8", "nf4")
 PHASES = ("prefill", "decode", "train")
 
 # characteristic token counts used when the caller does not know the
@@ -134,10 +136,29 @@ class PhaseRoute:
     ``reference`` linears — and non-pageable leaves (rolling-window
     rings, recurrent state, cross-attention memory) stay dense whatever
     the route says, the same per-layer capability rule the linears
-    follow."""
+    follow.
+
+    ``repr`` picks the BASE REPRESENTATION the phase's SALR linears (and
+    MoE expert stacks) read: ``native`` streams the layer's primary base
+    (dense / tiled bitmap values / N:M), ``nf4`` / ``bitmap_nf4`` stream
+    the layer's requantized twin (``SALRLinear.qbase``, emitted by
+    ``compress_linear`` dual-representation mode) through the in-kernel
+    NF4 paths — fewer bytes per step on the bandwidth-bound decode
+    phase, at a budgeted quantization error (core/quant.ERROR_BUDGETS).
+    Layers without a ``qbase`` fall back to ``native`` per layer, the
+    usual capability rule.
+
+    ``kv_dtype`` picks the PRECISION of the phase's attention KV state:
+    ``native`` stores the model dtype, ``int8`` / ``nf4`` store
+    quantized k/v with per-(position, kv-head) scales, dequantized
+    in-kernel at decode (kernels/ring_attention.py /
+    kernels/paged_attention.py).  Orthogonal to ``kv`` — both the dense
+    ring and the paged pool quantize."""
     linear: str                    # kernel | reference
     moe: str                       # grouped | decode_grid | dense_masked
     kv: str = "dense"              # dense | paged
+    repr: str = "native"           # native | nf4 | bitmap_nf4
+    kv_dtype: str = "native"       # native | int8 | nf4
 
     def __post_init__(self):
         if self.linear not in LINEAR_ROUTES:
@@ -146,6 +167,10 @@ class PhaseRoute:
             raise ValueError(f"unknown MoE route {self.moe!r}")
         if self.kv not in KV_ROUTES:
             raise ValueError(f"unknown KV route {self.kv!r}")
+        if self.repr not in REPR_ROUTES:
+            raise ValueError(f"unknown base repr {self.repr!r}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(f"unknown KV dtype {self.kv_dtype!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,12 +195,20 @@ class ExecutionPlan:
     def kv_layout(self, phase: str) -> str:
         return self.route(phase).kv
 
+    def base_repr(self, phase: str) -> str:
+        return self.route(phase).repr
+
+    def kv_dtype(self, phase: str) -> str:
+        return self.route(phase).kv_dtype
+
     def describe(self) -> dict:
         """JSON-stable summary (dryrun plan snapshots, serve logging)."""
         return {
             **{ph: {"linear": self.route(ph).linear,
                     "moe": self.route(ph).moe,
-                    "kv": self.route(ph).kv} for ph in PHASES},
+                    "kv": self.route(ph).kv,
+                    "repr": self.route(ph).repr,
+                    "kv_dtype": self.route(ph).kv_dtype} for ph in PHASES},
             "crossover": self.crossover.as_dict(),
         }
 
@@ -206,8 +239,12 @@ def resolve_plan(cfg, *, backend: Optional[str] = None,
                       Missing phases use the defaults (prefill/train
                       large, decode 1).
     ``crossover``     overrides the committed default table (autotune).
-    ``overrides``     {phase: {"linear": ..., "moe": ...}} applied last —
-                      e.g. pin the decode MoE route for an experiment.
+    ``overrides``     {phase: {"linear": ..., "moe": ..., "kv": ...,
+                      "repr": ..., "kv_dtype": ...}} applied last — e.g.
+                      pin the decode MoE route for an experiment, or
+                      request a mixed-precision decode
+                      (``{"decode": {"repr": "bitmap_nf4",
+                      "kv_dtype": "int8"}}``).
 
     The train phase always resolves to the reference formulation
     (``reference`` linears, ``dense_masked`` MoE): gradients differentiate
@@ -222,6 +259,15 @@ def resolve_plan(cfg, *, backend: Optional[str] = None,
     plan exercises paging too and the engine parity sweep covers it.
     Prefill and train stay ``dense`` (they build fresh caches / none).
     Pin ``overrides={"decode": {"kv": "dense"}}`` for a no-paging run.
+
+    Precision (the cfg-default tier of the precedence chain):
+    ``cfg.kv_cache`` ("native"/"int8"/"nf4") sets the KV dtype of BOTH
+    cache-writing phases (prefill builds the cache decode reads);
+    ``cfg.decode_kv_cache`` quantizes only the decode phase (prefill
+    stays native; the engine quantizes at slot insert).
+    ``cfg.salr.decode_repr`` serves decode linears from the layer's
+    requantized ``qbase`` twin while prefill/train read the native base.
+    The train phase never quantizes (reference gradients).
     """
     b = backend if backend is not None else cfg.salr.backend
     if b not in LINEAR_ROUTES:
@@ -230,17 +276,24 @@ def resolve_plan(cfg, *, backend: Optional[str] = None,
     toks = dict(_DEFAULT_PHASE_TOKENS)
     toks.update(phase_tokens or {})
 
+    kv_dt = cfg.kv_cache if cfg.kv_cache in KV_DTYPES else "native"
+    dec_kv = getattr(cfg, "decode_kv_cache", None) or kv_dt
+    dec_repr = getattr(cfg.salr, "decode_repr", None) or "native"
+
     if b == "kernel":
         routes = {
-            "prefill": PhaseRoute("kernel", xo.route_for(toks["prefill"])),
+            "prefill": PhaseRoute("kernel", xo.route_for(toks["prefill"]),
+                                  kv_dtype=kv_dt),
             "decode": PhaseRoute("kernel", xo.route_for(toks["decode"]),
-                                 kv="paged"),
+                                 kv="paged", repr=dec_repr, kv_dtype=dec_kv),
             "train": PhaseRoute("reference", "dense_masked"),
         }
     else:
         routes = {
-            "prefill": PhaseRoute("reference", "dense_masked"),
-            "decode": PhaseRoute("reference", "dense_masked", kv="paged"),
+            "prefill": PhaseRoute("reference", "dense_masked",
+                                  kv_dtype=kv_dt),
+            "decode": PhaseRoute("reference", "dense_masked", kv="paged",
+                                 repr=dec_repr, kv_dtype=dec_kv),
             "train": PhaseRoute("reference", "dense_masked"),
         }
 

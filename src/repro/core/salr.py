@@ -41,7 +41,8 @@ import jax.numpy as jnp
 from repro.core import bitmap as bm
 from repro.core import prune
 from repro.core.adapters import LoRAAdapter, init_lora
-from repro.core.quant import NF4Tensor, dequantize_nf4, quantize_nf4
+from repro.core.quant import (NF4_LEVELS, NF4Tensor, dequantize_nf4,
+                              quantize_nf4)
 from repro.core.residual import truncated_svd_adapter
 
 
@@ -74,13 +75,37 @@ class SALRConfig:
     cap_align: int = 128
     dtype: str = "float32"
     backend: str = "kernel"       # kernel | reference (execution plan)
+    # dual-representation emission: additionally store a requantized NF4
+    # twin of the base (SALRLinear.qbase) sharing the sparse structure
+    # and the adapters, so a mixed-precision plan can serve decode from
+    # fewer bytes (PhaseRoute.repr) while prefill/train stay native.
+    dual_repr: bool = False
 
     def capacity(self, cols: int) -> int:
         return bm.default_capacity(cols, self.sparsity, self.cap_align)
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("base", "lora", "res", "bias"),
+         data_fields=("codes", "scales"), meta_fields=("shape", "block"))
+@dataclasses.dataclass(frozen=True)
+class QDenseWeight:
+    """Dense base NF4-requantized into the kernel 2D layout
+    (ops.nf4_matmul): codes (K, Np/2) uint8 + per-block scales
+    (K, Np/block) f32, where Np is the logical column count padded up to
+    the block multiple (padded columns quantize to exact zeros and are
+    sliced off after the GEMM)."""
+    codes: jax.Array
+    scales: jax.Array
+    shape: tuple                   # logical (K, N) (static)
+    block: int                     # scale block size (static)
+
+    def nbytes(self) -> int:
+        return (self.codes.size
+                + self.scales.size * self.scales.dtype.itemsize)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("base", "lora", "res", "bias", "qbase"),
          meta_fields=("d_in", "d_out", "transposed", "backend"))
 @dataclasses.dataclass(frozen=True)
 class SALRLinear:
@@ -92,6 +117,14 @@ class SALRLinear:
     (the fused kernels contract over storage rows), so ``transposed`` is
     False whenever ``base`` is Tiled/QTiledBitmapWeight — DESIGN.md §3.
     ``backend`` records the layer's default execution path.
+
+    ``qbase`` (optional, frozen like ``base``) is the dual-representation
+    twin: the SAME sparse structure with an NF4-requantized payload
+    (QTiledBitmapWeight sharing ``base.words``, or QDenseWeight for
+    dense bases).  A mixed-precision plan route (``PhaseRoute.repr`` in
+    {"nf4", "bitmap_nf4"}) streams it instead of the native base; the
+    adapters are shared untouched, so the route's error is exactly the
+    requantization error (core/quant.ERROR_BUDGETS).
     """
     base: object                   # Array | BitmapWeight | NMWeight |
     #                                QBitmapWeight | TiledBitmapWeight |
@@ -103,6 +136,7 @@ class SALRLinear:
     d_out: int
     transposed: bool
     backend: str = "reference"
+    qbase: object = None           # QTiledBitmapWeight | QDenseWeight | None
 
 
 def _is_tiled(base) -> bool:
@@ -128,6 +162,16 @@ def materialize_base(base) -> jax.Array:
         return bm.decode(bm.BitmapWeight(words=base.words,
                                          values=vals,
                                          cols=base.cols, cap=base.cap))
+    if isinstance(base, QDenseWeight):
+        kdim, n = base.shape
+        lo = (base.codes & jnp.uint8(0x0F)).astype(jnp.int32)
+        hi = (base.codes >> 4).astype(jnp.int32)
+        idx = jnp.stack([lo, hi], axis=-1).reshape(kdim, -1)
+        levels = jnp.asarray(NF4_LEVELS)
+        np_cols = idx.shape[1]
+        vals = (levels[idx].reshape(kdim, -1, base.block)
+                * base.scales[..., None]).reshape(kdim, np_cols)
+        return vals[:, :n]
     return base  # dense / masked-dense array
 
 
@@ -177,14 +221,20 @@ def _resolve_backend(layer: SALRLinear, backend: Optional[str]) -> str:
 
 
 def _apply_reference(x: jax.Array, layer: SALRLinear,
-                     precision=None, constrain_fn=None) -> jax.Array:
-    """Dense decode + GEMM (the differentiable oracle path)."""
-    w = materialize_base(layer.base)
-    if _is_tiled(layer.base):
-        w = w[:, :layer.d_out]            # drop tile zero-padding
+                     precision=None, constrain_fn=None,
+                     base=None) -> jax.Array:
+    """Dense decode + GEMM (the differentiable oracle path).  ``base``
+    (optional) substitutes another representation of the frozen base —
+    the quantized-repr oracle dequantizes ``layer.qbase`` here."""
+    if base is None:
+        base = layer.base
+    w = materialize_base(base)
+    if _is_tiled(base) or isinstance(base, QDenseWeight):
+        w = w[:, :layer.d_out]            # drop tile/block zero-padding
     if w.dtype != x.dtype:
         w = w.astype(x.dtype)
-    if constrain_fn is not None and not _is_tiled(layer.base):
+    if constrain_fn is not None and not _is_tiled(base) \
+            and not isinstance(base, QDenseWeight):
         # the storage-rows sharding convention only applies to flat bases
         w = constrain_fn(w)
     if layer.transposed:
@@ -253,9 +303,63 @@ def _kernel_forward_bwd(res, g):
 _kernel_forward.defvjp(_kernel_forward_fwd, _kernel_forward_bwd)
 
 
+def _qkernel_dispatch(x: jax.Array, layer: SALRLinear) -> jax.Array:
+    """Fused op over the dual-representation twin (layer.qbase): the
+    base product streams the requantized payload, the adapters/bias are
+    the SAME as the native path."""
+    from repro.kernels import ops  # deferred: kernels import core.bitmap
+    qb = layer.qbase
+    a_cat, b_cat = adapter_cat(layer)
+    if isinstance(qb, bm.QTiledBitmapWeight):
+        y = ops.qsalr_matmul(x, qb, a_cat, b_cat)[..., :layer.d_out]
+    elif isinstance(qb, QDenseWeight):
+        y = ops.nf4_matmul(x, qb.codes, qb.scales)[..., :layer.d_out]
+        if a_cat.shape[1]:
+            y = y + ops.lora_matmul(x, a_cat, b_cat)
+    else:
+        raise TypeError(f"no fused kernel for qbase {type(qb).__name__}")
+    if layer.bias is not None:
+        y = y + layer.bias
+    return y
+
+
+@jax.custom_vjp
+def _qkernel_forward(x: jax.Array, layer: SALRLinear) -> jax.Array:
+    return _qkernel_dispatch(x, layer)
+
+
+def _qkernel_forward_fwd(x, layer):
+    return _qkernel_dispatch(x, layer), (x, layer)
+
+
+def _qkernel_forward_bwd(res, g):
+    # backward replays the reference formulation over the dequantized
+    # twin (quantized routes are serving routes; grads here only matter
+    # for trace-through completeness and match what was computed)
+    x, layer = res
+    _, vjp = jax.vjp(
+        lambda xx, ll: _apply_reference(xx, ll, base=ll.qbase), x, layer)
+    return vjp(g)
+
+
+_qkernel_forward.defvjp(_qkernel_forward_fwd, _qkernel_forward_bwd)
+
+
+def _resolve_repr(base_repr: Optional[str]) -> str:
+    if base_repr is None:
+        from repro.core import execplan as plan_mod
+        override = plan_mod.current_override()
+        if override is not None:
+            # same phase convention as _resolve_backend: a direct
+            # phase-less call reads the scope plan's prefill route
+            base_repr = override.base_repr("prefill")
+    return base_repr or "native"
+
+
 def apply_salr(x: jax.Array, layer: SALRLinear,
                precision=None, constrain_fn=None,
-               backend: Optional[str] = None) -> jax.Array:
+               backend: Optional[str] = None,
+               base_repr: Optional[str] = None) -> jax.Array:
     """y = x @ W_hat + (x @ A_cat) @ B_cat (+ bias).  x: (..., d_in).
 
     ``backend`` selects the execution path (explicit arg — usually the
@@ -264,6 +368,14 @@ def apply_salr(x: jax.Array, layer: SALRLinear,
     Pallas op for the layer's base representation, ``"reference"``
     decodes dense and runs plain GEMMs.
 
+    ``base_repr`` selects the base REPRESENTATION (the threaded plan
+    route's ``repr``, then any plan-scope override, then ``"native"``):
+    a quantized repr ("nf4"/"bitmap_nf4") streams the layer's
+    dual-representation twin (``layer.qbase``) — through the in-kernel
+    NF4 ops under the kernel backend, or dequantized under the reference
+    backend (the budgeted-error oracle).  Layers without a ``qbase``
+    fall back to the native base, the usual capability rule.
+
     ``constrain_fn`` (optional) pins the decoded dense W_hat (rows, cols)
     to the storage-row sharding under pjit (repro.distributed.sharding);
     it applies to flat-storage reference decodes only — tiled plans keep
@@ -271,7 +383,14 @@ def apply_salr(x: jax.Array, layer: SALRLinear,
     without a fused kernel (dense / mask / unplanned flat) always take
     the reference path with the caller's precision/constrain semantics
     intact, whatever the requested backend."""
-    if _resolve_backend(layer, backend) == "kernel" and _kernel_capable(layer):
+    b = _resolve_backend(layer, backend)
+    r = _resolve_repr(base_repr)
+    if r != "native" and layer.qbase is not None:
+        if b == "kernel":
+            return _qkernel_forward(x, layer)
+        return _apply_reference(x, layer, precision, constrain_fn,
+                                base=layer.qbase)
+    if b == "kernel" and _kernel_capable(layer):
         return _kernel_forward(x, layer)
     return _apply_reference(x, layer, precision, constrain_fn)
 
@@ -375,10 +494,44 @@ def compress_linear(key: jax.Array, w: jax.Array, cfg: SALRConfig,
         raise ValueError(f"unknown SALR method {cfg.method!r}")
 
     lora = init_lora(key, d_in, d_out, cfg.lora_rank, dtype=dtype)
-    return SALRLinear(base=base, lora=lora, res=res_ad,
-                      bias=None if bias is None else bias.astype(dtype),
-                      d_in=d_in, d_out=d_out, transposed=out_transposed,
-                      backend=cfg.backend)
+    layer = SALRLinear(base=base, lora=lora, res=res_ad,
+                       bias=None if bias is None else bias.astype(dtype),
+                       d_in=d_in, d_out=d_out, transposed=out_transposed,
+                       backend=cfg.backend)
+    if cfg.dual_repr:
+        layer = dataclasses.replace(layer, qbase=attach_qbase(layer))
+    return layer
+
+
+def attach_qbase(layer: SALRLinear):
+    """Dual-representation twin of ``layer.base`` for mixed-precision
+    plan routes: the SAME sparse structure, NF4-requantized payload.
+
+    TiledBitmapWeight bases requantize per tile cell (QTiledBitmapWeight
+    aliasing ``base.words``); non-transposed dense/mask bases requantize
+    into the ``ops.nf4_matmul`` 2D layout (QDenseWeight, columns padded
+    to the QBLOCK multiple — padded zeros quantize exactly).  Bases that
+    are already quantized (QTiledBitmapWeight, QBitmapWeight) or have no
+    fused quantized op (NM, transposed flat) return None: the route
+    falls back to the native base, the usual capability rule.  The
+    requantization error is NOT folded into the residual adapter — the
+    adapters are shared with the native base, so the quantized route's
+    error is exactly the NF4 roundtrip (core/quant.ERROR_BUDGETS).
+    Traceable (pure jnp)."""
+    base = layer.base
+    if isinstance(base, bm.TiledBitmapWeight):
+        return bm.tile_quantize_nf4(base)[0]
+    if isinstance(base, jax.Array) and base.ndim == 2 \
+            and not layer.transposed:
+        from repro.kernels import ops  # deferred: kernels import core.bitmap
+        from repro.kernels.nf4_spmm import QBLOCK
+        kdim, n = base.shape
+        pad = (-n) % QBLOCK
+        w = jnp.pad(base.astype(jnp.float32), ((0, 0), (0, pad)))
+        codes, scales = ops.nf4_encode_2d(w)
+        return QDenseWeight(codes=codes, scales=scales,
+                            shape=(kdim, n), block=QBLOCK)
+    return None
 
 
 def _tiled_encode(w: jax.Array, cfg: SALRConfig,
@@ -477,8 +630,13 @@ def plan(layer: SALRLinear, mode: str = "kernel") -> SALRLinear:
                                backend=mode)
 
 
-def base_nbytes(layer: SALRLinear) -> int:
+def base_nbytes(layer: SALRLinear, base_repr: str = "native") -> int:
+    """Bytes STREAMED for the base product under ``base_repr`` — a
+    quantized repr with an emitted twin reads ``qbase``'s bytes, which
+    is what the decode roofline should charge."""
     base = layer.base
+    if base_repr != "native" and layer.qbase is not None:
+        base = layer.qbase
     if hasattr(base, "nbytes") and callable(base.nbytes):
         return base.nbytes()
     return base.size * base.dtype.itemsize

@@ -18,6 +18,10 @@ Three variants share the grid skeleton:
   paged_gqa_attention        -- bf16/f32 K/V pools (PagedKVCache)
   paged_quant_gqa_attention  -- int8 pools + per-(pos, head) scales,
                                 dequantized in-kernel (PagedQuantKVCache)
+  paged_nf4_gqa_attention    -- NF4 code pools (split nibble packing, see
+                                kernels/ring_attention.py) + per-(pos,
+                                head) scales, dequantized in-kernel
+                                (PagedNF4KVCache)
   paged_mla_attention        -- latent pools (PagedLatentCache): scores
                                 against c_kv/k_rope with ABSORBED
                                 queries, returns the latent-space output
@@ -198,6 +202,89 @@ def paged_quant_gqa_attention(q: jax.Array, k_pool: jax.Array,
     )
     out = pl.pallas_call(
         functools.partial(_quant_gqa_kernel, page_size=ps, n_pages=n_pages,
+                          groups=h // kh, out_dtype=q.dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(page_table, pos, q.reshape(b, h, dk), k_pool, v_pool, ks_pool, vs_pool)
+    return out.reshape(b, 1, h, dv)
+
+
+# ---------------------------------------------------------- NF4 GQA
+
+def _nf4_gqa_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                    o_ref, kg, vg, ksg, vsg, *, page_size: int,
+                    n_pages: int, groups: int, out_dtype):
+    del pt_ref
+    from repro.kernels.ring_attention import _nf4_halves
+    b, p = pl.program_id(0), pl.program_id(1)
+    _gather_page(kg, k_ref, p, page_size)
+    _gather_page(vg, v_ref, p, page_size)
+    _gather_page(ksg, ks_ref, p, page_size)
+    _gather_page(vsg, vs_ref, p, page_size)
+
+    @pl.when(p == n_pages - 1)
+    def _attend():
+        h, dk = q_ref.shape[1], q_ref.shape[2]
+        kh = h // groups
+        dk2 = dk // 2
+        dv2 = vg.shape[-1]
+        w = n_pages * page_size
+        k_lo, k_hi = _nf4_halves(kg[...], ksg[...], out_dtype)
+        v_lo, v_hi = _nf4_halves(vg[...], vsg[...], out_dtype)
+        qg = q_ref[0].reshape(kh, groups, dk).astype(jnp.float32)
+        # split score dot (split nibble packing: low nibbles = head dims
+        # [0, d/2), high nibbles = [d/2, d) -- no in-kernel interleave)
+        s = jnp.einsum("hgd,khd->hgk", qg[..., :dk2], k_lo)
+        s = s + jnp.einsum("hgd,khd->hgk", qg[..., dk2:], k_hi)
+        s = s / jnp.sqrt(jnp.float32(dk))
+        valid = jnp.arange(w) <= pos_ref[b]
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        out_lo = jnp.einsum("hgk,khd->hgd", pr, v_lo)
+        out_hi = jnp.einsum("hgk,khd->hgd", pr, v_hi)
+        o_ref[0, :, :dv2] = out_lo.reshape(h, dv2).astype(o_ref.dtype)
+        o_ref[0, :, dv2:] = out_hi.reshape(h, dv2).astype(o_ref.dtype)
+
+
+def paged_nf4_gqa_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, ks_pool: jax.Array,
+                            vs_pool: jax.Array, page_table: jax.Array,
+                            pos: jax.Array, *,
+                            interpret: bool = _INTERPRET) -> jax.Array:
+    """NF4-KV variant: code pools (P, ps, KH, d/2) uint8 (split nibble
+    packing, attention._qnf4) with per-(position, kv-head) scales
+    (P, ps, KH) f32, dequantized in-kernel."""
+    b, _, h, dk = q.shape
+    _, ps, kh, _ = k_pool.shape
+    dv = v_pool.shape[-1] * 2
+    n_pages = page_table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, dk), lambda bi, pi, pt, pv: (bi, 0, 0)),
+            pl.BlockSpec((1, ps, kh, dk // 2),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, ps, kh, dv // 2),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, ps, kh),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0)),
+            pl.BlockSpec((1, ps, kh),
+                         lambda bi, pi, pt, pv: (pt[bi, pi], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dv), lambda bi, pi, pt, pv: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_pages * ps, kh, dk // 2), jnp.uint8),
+            pltpu.VMEM((n_pages * ps, kh, dv // 2), jnp.uint8),
+            pltpu.VMEM((n_pages * ps, kh), jnp.float32),
+            pltpu.VMEM((n_pages * ps, kh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_nf4_gqa_kernel, page_size=ps, n_pages=n_pages,
                           groups=h // kh, out_dtype=q.dtype),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),

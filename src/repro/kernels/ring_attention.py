@@ -1,0 +1,192 @@
+"""Pallas TPU decode-attention kernels for DENSE-layout quantized KV
+caches (the (B, W, KH, d) slot caches of models/attention.py, as opposed
+to the paged pools of kernels/paged_attention.py).
+
+Two variants share the grid skeleton (grid=(B,), one program per slot,
+the slot's whole context row in VMEM, ``pos`` as a scalar-prefetch
+operand):
+
+  ring_quant_gqa_attention -- int8 K/V + per-(position, kv-head) absmax
+                              scales (QuantKVCache), dequantized
+                              in-kernel mirroring ``attention._dq8``
+                              exactly (int8 * scale -> model dtype ->
+                              f32), so the output matches the historical
+                              out-of-kernel dequant path to f32 ulp.
+  ring_nf4_gqa_attention   -- NF4 K/V codes + per-(position, kv-head)
+                              absmax scales (NF4KVCache).
+
+NF4 KV packing (``attention._qnf4``): codes are packed two-per-byte in
+the SPLIT convention -- byte i of a head-dim row holds element ``i`` in
+its low nibble and element ``i + d/2`` in its high nibble.  In-kernel
+dequant therefore needs NO nibble interleave: the low nibbles decode the
+first half of the head dim and the high nibbles the second half, the
+score dot splits into two half-width dots (a dot is order-invariant
+over the contracted axis is NOT needed -- the halves line up exactly),
+and the PV product writes the two output halves to static minor-dim
+slices.  This keeps the kernel free of minor-axis reshape/concat ops,
+which TPU Pallas restricts.
+
+Masking follows the dense reference (``decode_attention``): positions
+beyond ``pos[b]`` score NEG_INF, which contributes an exact float zero
+through softmax, so stale ring slots never perturb the output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import NF4_LEVELS
+from repro.kernels import compat
+from repro.kernels.ops import _INTERPRET
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------- int8 ring
+
+def _ring_quant_kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                       o_ref, *, groups: int, out_dtype):
+    b = pl.program_id(0)
+    h, dk = q_ref.shape[1], q_ref.shape[2]
+    kh = h // groups
+    w = k_ref.shape[1]
+    dv = v_ref.shape[-1]
+    # dequant mirrors attention._dq8 exactly (int8 * scale -> model
+    # dtype), then the f32 cast of the dense reference read path
+    k_read = (k_ref[0].astype(jnp.float32)
+              * ks_ref[0][..., None]).astype(out_dtype)
+    v_read = (v_ref[0].astype(jnp.float32)
+              * vs_ref[0][..., None]).astype(out_dtype)
+    qg = q_ref[0].reshape(kh, groups, dk).astype(jnp.float32)
+    s = jnp.einsum("hgd,khd->hgk", qg, k_read.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(dk))
+    valid = jnp.arange(w) <= pos_ref[b]
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hgk,khd->hgd", pr, v_read.astype(jnp.float32))
+    o_ref[0] = out.reshape(h, dv).astype(o_ref.dtype)
+
+
+def ring_quant_gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             k_scale: jax.Array, v_scale: jax.Array,
+                             pos: jax.Array, *,
+                             interpret: bool = _INTERPRET) -> jax.Array:
+    """One-token GQA attention over a dense int8 KV cache.
+
+    q: (B, 1, H, dk); k/v: (B, W, KH, d) int8; scales: (B, W, KH) f32;
+    pos: (B,) int32 last live position per slot.  Returns (B, 1, H, dv).
+    """
+    b, _, h, dk = q.shape
+    _, w, kh, _ = k.shape
+    dv = v.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, dk), lambda bi, pv: (bi, 0, 0)),
+            pl.BlockSpec((1, w, kh, dk), lambda bi, pv: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, w, kh, dv), lambda bi, pv: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, w, kh), lambda bi, pv: (bi, 0, 0)),
+            pl.BlockSpec((1, w, kh), lambda bi, pv: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dv), lambda bi, pv: (bi, 0, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_ring_quant_kernel, groups=h // kh,
+                          out_dtype=q.dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(pos, q.reshape(b, h, dk), k, v, k_scale, v_scale)
+    return out.reshape(b, 1, h, dv)
+
+
+# ---------------------------------------------------------- NF4 ring
+
+def _nf4_level_decode(idx):
+    """Elementwise NF4 codebook decode via a where-chain over the 16
+    scalar levels.  A gather from a (16,) table would close over an
+    array constant, which Pallas TPU kernels reject ("captures
+    constants ... pass them as inputs"); scalar constants lower fine."""
+    out = jnp.zeros(idx.shape, jnp.float32)
+    for i, v in enumerate(NF4_LEVELS):
+        out = jnp.where(idx == i, jnp.float32(v), out)
+    return out
+
+
+def _nf4_halves(codes, scale, out_dtype):
+    """Decode split-packed NF4 codes (w, kh, d/2) u8 into the two head-dim
+    halves (low nibbles -> [0, d/2), high nibbles -> [d/2, d)), each
+    scaled by the per-(position, head) absmax and rounded through the
+    model dtype (the _dq8 convention)."""
+    lo = _nf4_level_decode((codes & jnp.uint8(0x0F)).astype(jnp.int32))
+    hi = _nf4_level_decode((codes >> 4).astype(jnp.int32))
+    lo = (lo * scale[..., None]).astype(out_dtype).astype(jnp.float32)
+    hi = (hi * scale[..., None]).astype(out_dtype).astype(jnp.float32)
+    return lo, hi
+
+
+def _ring_nf4_kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                     o_ref, *, groups: int, out_dtype):
+    b = pl.program_id(0)
+    h, dk = q_ref.shape[1], q_ref.shape[2]
+    kh = h // groups
+    w = k_ref.shape[1]
+    dk2 = dk // 2
+    dv2 = v_ref.shape[-1]           # packed: dv/2 bytes per row
+    k_lo, k_hi = _nf4_halves(k_ref[0], ks_ref[0], out_dtype)
+    v_lo, v_hi = _nf4_halves(v_ref[0], vs_ref[0], out_dtype)
+    qg = q_ref[0].reshape(kh, groups, dk).astype(jnp.float32)
+    # split score dot: low nibbles cover q[..., :dk/2], high the rest
+    s = jnp.einsum("hgd,khd->hgk", qg[..., :dk2], k_lo)
+    s = s + jnp.einsum("hgd,khd->hgk", qg[..., dk2:], k_hi)
+    s = s / jnp.sqrt(jnp.float32(dk))
+    valid = jnp.arange(w) <= pos_ref[b]
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out_lo = jnp.einsum("hgk,khd->hgd", pr, v_lo)
+    out_hi = jnp.einsum("hgk,khd->hgd", pr, v_hi)
+    o_ref[0, :, :dv2] = out_lo.reshape(h, dv2).astype(o_ref.dtype)
+    o_ref[0, :, dv2:] = out_hi.reshape(h, dv2).astype(o_ref.dtype)
+
+
+def ring_nf4_gqa_attention(q: jax.Array, k_codes: jax.Array,
+                           v_codes: jax.Array, k_scale: jax.Array,
+                           v_scale: jax.Array, pos: jax.Array, *,
+                           interpret: bool = _INTERPRET) -> jax.Array:
+    """One-token GQA attention over a dense NF4 KV cache.
+
+    q: (B, 1, H, dk); codes: (B, W, KH, d/2) uint8 split-packed
+    (attention._qnf4); scales: (B, W, KH) f32; pos: (B,) int32.
+    Returns (B, 1, H, dv)."""
+    b, _, h, dk = q.shape
+    _, w, kh, _ = k_codes.shape
+    dv = v_codes.shape[-1] * 2
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, dk), lambda bi, pv: (bi, 0, 0)),
+            pl.BlockSpec((1, w, kh, dk // 2), lambda bi, pv: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, w, kh, dv // 2), lambda bi, pv: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, w, kh), lambda bi, pv: (bi, 0, 0)),
+            pl.BlockSpec((1, w, kh), lambda bi, pv: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dv), lambda bi, pv: (bi, 0, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_ring_nf4_kernel, groups=h // kh,
+                          out_dtype=q.dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dv), q.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(pos, q.reshape(b, h, dk), k_codes, v_codes, k_scale, v_scale)
+    return out.reshape(b, 1, h, dv)

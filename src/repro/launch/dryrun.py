@@ -245,16 +245,51 @@ def plan_snapshot() -> dict:
     return out
 
 
+def _flatten_snapshot(snap, prefix="") -> dict:
+    """{"arch.phase.field": value} leaves of a (possibly nested) plan
+    snapshot, so mismatches diff at field granularity."""
+    out = {}
+    for key, val in snap.items():
+        path = f"{prefix}{key}"
+        if isinstance(val, dict):
+            out.update(_flatten_snapshot(val, prefix=f"{path}."))
+        else:
+            out[path] = val
+    return out
+
+
+def diff_snapshots(resolved: dict, golden: dict) -> list:
+    """Human-readable field-level differences (empty = identical):
+    per changed leaf a ``path: resolved X != golden Y`` line, plus
+    explicit lines for fields only one side has (a new describe() field
+    means the golden needs regenerating, not that a route changed)."""
+    res, gol = _flatten_snapshot(resolved), _flatten_snapshot(golden)
+    lines = []
+    for path in sorted(set(res) | set(gol)):
+        if path not in gol:
+            lines.append(f"{path}: resolved {res[path]!r} "
+                         "(field missing from golden — regenerate the "
+                         "snapshot if describe() gained fields)")
+        elif path not in res:
+            lines.append(f"{path}: golden {gol[path]!r} "
+                         "(field no longer resolved)")
+        elif res[path] != gol[path]:
+            lines.append(f"{path}: resolved {res[path]!r} != "
+                         f"golden {gol[path]!r}")
+    return lines
+
+
 def run_plan_snapshot(path: str, check: bool) -> None:
     snap = plan_snapshot()
     if check:
         with open(path) as f:
             golden = json.load(f)
         if snap != golden:
-            print("PLAN SNAPSHOT MISMATCH (resolved vs committed golden):")
-            print("  resolved:", json.dumps(snap, indent=1, sort_keys=True))
-            print("  golden:  ", json.dumps(golden, indent=1,
-                                            sort_keys=True))
+            diff = diff_snapshots(snap, golden)
+            print(f"PLAN SNAPSHOT MISMATCH ({len(diff)} field(s), "
+                  "resolved vs committed golden):")
+            for line in diff:
+                print(f"  {line}")
             raise SystemExit(1)
         print(f"plan snapshot matches {path} "
               f"({', '.join(PLAN_SNAPSHOT_ARCHS)})")

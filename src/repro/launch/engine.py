@@ -59,9 +59,12 @@ references them.  Decode rides the Pallas paged-attention kernels
 to the dense reference, so the greedy-parity contract above survives
 the layout change.  Prefix sharing is enabled per-arch only when every
 mixer is pageable (no rings/recurrent state/frontend/enc-dec) and the
-cache is not quantized (a re-gathered int8 prefix would attend over
-dequantized values where the original prefill attended over raw ones —
-not bitwise); paging itself applies to any arch's pageable leaves.
+plan's DECODE route keeps the KV pool native (a re-gathered int8/NF4
+prefix would attend over dequantized values where the original prefill
+attended over raw ones — not bitwise); paging itself applies to any
+arch's pageable leaves at whatever precision the decode route names
+(``plan.kv_dtype("decode")`` sizes the pools; a native prefill cache is
+quantized on insert, so mixed plans pay quantization once per position).
 
 All forwards run a phase-aware execution plan resolved ONCE at engine
 construction (``core.execplan.resolve_plan``): the prefill ticks run the
@@ -354,11 +357,12 @@ class ContinuousBatchingEngine:
                         else ecfg.n_slots * self.max_pages + 1)
         # radix sharing needs every mixer's prompt state pageable (rings,
         # recurrent state and enc-dec/frontend prefixes are per-slot) and
-        # an unquantized cache (see module docstring)
+        # an unquantized DECODE cache (see module docstring) — the plan's
+        # decode kv_dtype is authoritative, not the cfg-wide knob
         self.sharable = (self.paged and ecfg.prefix_sharing
                          and kinds <= set(M.PAGEABLE_KINDS)
                          and not cfg.frontend and not cfg.encoder_groups
-                         and cfg.kv_cache != "int8")
+                         and self.plan.kv_dtype("decode") == "native")
 
         def prefill_fn(params, tokens, logit_index, frontend, prefix_cache,
                        pos_offset):
@@ -393,12 +397,18 @@ class ContinuousBatchingEngine:
             lambda cache, page_row: M.gather_prefix_cache(cache, cfg,
                                                           page_row))
 
+        # the slot/pool cache is what DECODE reads, so it is allocated at
+        # the decode route's KV precision; a native-precision prefill
+        # cache headed into a quantized pool is quantized at insert
+        kv_dt = self.plan.kv_dtype("decode")
         if self.paged:
             self.cache = M.init_paged_slot_cache(
                 cfg, ecfg.n_slots, ecfg.max_ctx,
-                page_size=ecfg.page_size, n_pages=self.n_pages)
+                page_size=ecfg.page_size, n_pages=self.n_pages,
+                kv_dtype=kv_dt)
         else:
-            self.cache = M.init_slot_cache(cfg, ecfg.n_slots, ecfg.max_ctx)
+            self.cache = M.init_slot_cache(cfg, ecfg.n_slots, ecfg.max_ctx,
+                                           kv_dtype=kv_dt)
         self.reset()
 
     def reset(self) -> None:
@@ -686,6 +696,11 @@ class ContinuousBatchingEngine:
             "backend": (self.ecfg.backend if self.ecfg.plan is None
                         else "custom-plan"),
             "plan": self.plan.describe(),
+            # resolved precision per phase (what actually ran, not what
+            # the cfg asked for — an explicit plan overrides the knobs)
+            "precision": {ph: {"repr": self.plan.base_repr(ph),
+                               "kv_dtype": self.plan.kv_dtype(ph)}
+                          for ph in ("prefill", "decode", "train")},
             **({"moe_route_prefill": _moe_desc(self.cfg,
                                                self.plan.route("prefill"),
                                                self.params),

@@ -17,9 +17,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.quant import NF4_LEVELS
 from repro.kernels.paged_attention import (paged_gqa_attention,
                                            paged_mla_attention,
+                                           paged_nf4_gqa_attention,
                                            paged_quant_gqa_attention)
+from repro.kernels.ring_attention import (ring_nf4_gqa_attention,
+                                          ring_quant_gqa_attention)
 from repro.models.layers import (apply_linear, apply_rmsnorm, apply_rope,
                                  init_linear, init_rmsnorm)
 
@@ -72,6 +76,19 @@ class QuantKVCache:
     v_scale: jax.Array  # (B, W, KH) f32
 
 
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("k", "v", "k_scale", "v_scale"), meta_fields=())
+@dataclasses.dataclass
+class NF4KVCache:
+    """NF4 KV cache: 4-bit codes (split nibble packing, ``_qnf4``) with
+    per-(position, kv-head) absmax scales -- quarter the bf16 cache
+    bandwidth; the ring decode kernel dequantizes in-kernel."""
+    k: jax.Array        # (B, W, KH, dk/2) uint8
+    v: jax.Array        # (B, W, KH, dv/2) uint8
+    k_scale: jax.Array  # (B, W, KH) f32
+    v_scale: jax.Array  # (B, W, KH) f32
+
+
 @partial(jax.tree_util.register_dataclass, data_fields=("k", "v"),
          meta_fields=())
 @dataclasses.dataclass
@@ -97,6 +114,18 @@ class PagedQuantKVCache:
     v_scale: jax.Array  # (P, page_size, KH) f32
 
 
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("k", "v", "k_scale", "v_scale"), meta_fields=())
+@dataclasses.dataclass
+class PagedNF4KVCache:
+    """Paged NF4 code pools + per-(position, kv-head) scales; the paged
+    NF4 decode kernel dequantizes in-kernel."""
+    k: jax.Array        # (P, page_size, KH, dk/2) uint8
+    v: jax.Array        # (P, page_size, KH, dv/2) uint8
+    k_scale: jax.Array  # (P, page_size, KH) f32
+    v_scale: jax.Array  # (P, page_size, KH) f32
+
+
 @partial(jax.tree_util.register_dataclass, data_fields=("ckv", "krope"),
          meta_fields=())
 @dataclasses.dataclass
@@ -117,6 +146,35 @@ def _q8(x):
 
 def _dq8(q, scale, dtype):
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _qnf4(x):
+    """x: (..., d) -> (codes (..., d/2) uint8, scale (...,) f32).
+
+    NF4 with one absmax block per (position, head) row, packed in the
+    SPLIT nibble convention: byte i holds element ``i`` in its low
+    nibble and element ``i + d/2`` in its high nibble, so the decode
+    kernels dequantize the two head-dim halves without any nibble
+    interleave (kernels/ring_attention.py)."""
+    d = x.shape[-1]
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8)
+    levels = jnp.asarray(NF4_LEVELS)
+    normed = xf / scale[..., None]
+    idx = jnp.argmin(jnp.abs(normed[..., None] - levels),
+                     axis=-1).astype(jnp.uint8)
+    lo, hi = idx[..., :d // 2], idx[..., d // 2:]
+    return (lo | (hi << 4)).astype(jnp.uint8), scale
+
+
+def _dqnf4(codes, scale, dtype):
+    """Inverse of ``_qnf4`` (split packing): low nibbles decode head
+    dims [0, d/2), high nibbles [d/2, d)."""
+    levels = jnp.asarray(NF4_LEVELS)
+    lo = levels[(codes & jnp.uint8(0x0F)).astype(jnp.int32)]
+    hi = levels[(codes >> 4).astype(jnp.int32)]
+    return (jnp.concatenate([lo, hi], axis=-1)
+            * scale[..., None]).astype(dtype)
 
 
 def pos_vector(pos, batch: int) -> jax.Array:
@@ -328,7 +386,9 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
         new_cache = None
         if mode == "prefill":
             new_cache = _build_cache(k, v, cfg, local, is_cross,
-                                     last_pos=last_pos)
+                                     last_pos=last_pos,
+                                     kv_dtype=getattr(route, "kv_dtype",
+                                                      None))
         y = apply_linear(p["wo"], y.reshape(*y.shape[:2], h * hd), route)
         return x + y, new_cache
 
@@ -373,6 +433,20 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
                                           v_scale=vsc)
             y = paged_quant_gqa_attention(q, kc, vc, ksc, vsc,
                                           page_table, pv)
+        elif isinstance(cache, PagedNF4KVCache):
+            ps = cache.k.shape[1]
+            pages = page_table[rows, pv // ps]
+            off = pv % ps
+            kq, ks = _qnf4(k)
+            vq, vs = _qnf4(v)
+            kc = cache.k.at[pages, off].set(kq[:, 0])
+            vc = cache.v.at[pages, off].set(vq[:, 0])
+            ksc = cache.k_scale.at[pages, off].set(ks[:, 0])
+            vsc = cache.v_scale.at[pages, off].set(vs[:, 0])
+            new_cache = PagedNF4KVCache(k=kc, v=vc, k_scale=ksc,
+                                        v_scale=vsc)
+            y = paged_nf4_gqa_attention(q, kc, vc, ksc, vsc,
+                                        page_table, pv)
         elif isinstance(cache, PagedKVCache):
             ps = cache.k.shape[1]
             pages = page_table[rows, pv // ps]
@@ -388,10 +462,19 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
             vc = cache.v.at[rows, pv].set(vq[:, 0])
             ksc = cache.k_scale.at[rows, pv].set(ks[:, 0])
             vsc = cache.v_scale.at[rows, pv].set(vs[:, 0])
-            valid = jnp.arange(cache.k.shape[1])[None, :] <= posb
             new_cache = QuantKVCache(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
-            y = decode_attention(q, _dq8(kc, ksc, x.dtype),
-                                 _dq8(vc, vsc, x.dtype), valid)
+            # in-kernel dequant (mirrors _dq8 bit-for-bit; the historical
+            # out-of-kernel path was decode_attention over _dq8(kc, ...))
+            y = ring_quant_gqa_attention(q, kc, vc, ksc, vsc, pv)
+        elif isinstance(cache, NF4KVCache):
+            kq, ks = _qnf4(k)
+            vq, vs = _qnf4(v)
+            kc = cache.k.at[rows, pv].set(kq[:, 0])
+            vc = cache.v.at[rows, pv].set(vq[:, 0])
+            ksc = cache.k_scale.at[rows, pv].set(ks[:, 0])
+            vsc = cache.v_scale.at[rows, pv].set(vs[:, 0])
+            new_cache = NF4KVCache(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
+            y = ring_nf4_gqa_attention(q, kc, vc, ksc, vsc, pv)
         else:
             kc = cache.k.at[rows, pv].set(k[:, 0])
             vc = cache.v.at[rows, pv].set(v[:, 0])
@@ -403,13 +486,22 @@ def apply_gqa(p, x: jax.Array, cfg: ArchConfig, *, local: bool = False,
 
 
 def _build_cache(k, v, cfg: ArchConfig, local: bool, is_cross: bool,
-                 last_pos=None):
+                 last_pos=None, kv_dtype=None):
+    """``kv_dtype`` is the cache precision to BUILD (the prefill route's
+    ``kv_dtype`` when a plan is threaded; None falls back to
+    ``cfg.kv_cache``, the historical model-wide setting)."""
+    if kv_dtype is None:
+        kv_dtype = cfg.kv_cache
     if is_cross:
         return KVCache(k=k, v=v)
-    if cfg.kv_cache == "int8" and not local:
+    if kv_dtype == "int8" and not local:
         kq, ks = _q8(k)
         vq, vs = _q8(v)
         return QuantKVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
+    if kv_dtype == "nf4" and not local:
+        kq, ks = _qnf4(k)
+        vq, vs = _qnf4(v)
+        return NF4KVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
     if local:
         # Ring slot i holds the latest REAL position p <= last_pos with
         # p % w == i (per row: continuous batching right-pads prompts,
@@ -432,7 +524,11 @@ def _build_cache(k, v, cfg: ArchConfig, local: bool, is_cross: bool,
 
 
 def init_gqa_cache(cfg: ArchConfig, batch: int, ctx: int, local: bool,
-                   dtype):
+                   dtype, kv_dtype=None):
+    """``kv_dtype`` overrides ``cfg.kv_cache`` (the decode route's
+    ``kv_dtype`` when the caller holds a resolved plan)."""
+    if kv_dtype is None:
+        kv_dtype = cfg.kv_cache
     hd = cfg.resolved_head_dim
     kh = cfg.n_kv_heads
     w = min(cfg.window, ctx) if local else ctx
@@ -441,10 +537,16 @@ def init_gqa_cache(cfg: ArchConfig, batch: int, ctx: int, local: bool,
         v = jnp.zeros((batch, w, kh, hd), dtype)
         return RingKVCache(k=k, v=v,
                            ring_pos=jnp.full((batch, w), -1, jnp.int32))
-    if cfg.kv_cache == "int8":
+    if kv_dtype == "int8":
         return QuantKVCache(
             k=jnp.zeros((batch, w, kh, hd), jnp.int8),
             v=jnp.zeros((batch, w, kh, hd), jnp.int8),
+            k_scale=jnp.zeros((batch, w, kh), jnp.float32),
+            v_scale=jnp.zeros((batch, w, kh), jnp.float32))
+    if kv_dtype == "nf4":
+        return NF4KVCache(
+            k=jnp.zeros((batch, w, kh, hd // 2), jnp.uint8),
+            v=jnp.zeros((batch, w, kh, hd // 2), jnp.uint8),
             k_scale=jnp.zeros((batch, w, kh), jnp.float32),
             v_scale=jnp.zeros((batch, w, kh), jnp.float32))
     k = jnp.zeros((batch, w, kh, hd), dtype)
@@ -453,14 +555,23 @@ def init_gqa_cache(cfg: ArchConfig, batch: int, ctx: int, local: bool,
 
 
 def init_paged_gqa_cache(cfg: ArchConfig, n_pages: int, page_size: int,
-                         dtype):
-    """Global K/V page pool (page 0 = reserved null page)."""
+                         dtype, kv_dtype=None):
+    """Global K/V page pool (page 0 = reserved null page).  ``kv_dtype``
+    overrides ``cfg.kv_cache`` (the decode route's ``kv_dtype``)."""
+    if kv_dtype is None:
+        kv_dtype = cfg.kv_cache
     hd = cfg.resolved_head_dim
     kh = cfg.n_kv_heads
-    if cfg.kv_cache == "int8":
+    if kv_dtype == "int8":
         return PagedQuantKVCache(
             k=jnp.zeros((n_pages, page_size, kh, hd), jnp.int8),
             v=jnp.zeros((n_pages, page_size, kh, hd), jnp.int8),
+            k_scale=jnp.zeros((n_pages, page_size, kh), jnp.float32),
+            v_scale=jnp.zeros((n_pages, page_size, kh), jnp.float32))
+    if kv_dtype == "nf4":
+        return PagedNF4KVCache(
+            k=jnp.zeros((n_pages, page_size, kh, hd // 2), jnp.uint8),
+            v=jnp.zeros((n_pages, page_size, kh, hd // 2), jnp.uint8),
             k_scale=jnp.zeros((n_pages, page_size, kh), jnp.float32),
             v_scale=jnp.zeros((n_pages, page_size, kh), jnp.float32))
     return PagedKVCache(k=jnp.zeros((n_pages, page_size, kh, hd), dtype),

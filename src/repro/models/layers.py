@@ -26,9 +26,12 @@ def salr_cfg_for(cfg: ArchConfig) -> SALRConfig:
     # (kernel-native tiled vs flat); which kernel actually runs a given
     # forward is the execution plan's decision (core/execplan.py —
     # resolve_plan is the only dispatch-time reader of cfg.salr.backend).
+    # dual_repr also switches on implicitly when the arch asks for a
+    # quantized decode representation — the twin must exist to serve it.
+    dual = s.dual_repr or (s.decode_repr not in (None, "native"))
     return SALRConfig(sparsity=s.sparsity, method=s.method,
                       lora_rank=s.lora_rank, res_rank=s.res_rank,
-                      dtype=cfg.dtype, backend=s.backend)
+                      dtype=cfg.dtype, backend=s.backend, dual_repr=dual)
 
 
 def init_linear(key: jax.Array, d_in: int, d_out: int, cfg: ArchConfig,
@@ -42,18 +45,21 @@ def init_linear(key: jax.Array, d_in: int, d_out: int, cfg: ArchConfig,
 
 
 def apply_linear(p, x: jax.Array, route=None,
-                 backend: str = None) -> jax.Array:
+                 backend: str = None, base_repr: str = None) -> jax.Array:
     """SALR layers dispatch on their execution plan: explicit ``backend``
-    wins, then the threaded phase ``route`` (a ``core.execplan.PhaseRoute``
-    resolved once per model and passed down the apply paths), then any
-    active plan-scope override, then the plan the layer was compressed
-    with (``SALRModelConfig.backend``)."""
+    / ``base_repr`` win, then the threaded phase ``route`` (a
+    ``core.execplan.PhaseRoute`` resolved once per model and passed down
+    the apply paths — its ``linear`` is the backend, its ``repr`` the
+    base representation), then any active plan-scope override, then the
+    plan the layer was compressed with (``SALRModelConfig.backend``)."""
     if isinstance(p, SALRLinear):
         from repro.distributed.sharding import constrain_weight_rows
         if backend is None and route is not None:
             backend = route.linear
+        if base_repr is None and route is not None:
+            base_repr = route.repr
         return apply_salr(x, p, constrain_fn=constrain_weight_rows,
-                          backend=backend)
+                          backend=backend, base_repr=base_repr)
     return x @ p["w"]
 
 

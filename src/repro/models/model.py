@@ -227,12 +227,12 @@ def forward_train(params, cfg: ArchConfig, tokens: jax.Array,
 # ----------------------------------------------------------------- cache
 
 def init_block_cache(cfg: ArchConfig, kind: str, batch: int, ctx: int,
-                     dtype, cross: bool, enc_len: int):
+                     dtype, cross: bool, enc_len: int, kv_dtype=None):
     c = {}
     if kind in ("attn", "attn_local"):
         c["mixer"] = attn.init_gqa_cache(cfg, batch, ctx,
                                          local=(kind == "attn_local"),
-                                         dtype=dtype)
+                                         dtype=dtype, kv_dtype=kv_dtype)
     elif kind == "mla":
         c["mixer"] = attn.init_mla_cache(cfg, batch, ctx, dtype)
     elif kind == "rglru":
@@ -249,9 +249,11 @@ def init_block_cache(cfg: ArchConfig, kind: str, batch: int, ctx: int,
     return c
 
 
-def init_cache(cfg: ArchConfig, batch: int, ctx: int):
+def init_cache(cfg: ArchConfig, batch: int, ctx: int, kv_dtype=None):
     """Decode cache skeleton: per group, per pattern position, stacked
-    over repeats.  For enc-dec also includes the encoder memory."""
+    over repeats.  For enc-dec also includes the encoder memory.
+    ``kv_dtype`` overrides ``cfg.kv_cache`` (pass the DECODE route's
+    ``kv_dtype`` -- decode reads this cache)."""
     dtype = jnp.dtype(cfg.dtype)
     is_encdec = bool(cfg.encoder_groups)
     enc_len = cfg.frontend_len if is_encdec else 0
@@ -260,7 +262,7 @@ def init_cache(cfg: ArchConfig, batch: int, ctx: int):
         per_pos = []
         for kind in g.pattern:
             one = init_block_cache(cfg, kind, batch, ctx, dtype,
-                                   is_encdec, enc_len)
+                                   is_encdec, enc_len, kv_dtype=kv_dtype)
             per_pos.append(jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a, (g.repeats,) + a.shape), one))
         groups.append(per_pos)
@@ -368,11 +370,29 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: jax.Array,
 
 # ----------------------------------------------------- slot-indexed cache
 
-def init_slot_cache(cfg: ArchConfig, n_slots: int, ctx: int):
+def init_slot_cache(cfg: ArchConfig, n_slots: int, ctx: int, kv_dtype=None):
     """Decode cache for a continuous-batching slot batch: row b of every
     leaf belongs to slot b, which serves one request at a time and is
-    reused (insert overwrites) when that request finishes."""
-    return init_cache(cfg, n_slots, ctx)
+    reused (insert overwrites) when that request finishes.  ``kv_dtype``
+    overrides ``cfg.kv_cache`` (the decode route's KV precision)."""
+    return init_cache(cfg, n_slots, ctx, kv_dtype=kv_dtype)
+
+
+def _quantize_request(slot_obj, req_obj):
+    """Quantize-at-insert: a native (KVCache) prefill cache headed into a
+    quantized slot cache is converted here, so mixed-precision plans can
+    prefill at full precision and pay the quantization exactly once per
+    position on the way into the decode pool."""
+    if isinstance(req_obj, attn.KVCache):
+        if isinstance(slot_obj, (attn.QuantKVCache, attn.PagedQuantKVCache)):
+            kq, ks = attn._q8(req_obj.k)
+            vq, vs = attn._q8(req_obj.v)
+            return attn.QuantKVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
+        if isinstance(slot_obj, (attn.NF4KVCache, attn.PagedNF4KVCache)):
+            kq, ks = attn._qnf4(req_obj.k)
+            vq, vs = attn._qnf4(req_obj.v)
+            return attn.NF4KVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
+    return req_obj
 
 
 def insert_cache_slot(cache, request_cache, slot):
@@ -387,6 +407,8 @@ def insert_cache_slot(cache, request_cache, slot):
     Recurrent-state leaves (RG-LRU/mLSTM/sLSTM) have no time axis; their
     slot row is overwritten wholesale, which is why stale state from a
     previous occupant can never leak into a new request.
+    A native-precision request cache headed into a quantized slot cache
+    is quantized at insert (``_quantize_request``).
     ``slot`` may be traced (the insert jits once per prefill bucket).
     """
     slot = jnp.asarray(slot, jnp.int32)
@@ -396,8 +418,14 @@ def insert_cache_slot(cache, request_cache, slot):
         return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
                                             start)
 
-    groups = jax.tree_util.tree_map(place, request_cache["groups"],
-                                    cache["groups"])
+    def place_obj(slot_obj, req_obj):
+        return jax.tree_util.tree_map(
+            place, _quantize_request(slot_obj, req_obj), slot_obj)
+
+    groups = [[{key: place_obj(c[key], rc[key]) for key in c}
+               for c, rc in zip(gcs, rgcs)]
+              for gcs, rgcs in zip(cache["groups"],
+                                   request_cache["groups"])]
     new = dict(cache, groups=groups)
     if "memory" in cache:
         mem = request_cache["memory"].astype(cache["memory"].dtype)
@@ -411,14 +439,15 @@ PAGEABLE_KINDS = ("attn", "mla")
 
 
 def init_paged_slot_cache(cfg: ArchConfig, n_slots: int, ctx: int, *,
-                          page_size: int, n_pages: int):
-    """Paged decode cache: pageable mixers (full-context GQA incl. int8,
-    MLA latents) share global page pools with NO batch axis; everything
-    position-bounded (rolling-window rings, recurrent state, cross-attn
-    K/V, encoder memory) stays slot-indexed dense.  Adds ``page_table``
-    (n_slots, max_pages) int32 with max_pages = ceil(ctx / page_size);
-    pool page 0 is the reserved null page, so the all-zero table is the
-    safe "no pages owned" state."""
+                          page_size: int, n_pages: int, kv_dtype=None):
+    """Paged decode cache: pageable mixers (full-context GQA incl.
+    int8/NF4, MLA latents) share global page pools with NO batch axis;
+    everything position-bounded (rolling-window rings, recurrent state,
+    cross-attn K/V, encoder memory) stays slot-indexed dense.  Adds
+    ``page_table`` (n_slots, max_pages) int32 with max_pages =
+    ceil(ctx / page_size); pool page 0 is the reserved null page, so the
+    all-zero table is the safe "no pages owned" state.  ``kv_dtype``
+    overrides ``cfg.kv_cache`` (the decode route's KV precision)."""
     dtype = jnp.dtype(cfg.dtype)
     is_encdec = bool(cfg.encoder_groups)
     enc_len = cfg.frontend_len if is_encdec else 0
@@ -429,7 +458,7 @@ def init_paged_slot_cache(cfg: ArchConfig, n_slots: int, ctx: int, *,
         for kind in g.pattern:
             if kind == "attn":
                 one = {"mixer": attn.init_paged_gqa_cache(
-                    cfg, n_pages, page_size, dtype)}
+                    cfg, n_pages, page_size, dtype, kv_dtype=kv_dtype)}
             elif kind == "mla":
                 one = {"mixer": attn.init_paged_mla_cache(
                     cfg, n_pages, page_size, dtype)}
@@ -483,8 +512,10 @@ def insert_paged_cache_slot(cache, request_cache, slot, start):
             req[:, 0].astype(pool.dtype))
 
     def place_obj(slot_obj, req_obj):
-        if isinstance(slot_obj, attn.PagedQuantKVCache):
-            return attn.PagedQuantKVCache(
+        req_obj = _quantize_request(slot_obj, req_obj)
+        if isinstance(slot_obj, (attn.PagedQuantKVCache,
+                                 attn.PagedNF4KVCache)):
+            return type(slot_obj)(
                 k=scatter(slot_obj.k, req_obj.k),
                 v=scatter(slot_obj.v, req_obj.v),
                 k_scale=scatter(slot_obj.k_scale, req_obj.k_scale),

@@ -128,23 +128,25 @@ def init_moe(key: jax.Array, cfg: ArchConfig):
 # reference backend: dense masked einsum over the stacked expert axis
 # ---------------------------------------------------------------------------
 
-def _expert_matmul(stack, x: jax.Array, backend=None) -> jax.Array:
+def _expert_matmul(stack, x: jax.Array, backend=None,
+                   base_repr=None) -> jax.Array:
     """Apply every expert to its token block.
 
     x: (N, d_in) shared input (every expert sees every token) or
     (E, N, d_in) per-expert hidden states.  Returns (E, N, d_out).
     Each output element is an independent dot over d_in, so a token's
     expert outputs are bitwise invariant to the co-batched token count
-    -- the property the serving parity checks rely on.  ``backend``
-    threads the phase's linear route into the vmapped ``apply_salr``
-    (None keeps the per-layer/scope default)."""
+    -- the property the serving parity checks rely on.  ``backend`` /
+    ``base_repr`` thread the phase's linear route and base
+    representation into the vmapped ``apply_salr`` (None keeps the
+    per-layer/scope default)."""
     shared = x.ndim == 2
     if isinstance(stack, SALRLinear):
         if shared:
-            return jax.vmap(lambda lin: apply_salr(x, lin,
-                                                   backend=backend))(stack)
-        return jax.vmap(lambda lin, xe: apply_salr(xe, lin,
-                                                   backend=backend))(stack, x)
+            return jax.vmap(lambda lin: apply_salr(
+                x, lin, backend=backend, base_repr=base_repr))(stack)
+        return jax.vmap(lambda lin, xe: apply_salr(
+            xe, lin, backend=backend, base_repr=base_repr))(stack, x)
     w = stack["w"].astype(x.dtype)
     eq = "nd,edf->enf" if shared else "end,edf->enf"
     return jnp.einsum(eq, x, w)
@@ -152,7 +154,7 @@ def _expert_matmul(stack, x: jax.Array, backend=None) -> jax.Array:
 
 def _experts_reference(p, tokens: jax.Array, top_i: jax.Array,
                        w: jax.Array, cfg: ArchConfig,
-                       linear_backend=None) -> jax.Array:
+                       linear_backend=None, base_repr=None) -> jax.Array:
     """E-way dense masked compute: every expert runs over the full token
     set (expert axis EP-sharded); the combine einsum zeroes non-selected
     experts and its reduction over E is the EP all-reduce.  This is the
@@ -160,11 +162,11 @@ def _experts_reference(p, tokens: jax.Array, top_i: jax.Array,
     from repro.distributed.sharding import constrain_expert_stack
     cw = combine_weights(top_i, w, cfg.n_experts).astype(tokens.dtype)
     gate = constrain_expert_stack(
-        _expert_matmul(p["gate"], tokens, linear_backend))
+        _expert_matmul(p["gate"], tokens, linear_backend, base_repr))
     up = constrain_expert_stack(
-        _expert_matmul(p["up"], tokens, linear_backend))
+        _expert_matmul(p["up"], tokens, linear_backend, base_repr))
     out = _expert_matmul(p["down"], jax.nn.silu(gate) * up,
-                         linear_backend)                      # (E, N, d)
+                         linear_backend, base_repr)           # (E, N, d)
     return jnp.einsum("ne,end->nd", cw, out)
 
 
@@ -263,7 +265,20 @@ def _grouped_capable(stack) -> bool:
     return not isinstance(base, (bm.BitmapWeight, QBitmapWeight))
 
 
-def _grouped_linear(stack, xs: jax.Array, g: GroupedAssignments) -> jax.Array:
+def _repr_base(stack: SALRLinear, base_repr: str):
+    """Base the kernel routes should stream under ``base_repr``: a
+    quantized repr substitutes the stacked dual-representation twin when
+    a grouped/decode kernel exists for it (stacked QTiledBitmapWeight →
+    the *_qsalr ops); stacks without one fall back to the native base,
+    the usual capability rule."""
+    if base_repr != "native" and \
+            isinstance(stack.qbase, bm.QTiledBitmapWeight):
+        return stack.qbase
+    return stack.base
+
+
+def _grouped_linear(stack, xs: jax.Array, g: GroupedAssignments,
+                    base_repr: str = "native") -> jax.Array:
     """One grouped expert matmul: dispatch on the stack's base layout to
     the matching kernels/grouped_spmm.py op (decode in-kernel)."""
     from repro.kernels import ops  # deferred: kernels import core.bitmap
@@ -272,7 +287,7 @@ def _grouped_linear(stack, xs: jax.Array, g: GroupedAssignments) -> jax.Array:
                                         stack["w"].astype(xs.dtype),
                                         block_m=g.block_m)
     a_cat, b_cat = _stacked_adapter_cat(stack)
-    base = stack.base
+    base = _repr_base(stack, base_repr)
     if isinstance(base, bm.TiledBitmapWeight):
         y = ops.grouped_salr_matmul(xs, g.tile_expert, base, a_cat, b_cat,
                                     block_m=g.block_m)
@@ -290,7 +305,7 @@ def _grouped_linear(stack, xs: jax.Array, g: GroupedAssignments) -> jax.Array:
 
 
 def _grouped_ffn(cfg: ArchConfig, p, tokens: jax.Array, top_i: jax.Array,
-                 w: jax.Array) -> jax.Array:
+                 w: jax.Array, base_repr: str = "native") -> jax.Array:
     """k-way expert FFN over the grouped row buffer.
 
     Gather token rows to block-aligned expert groups (padding rows are
@@ -305,10 +320,10 @@ def _grouped_ffn(cfg: ArchConfig, p, tokens: jax.Array, top_i: jax.Array,
                           _group_block_m(n * k, cfg.n_experts))
     xs = jnp.zeros((g.m_pad, d), tokens.dtype).at[g.dst].set(tokens[g.tok])
     xs = constrain_grouped_tokens(xs)
-    gate = _grouped_linear(p["gate"], xs, g)
-    up = _grouped_linear(p["up"], xs, g)
+    gate = _grouped_linear(p["gate"], xs, g, base_repr)
+    up = _grouped_linear(p["up"], xs, g, base_repr)
     hs = constrain_grouped_tokens(jax.nn.silu(gate) * up)
-    out = _grouped_linear(p["down"], hs, g)                 # (m_pad, d)
+    out = _grouped_linear(p["down"], hs, g, base_repr)      # (m_pad, d)
     per = out[g.dst[g.inv]].reshape(n, k, d)                # assignment order
     return jnp.einsum("nk,nkd->nd", w.astype(per.dtype), per)
 
@@ -317,8 +332,8 @@ def _grouped_ffn(cfg: ArchConfig, p, tokens: jax.Array, top_i: jax.Array,
 # decode_grid route: masked expert grid over assignment-order rows
 # ---------------------------------------------------------------------------
 
-def _decode_grid_linear(stack, xs: jax.Array,
-                        row_expert: jax.Array) -> jax.Array:
+def _decode_grid_linear(stack, xs: jax.Array, row_expert: jax.Array,
+                        base_repr: str = "native") -> jax.Array:
     """One decode-grid expert matmul: dispatch on the stack's base layout
     to the matching kernels/grouped_spmm.py decode op."""
     from repro.kernels import ops  # deferred: kernels import core.bitmap
@@ -326,7 +341,7 @@ def _decode_grid_linear(stack, xs: jax.Array,
         return ops.decode_dense_matmul(xs, row_expert,
                                        stack["w"].astype(xs.dtype))
     a_cat, b_cat = _stacked_adapter_cat(stack)
-    base = stack.base
+    base = _repr_base(stack, base_repr)
     if isinstance(base, bm.TiledBitmapWeight):
         y = ops.decode_salr_matmul(xs, row_expert, base, a_cat, b_cat)
     elif isinstance(base, bm.QTiledBitmapWeight):
@@ -340,7 +355,8 @@ def _decode_grid_linear(stack, xs: jax.Array,
 
 
 def _decode_grid_ffn(cfg: ArchConfig, p, tokens: jax.Array,
-                     top_i: jax.Array, w: jax.Array) -> jax.Array:
+                     top_i: jax.Array, w: jax.Array,
+                     base_repr: str = "native") -> jax.Array:
     """Expert FFN over the decode-specialized masked grid.
 
     No grouping: row ``a`` of the buffer is assignment ``a`` in plain
@@ -359,10 +375,10 @@ def _decode_grid_ffn(cfg: ArchConfig, p, tokens: jax.Array,
     row_expert = jnp.pad(top_i.reshape(a).astype(jnp.int32),
                          (0, m_pad - a), constant_values=-1)
     xs = constrain_grouped_tokens(xs)
-    gate = _decode_grid_linear(p["gate"], xs, row_expert)
-    up = _decode_grid_linear(p["up"], xs, row_expert)
+    gate = _decode_grid_linear(p["gate"], xs, row_expert, base_repr)
+    up = _decode_grid_linear(p["up"], xs, row_expert, base_repr)
     hs = constrain_grouped_tokens(jax.nn.silu(gate) * up)
-    out = _decode_grid_linear(p["down"], hs, row_expert)    # (m_pad, d)
+    out = _decode_grid_linear(p["down"], hs, row_expert, base_repr)  # (m_pad, d)
     per = out[:a].reshape(n, k, d)                          # assignment order
     return jnp.einsum("nk,nkd->nd", w.astype(per.dtype), per)
 
@@ -370,23 +386,26 @@ def _decode_grid_ffn(cfg: ArchConfig, p, tokens: jax.Array,
 _KERNEL_FFNS = {"grouped": _grouped_ffn, "decode_grid": _decode_grid_ffn}
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _experts_kernel(cfg: ArchConfig, route: str, p, tokens, top_i, w):
-    return _KERNEL_FFNS[route](cfg, p, tokens, top_i, w)
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _experts_kernel(cfg: ArchConfig, route: str, base_repr: str,
+                    p, tokens, top_i, w):
+    return _KERNEL_FFNS[route](cfg, p, tokens, top_i, w, base_repr)
 
 
-def _experts_kernel_fwd(cfg, route, p, tokens, top_i, w):
-    return (_KERNEL_FFNS[route](cfg, p, tokens, top_i, w),
+def _experts_kernel_fwd(cfg, route, base_repr, p, tokens, top_i, w):
+    return (_KERNEL_FFNS[route](cfg, p, tokens, top_i, w, base_repr),
             (p, tokens, top_i, w))
 
 
-def _experts_kernel_bwd(cfg, route, res, grad):
+def _experts_kernel_bwd(cfg, route, base_repr, res, grad):
     # Pallas kernels carry no AD rules; the backward pass runs the exact
     # reference formulation (same convention as salr._kernel_forward:
-    # reference grads, frozen bases un-differentiated).
+    # reference grads, frozen bases un-differentiated) — over the SAME
+    # base representation the forward streamed.
     p, tokens, top_i, w = res
     _, vjp = jax.vjp(
-        lambda pp, tt, ii, ww: _experts_reference(pp, tt, ii, ww, cfg),
+        lambda pp, tt, ii, ww: _experts_reference(
+            pp, tt, ii, ww, cfg, base_repr=base_repr),
         p, tokens, top_i, w)
     return vjp(grad)
 
@@ -484,14 +503,16 @@ def apply_moe(p, x: jax.Array, cfg: ArchConfig, route=None,
 
     top_i, w, _ = route_tokens(p["router"]["w"], tokens, cfg)
     r = _resolve_moe_route(cfg, route, backend)
+    br = route.repr if isinstance(route, execplan.PhaseRoute) else "native"
     if r != "dense_masked" and not all(
             _grouped_capable(p[t]) for t in ("gate", "up", "down")):
         r = "dense_masked"
     if r == "dense_masked":
         lb = route.linear if isinstance(route, execplan.PhaseRoute) else None
-        y = _experts_reference(p, tokens, top_i, w, cfg, linear_backend=lb)
+        y = _experts_reference(p, tokens, top_i, w, cfg,
+                               linear_backend=lb, base_repr=br)
     else:
-        y = _experts_kernel(cfg, r,
+        y = _experts_kernel(cfg, r, br,
                             {t: p[t] for t in ("gate", "up", "down")},
                             tokens, top_i, w)
     y = y.reshape(b, s, d).astype(x.dtype)

@@ -138,14 +138,17 @@ class RooflineTerms:
         }
 
 
-def salr_weight_bytes(params) -> tuple[int, int]:
+def salr_weight_bytes(params, base_repr: str = "native") -> tuple[int, int]:
     """(dense_equivalent_bytes, encoded_bytes) summed over every
     SALRLinear in ``params`` (abstract ShapeDtypeStruct leaves work too).
 
     ``dense_equivalent`` is what the base would stream from HBM if it
     were decoded/densified (the reference path's weight traffic);
     ``encoded`` is the compressed bytes the fused kernel path actually
-    reads (bitmap words + compact values / NF4 codes + scales).  Stacked
+    reads (bitmap words + compact values / NF4 codes + scales).
+    ``base_repr`` selects which emitted representation is streamed —
+    a quantized repr ("nf4"/"bitmap_nf4") counts the dual-repr twin's
+    bytes when the layer carries one (core.salr.base_nbytes).  Stacked
     (scan / expert) layers count every stacked instance."""
     from repro.core.salr import SALRLinear, base_nbytes
     dense = enc = 0
@@ -162,7 +165,7 @@ def salr_weight_bytes(params) -> tuple[int, int]:
                     if hasattr(base, "dtype") else
                     jnp.dtype(leaf.lora.a.dtype).itemsize)
         dense += stack * leaf.d_in * leaf.d_out * itemsize
-        enc += base_nbytes(leaf)
+        enc += base_nbytes(leaf, base_repr)
     return dense, enc
 
 
@@ -201,21 +204,28 @@ def with_kernel_weight_traffic(terms: RooflineTerms, dense_bytes: float,
                          chips=terms.chips)
 
 
-def kv_position_bytes(cfg) -> int:
+def kv_position_bytes(cfg, kv_dtype: Optional[str] = None) -> int:
     """HBM bytes ONE decoded position's KV state occupies, summed over
     every pageable attention layer (model.PAGEABLE_KINDS: global "attn"
     and "mla"; ring-windowed / recurrent kinds hold O(window) state and
-    are excluded from the paged pool).  int8 KV counts 1-byte k/v plus
-    the per-(position, kv-head) f32 scales; MLA counts the latent row
-    (kv_lora_rank + qk_rope_head_dim) — the decompressed heads are never
-    resident.  This is the ``row`` term of the paged-vs-dense decode
-    traffic model below."""
+    are excluded from the paged pool).  ``kv_dtype`` overrides
+    ``cfg.kv_cache`` (pass the plan's per-phase KV precision): int8 KV
+    counts 1-byte k/v plus the per-(position, kv-head) f32 scales, NF4
+    packs two elements per byte plus the same scales; MLA counts the
+    latent row (kv_lora_rank + qk_rope_head_dim) — the decompressed
+    heads are never resident.  This is the ``row`` term of the
+    paged-vs-dense decode traffic model below."""
+    if kv_dtype is None:
+        kv_dtype = cfg.kv_cache
     dt = 2 if cfg.dtype == "bfloat16" else 4
+    kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     per_layer = {}
-    if cfg.kv_cache == "int8":
-        per_layer["attn"] = 2 * cfg.n_kv_heads * (cfg.resolved_head_dim + 4)
+    if kv_dtype == "int8":
+        per_layer["attn"] = 2 * kh * (hd + 4)
+    elif kv_dtype == "nf4":
+        per_layer["attn"] = 2 * kh * (hd // 2 + 4)
     else:
-        per_layer["attn"] = 2 * cfg.n_kv_heads * cfg.resolved_head_dim * dt
+        per_layer["attn"] = 2 * kh * hd * dt
     if cfg.mla is not None:
         per_layer["mla"] = (cfg.mla.kv_lora_rank
                             + cfg.mla.qk_rope_head_dim) * dt
@@ -227,7 +237,8 @@ def kv_position_bytes(cfg) -> int:
 
 
 def paged_kv_decode_traffic(cfg, positions, *, ctx: int,
-                            page_size: int) -> dict:
+                            page_size: int,
+                            kv_dtype: Optional[str] = None) -> dict:
     """Decode-step KV read traffic: dense slot ring vs paged pool.
 
     ``positions`` is the per-slot absolute decode position (the engine's
@@ -236,13 +247,44 @@ def paged_kv_decode_traffic(cfg, positions, *, ctx: int,
     grid covers only the pages the slot's table actually maps, i.e.
     ``ceil((pos+1)/page_size)`` pages of ``page_size`` positions.  The
     ratio is the bandwidth-side win of paging at the roofline's
-    ``t_memory`` term (decode is memory-bound, so bytes ~ time)."""
-    row = kv_position_bytes(cfg)
+    ``t_memory`` term (decode is memory-bound, so bytes ~ time).
+    ``kv_dtype`` prices the row at the plan's per-phase KV precision."""
+    row = kv_position_bytes(cfg, kv_dtype)
     dense = len(positions) * ctx * row
     paged = sum(-(-(int(p) + 1) // page_size) * page_size * row
                 for p in positions)
     return {"kv_row_bytes": row, "dense_bytes": dense, "paged_bytes": paged,
             "traffic_ratio": paged / dense if dense else 0.0}
+
+
+def phase_precision_bytes(cfg, params, plan, *, ctx: int,
+                          n_slots: int = 1) -> dict:
+    """Per-phase HBM byte model for a mixed-precision execution plan.
+
+    For each phase of ``plan``: the SALR base bytes streamed at that
+    phase's ``base_repr`` (one weight pass per step), the KV bytes one
+    decode step reads at that phase's ``kv_dtype`` (``n_slots`` slots at
+    full ``ctx`` fill — the dense worst case, layout-independent), and
+    their ratio to the same phase priced fully native.  Decode steps are
+    memory-bound, so ``native_ratio`` for the decode phase is the
+    roofline-predicted per-step speedup of the quantized plan — the
+    quantity ``bench_serve_engine`` reports next to measured timing."""
+    out = {}
+    for ph in ("prefill", "decode", "train"):
+        repr_ = plan.base_repr(ph)
+        kv_dt = plan.kv_dtype(ph)
+        _, enc = salr_weight_bytes(params, repr_)
+        _, enc_native = salr_weight_bytes(params, "native")
+        kv = n_slots * ctx * kv_position_bytes(cfg, kv_dt)
+        kv_native = n_slots * ctx * kv_position_bytes(cfg, "native")
+        total = enc + kv
+        total_native = enc_native + kv_native
+        out[ph] = {"repr": repr_, "kv_dtype": kv_dt,
+                   "base_bytes": enc, "kv_bytes": kv,
+                   "total_bytes": total,
+                   "native_ratio": (total / total_native
+                                    if total_native else 1.0)}
+    return out
 
 
 def analyze(compiled, hlo_text: str, model_flops: float,

@@ -142,7 +142,9 @@ def greedy_generate(params, cfg: ArchConfig, prompt: jax.Array,
     b, s = prompt.shape
     prefix = _prefix_len(cfg)
     logits, cache = M.prefill(params, cfg, prompt, frontend, plan=plan)
-    skeleton = M.init_cache(cfg, b, ctx)
+    resolved = plan or execplan.resolve_plan(cfg)
+    skeleton = M.init_cache(cfg, b, ctx,
+                            kv_dtype=resolved.kv_dtype("decode"))
 
     def place(small, big):
         if small is None:
@@ -152,7 +154,20 @@ def greedy_generate(params, cfg: ArchConfig, prompt: jax.Array,
             return jnp.pad(small, pads).astype(big.dtype)
         return small.astype(big.dtype)
 
-    cache = jax.tree_util.tree_map(place, cache, skeleton)
+    def place_obj(req_obj, slot_obj):
+        # mixed-precision plans prefill native and quantize on the way
+        # into the decode skeleton (same path the engine insert takes)
+        return jax.tree_util.tree_map(
+            place, M._quantize_request(slot_obj, req_obj), slot_obj)
+
+    groups = [[{key: place_obj(rc[key], sc[key]) for key in sc}
+               for rc, sc in zip(rgcs, sgcs)]
+              for rgcs, sgcs in zip(cache["groups"], skeleton["groups"])]
+    placed = dict(skeleton, groups=groups)
+    if "memory" in skeleton:
+        placed["memory"] = jax.tree_util.tree_map(
+            place, cache["memory"], skeleton["memory"])
+    cache = placed
     tok0 = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
 
     def body(carry, i):

@@ -44,6 +44,7 @@ def test_param_shardings_cover_state():
     assert "LEAVES" in out
 
 
+@pytest.mark.slow
 def test_mini_dryrun_single_and_multipod():
     """Miniature end-to-end dry-run: lower+compile a train and a decode
     step on (2,2) and (2,2,2) meshes with production sharding rules."""

@@ -187,6 +187,7 @@ def _fe_for(cfg, i):
                       * 0.02)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", configs.ASSIGNED + configs.PAPER_OWN)
 def test_engine_parity_every_config(arch):
     """Every registered arch — full-context / MLA / rolling-window

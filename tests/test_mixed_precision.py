@@ -1,0 +1,291 @@
+"""Mixed-precision phase routes: resolver precedence, the dual-repr
+compress round-trip, quantized KV caches, and engine behavior under a
+quantized-decode plan — every numeric assertion priced by the
+per-method/representation error budget table (core.quant.ERROR_BUDGETS),
+not a single global tolerance.
+
+The parity story for quantized routes is BUDGETED, not bitwise: a
+quantized decode serves from requantized weights / compressed KV, so it
+legitimately diverges from the full-precision oracle — but only within
+the published budget, deterministically (same plan -> same tokens), and
+never at the first generated token (prefill runs native under the
+default mixed plans, so the prefill logits are bitwise)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import execplan
+from repro.core.execplan import PhaseRoute, plan_scope, resolve_plan
+from repro.core.quant import error_budget
+from repro.core.salr import (QDenseWeight, SALRConfig, apply_salr,
+                             compress_linear, materialize_base)
+from repro.models import model as M
+from repro.train.step import greedy_generate
+
+
+def _rel(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-12))
+
+
+def _mixed_cfg(arch="smollm_135m", repr_="bitmap_nf4", kv="int8"):
+    cfg = configs.get(arch, smoke=True)
+    return dataclasses.replace(
+        cfg, decode_kv_cache=kv,
+        salr=dataclasses.replace(cfg.salr, decode_repr=repr_))
+
+
+def _layer(method="bitmap", dual=True, d_in=96, d_out=104, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (d_in, d_out)) / np.sqrt(d_in)
+    cfg = SALRConfig(sparsity=0.5, method=method, lora_rank=8, res_rank=8,
+                     cap_align=8, backend="kernel", dual_repr=dual)
+    return compress_linear(key, w, cfg)
+
+
+# ------------------------------------------------------------- resolver
+
+def test_resolver_defaults_stay_native():
+    plan = resolve_plan(configs.get("smollm_135m", smoke=True))
+    for ph in ("prefill", "decode", "train"):
+        assert plan.base_repr(ph) == "native"
+        assert plan.kv_dtype(ph) == "native"
+
+
+def test_resolver_cfg_kv_cache_covers_both_cache_phases():
+    cfg = configs.get("smollm_135m", smoke=True).with_(kv_cache="int8")
+    plan = resolve_plan(cfg)
+    assert plan.kv_dtype("prefill") == "int8"
+    assert plan.kv_dtype("decode") == "int8"
+    assert plan.kv_dtype("train") == "native"
+
+
+def test_resolver_decode_tier_quantizes_decode_only():
+    plan = resolve_plan(_mixed_cfg())
+    assert plan.base_repr("decode") == "bitmap_nf4"
+    assert plan.kv_dtype("decode") == "int8"
+    # prefill/train stay full precision: quantize-at-insert pays the
+    # conversion once per position on the way into the decode pool
+    assert plan.base_repr("prefill") == "native"
+    assert plan.kv_dtype("prefill") == "native"
+    assert plan.base_repr("train") == "native"
+    assert plan.kv_dtype("train") == "native"
+
+
+def test_resolver_overrides_beat_cfg_tier():
+    """Precedence within the resolver: explicit ``overrides`` land last,
+    on top of whatever the cfg precision knobs asked for."""
+    plan = resolve_plan(_mixed_cfg(),
+                        overrides={"decode": {"repr": "native",
+                                              "kv_dtype": "nf4"}})
+    assert plan.base_repr("decode") == "native"
+    assert plan.kv_dtype("decode") == "nf4"
+
+
+@pytest.mark.parametrize("field,value", [("repr", "fp3"),
+                                         ("kv_dtype", "int2")])
+def test_phase_route_validates_precision_fields(field, value):
+    with pytest.raises(ValueError):
+        PhaseRoute("kernel", "grouped", **{field: value})
+
+
+def test_describe_carries_precision_fields():
+    d = resolve_plan(_mixed_cfg()).describe()
+    assert d["decode"]["repr"] == "bitmap_nf4"
+    assert d["decode"]["kv_dtype"] == "int8"
+    assert d["prefill"]["repr"] == "native"
+
+
+# --------------------------------------------- apply_salr precedence
+
+def test_apply_salr_precision_precedence():
+    """explicit base_repr arg > threaded route > plan scope > default."""
+    from repro.models.layers import apply_linear
+    layer = _layer("bitmap", dual=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, layer.d_in)) / 4
+    y_native = np.asarray(apply_salr(x, layer))
+    y_quant = np.asarray(apply_salr(x, layer, base_repr="bitmap_nf4"))
+    assert _rel(y_quant, y_native) > 0, "quantized route did not engage"
+    assert _rel(y_quant, y_native) <= error_budget("repr", "bitmap_nf4")
+
+    # threaded route engages the same representation as the explicit arg
+    route = PhaseRoute("kernel", "grouped", repr="bitmap_nf4")
+    y_routed = np.asarray(apply_linear(layer, x, route=route))
+    np.testing.assert_array_equal(y_routed, y_quant)
+
+    # scope tier: a phase-less apply_salr inside a mixed plan_scope reads
+    # the scope's prefill repr
+    scoped = execplan.ExecutionPlan(
+        prefill=PhaseRoute("kernel", "grouped", repr="bitmap_nf4"),
+        decode=PhaseRoute("kernel", "grouped"),
+        train=PhaseRoute("reference", "dense_masked"))
+    with plan_scope(scoped):
+        y_scoped = np.asarray(apply_salr(x, layer))
+    np.testing.assert_array_equal(y_scoped, y_quant)
+
+    # explicit arg beats the scope
+    with plan_scope(scoped):
+        y_arg = np.asarray(apply_salr(x, layer, base_repr="native"))
+    np.testing.assert_array_equal(y_arg, y_native)
+
+
+def test_quantized_repr_without_qbase_falls_back_native():
+    layer = _layer("bitmap", dual=False)
+    assert layer.qbase is None
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, layer.d_in)) / 4
+    np.testing.assert_array_equal(
+        np.asarray(apply_salr(x, layer, base_repr="bitmap_nf4")),
+        np.asarray(apply_salr(x, layer)))
+
+
+# --------------------------------------------------- dual-repr compress
+
+@pytest.mark.parametrize("method", ["bitmap", "dense", "mask"])
+def test_dual_repr_round_trip_within_budget(method):
+    """The requantized twin decodes back within the NF4 repr budget of
+    the primary base, and its encoded bytes are smaller."""
+    from repro.core import bitmap as bm
+    from repro.core.salr import base_nbytes
+    layer = _layer(method, dual=True)
+    assert layer.qbase is not None
+    if method == "bitmap":
+        assert isinstance(layer.qbase, bm.QTiledBitmapWeight)
+    else:
+        assert isinstance(layer.qbase, QDenseWeight)
+    w_native = np.asarray(materialize_base(layer.base))
+    w_twin = np.asarray(materialize_base(layer.qbase))[
+        :w_native.shape[0], :w_native.shape[1]]
+    assert _rel(w_twin, w_native) <= error_budget("repr", "nf4")
+    assert base_nbytes(layer, "bitmap_nf4" if method == "bitmap"
+                       else "nf4") < base_nbytes(layer, "native")
+
+
+def test_dual_repr_kernel_matches_reference_on_twin():
+    """Kernel vs reference parity ON THE SAME twin is near-bitwise (the
+    method-level budget): the quantization error lives in the repr
+    conversion, not in the kernels."""
+    for method in ("bitmap", "dense"):
+        layer = _layer(method, dual=True)
+        x = jax.random.normal(jax.random.PRNGKey(3), (7, layer.d_in)) / 4
+        with plan_scope(execplan.uniform_plan("reference")):
+            y_ref = apply_salr(x, layer, base_repr="bitmap_nf4")
+        y_ker = apply_salr(x, layer, base_repr="bitmap_nf4",
+                           backend="kernel")
+        assert _rel(y_ker, y_ref) <= error_budget("method", method)
+
+
+def test_dual_repr_grads_flow_through_native_reference():
+    """Adapter grads under the quantized forward exist and are finite
+    (the custom VJP replays the reference path over the twin)."""
+    layer = _layer("bitmap", dual=True)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, layer.d_in)) / 4
+
+    def loss(lora):
+        full = dataclasses.replace(layer, lora=lora)
+        return jnp.sum(apply_salr(x, full, base_repr="bitmap_nf4") ** 2)
+
+    g = jax.grad(loss)(layer.lora)
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree_util.tree_leaves(g))
+
+
+# ------------------------------------------------------- quantized KV
+
+def test_kv_quantization_within_budget():
+    from repro.models import attention as attn
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 9, 3, 16),
+                          jnp.bfloat16)
+    q8, s8 = attn._q8(x)
+    assert _rel(attn._dq8(q8, s8, x.dtype), x) <= error_budget("kv", "int8")
+    qn, sn = attn._qnf4(x)
+    assert qn.shape == (2, 9, 3, 8) and qn.dtype == jnp.uint8
+    assert _rel(attn._dqnf4(qn, sn, x.dtype), x) <= error_budget("kv", "nf4")
+
+
+@pytest.mark.parametrize("kv", ["int8", "nf4"])
+def test_ring_kernels_match_dequant_reference(kv):
+    """In-kernel dequant == out-of-kernel dequant + dense reference."""
+    from repro.kernels.ring_attention import (ring_nf4_gqa_attention,
+                                              ring_quant_gqa_attention)
+    from repro.models import attention as attn
+    b, w, h, kh, d = 2, 8, 4, 2, 16
+    key = jax.random.PRNGKey(6)
+    q = jax.random.normal(key, (b, 1, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, w, kh, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, w, kh, d))
+    pos = jnp.asarray([3, 6], jnp.int32)
+    if kv == "int8":
+        kq, ks = attn._q8(k)
+        vq, vs = attn._q8(v)
+        y = ring_quant_gqa_attention(q, kq, vq, ks, vs, pos)
+        kd, vd = attn._dq8(kq, ks, q.dtype), attn._dq8(vq, vs, q.dtype)
+    else:
+        kq, ks = attn._qnf4(k)
+        vq, vs = attn._qnf4(v)
+        y = ring_nf4_gqa_attention(q, kq, vq, ks, vs, pos)
+        kd, vd = attn._dqnf4(kq, ks, q.dtype), attn._dqnf4(vq, vs, q.dtype)
+    valid = jnp.arange(w)[None, :] <= pos[:, None]
+    y_ref = attn.decode_attention(q, kd, vd, valid)
+    assert _rel(y, y_ref) <= 1e-5, kv
+
+
+# ------------------------------------------------------------- engine
+
+@pytest.mark.slow
+def test_engine_token_similarity_under_quantized_decode_plan():
+    """Quantized-decode serving is deterministic (engine == greedy under
+    the SAME plan, exactly) and budget-close to the full-precision
+    oracle: the first token matches bitwise (native prefill on both
+    plans) and later tokens agree on a clear majority even on this
+    worst-case random smoke model."""
+    from repro.launch.engine import (ContinuousBatchingEngine, EngineConfig,
+                                     Request)
+    cfg = configs.get("smollm_135m", smoke=True)
+    mixed = _mixed_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), mixed)
+    prompts = [tuple(int(t) for t in np.asarray(
+        jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(7), i),
+                           (6,), 0, cfg.vocab_size))) for i in range(3)]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+
+    eng = ContinuousBatchingEngine(mixed, params,
+                                   EngineConfig(n_slots=2, max_ctx=32))
+    assert eng.metrics()["precision"]["decode"] == {"repr": "bitmap_nf4",
+                                                    "kv_dtype": "int8"}
+    assert not eng.sharable  # quantized decode pool disables radix reuse
+    results, _ = eng.run(reqs)
+
+    total = matched = 0
+    for i, p in enumerate(prompts):
+        got = results[i].tokens
+        same_plan = np.asarray(greedy_generate(
+            params, mixed, jnp.asarray(p)[None], 5, 32, plan=eng.plan))[0]
+        assert list(same_plan) == got, "quantized decode must be " \
+            "deterministic under its own plan"
+        oracle = np.asarray(greedy_generate(
+            params, cfg, jnp.asarray(p)[None], 5, 32))[0]
+        assert got[0] == oracle[0], "native prefill must pin token 0"
+        total += len(got)
+        matched += sum(a == b for a, b in zip(got, oracle))
+    assert matched / total >= 0.2, f"similarity {matched}/{total}"
+
+
+@pytest.mark.parametrize("kv", ["int8", "nf4"])
+def test_greedy_generate_quantized_kv_only(kv):
+    """KV-only quantization (native base repr): generation runs and the
+    first token matches the native oracle bitwise."""
+    cfg = configs.get("smollm_135m", smoke=True)
+    qcfg = dataclasses.replace(cfg, decode_kv_cache=kv)
+    params = M.init_params(jax.random.PRNGKey(0), qcfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(8), (2, 6), 0,
+                                cfg.vocab_size)
+    toks_q = np.asarray(greedy_generate(params, qcfg, prompt, 4, 32))
+    toks_n = np.asarray(greedy_generate(params, cfg, prompt, 4, 32))
+    assert toks_q.shape == toks_n.shape == (2, 4)
+    np.testing.assert_array_equal(toks_q[:, 0], toks_n[:, 0])
