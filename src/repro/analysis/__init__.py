@@ -1,0 +1,23 @@
+"""Static plan-space + kernel-contract analysis.
+
+Three passes over the source tree and the registered configs, run as a
+CI lint step (``python -m repro.analysis.check``) and mirrored by
+tests/test_analysis.py:
+
+  plan-space        every reachable (linear, moe, kv, repr, kv_dtype)
+                    route combination resolves to a registered kernel
+                    contract (or a documented reference fallback), has
+                    an error budget, and is priced by the roofline
+                    byte models  (analysis/plan_space.py)
+  kernel-contract   AST rules over kernels/*.py: compat shims, block
+                    legalization, no closed-over array constants,
+                    scalar-prefetch arities, custom-VJP pairing,
+                    helper duplication  (analysis/contracts.py)
+  coverage          every param / cache leaf reachable from the
+                    registered archs has a sharding rule and a
+                    checkpoint codec  (analysis/coverage.py)
+
+Findings are machine-readable (``analysis/findings.py``); deliberate
+gaps live in experiments/baselines/ANALYSIS_baseline.json with one-line
+justifications.  docs/analysis.md catalogs every rule id.
+"""

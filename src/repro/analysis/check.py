@@ -1,0 +1,103 @@
+"""CLI entry point: ``python -m repro.analysis.check``.
+
+Runs the three passes, subtracts the committed suppression baseline,
+and prints findings in one of three formats:
+
+  --format=text     file:line: severity: [pass/rule] message (key)
+  --format=json     {"version": 1, "findings": [...]}
+  --format=github   GitHub Actions ::error/::warning annotations
+
+Exit codes: 0 clean (modulo baseline), 1 error findings remain,
+2 the analyzer itself failed.  ``--summary PATH`` additionally writes a
+markdown table (CI step summary).  Stale baseline entries are reported
+as warnings and do not gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+from pathlib import Path
+
+
+def _default_root() -> Path:
+    import repro
+
+    # repro may be a namespace package (no __init__.py): use __path__
+    pkg = Path(next(iter(repro.__path__))).resolve()
+    return pkg.parents[1]
+
+
+def collect(root: Path) -> list:
+    from repro.analysis import contracts, coverage, plan_space
+
+    findings = []
+    findings += plan_space.run(root)
+    findings += contracts.run(root)
+    findings += coverage.run(root)
+    return findings
+
+
+def _summary_md(live, suppressed) -> str:
+    lines = ["# repro.analysis", "",
+             f"{len(live)} finding(s), {len(suppressed)} baselined.", ""]
+    if live:
+        lines += ["| severity | rule | location | finding |",
+                  "|---|---|---|---|"]
+        for f in live:
+            loc = f"{f.file}:{f.line}" if f.line else f.file
+            lines.append(f"| {f.severity} | {f.pass_id}/{f.rule} "
+                         f"| {loc} | {f.message} ({f.key}) |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="static plan-space + kernel-contract checker")
+    parser.add_argument("--format", choices=("text", "json", "github"),
+                        default="text")
+    parser.add_argument("--root", type=Path, default=None,
+                        help="repo root (default: derived from the "
+                        "installed repro package)")
+    parser.add_argument("--baseline", type=Path, default=None,
+                        help="suppression file (default: <root>/"
+                        "experiments/baselines/ANALYSIS_baseline.json)")
+    parser.add_argument("--summary", type=Path, default=None,
+                        help="also write a markdown summary here")
+    args = parser.parse_args(argv)
+
+    from repro.analysis import findings as F
+
+    try:
+        root = args.root or _default_root()
+        baseline_path = args.baseline or (
+            root / "experiments/baselines/ANALYSIS_baseline.json")
+        suppressions = (F.load_baseline(baseline_path)
+                        if baseline_path.exists() else [])
+        all_findings = collect(root)
+        try:
+            rel = str(baseline_path.relative_to(root))
+        except ValueError:
+            rel = str(baseline_path)
+        live, suppressed = F.apply_baseline(all_findings, suppressions,
+                                            rel)
+        live.sort(key=lambda f: (f.file, f.line, f.rule, f.key))
+    except Exception:                   # noqa: BLE001 - exit code 2
+        traceback.print_exc()
+        return 2
+
+    out = F.FORMATS[args.format](live)
+    if out:
+        print(out)
+    if args.summary is not None:
+        args.summary.write_text(_summary_md(live, suppressed))
+    n_err = sum(1 for f in live if f.severity == "error")
+    n_warn = len(live) - n_err
+    print(f"repro.analysis: {n_err} error(s), {n_warn} warning(s), "
+          f"{len(suppressed)} baselined", file=sys.stderr)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

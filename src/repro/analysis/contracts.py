@@ -1,0 +1,453 @@
+"""Pass 2: Pallas kernel contracts.
+
+Source-level AST rules over ``kernels/*.py`` (plus the custom-VJP
+dispatch modules ``core/salr.py`` / ``models/moe.py``).  Every rule is
+the checkable form of a prose invariant from docs/kernels.md; the rule
+id is the cross-reference (docs/analysis.md).
+
+  kernel-compiler-params  pallas_call must route compiler params
+                          through compat.CompilerParams; naming
+                          pltpu.TPUCompilerParams outside kernels/
+                          compat.py breaks the version shim
+  kernel-divisor-block    block_k / block_n handed to a ``*_pallas``
+                          builder must be legalized through
+                          ``_divisor_block`` in the calling wrapper
+  kernel-array-constant   kernel files must not operate on module-level
+                          array constants (closed-over arrays are
+                          baked into the jaxpr; unroll scalars instead)
+  kernel-prefetch-arity   BlockSpec index-map arity must equal
+                          grid rank + num_scalar_prefetch
+  kernel-custom-vjp       every custom_vjp def pairs with a module-
+                          level defvjp whose backward runs jax.vjp over
+                          the reference path; every differentiable
+                          kernel contract is reached from one
+  kernel-nf4-dup          NF4 decode helpers live in kernels/
+                          nf4_common.py only
+  kernel-dup-helper       no identical helper function bodies across
+                          kernel files
+  kernel-contract-missing public pallas-backed wrappers must register a
+                          KernelContract
+
+All single-file checks take ``(rel_path, source)`` so tests can feed
+synthetic bad kernels without touching the tree.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.findings import Finding
+
+PASS_ID = "kernel-contract"
+
+
+# ------------------------------------------------------------- helpers
+
+def _attr_chain(node) -> str:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _call_name(call: ast.Call) -> str:
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    return ""
+
+
+def _kw(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _functions(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# --------------------------------------------------- single-file rules
+
+def check_compiler_params(rel: str, src: str) -> list:
+    if rel.endswith("compat.py"):
+        return []
+    tree = ast.parse(src, filename=rel)
+    findings = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Attribute)
+                and node.attr == "TPUCompilerParams"):
+            findings.append(Finding(
+                PASS_ID, "kernel-compiler-params", rel, node.lineno,
+                f"{rel}:{node.lineno}",
+                "use compat.CompilerParams, never pltpu."
+                "TPUCompilerParams directly (version shim)"))
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _call_name(node) == "pallas_call"):
+            continue
+        cp = _kw(node, "compiler_params")
+        ok = (isinstance(cp, ast.Call)
+              and _attr_chain(cp.func) == "compat.CompilerParams")
+        if not ok:
+            findings.append(Finding(
+                PASS_ID, "kernel-compiler-params", rel, node.lineno,
+                f"{rel}:{node.lineno}",
+                "pallas_call without compiler_params="
+                "compat.CompilerParams(...)"))
+    return findings
+
+
+def check_divisor_block(rel: str, src: str) -> list:
+    """block_k / block_n kwargs of ``*_pallas`` builder calls must be
+    names assigned from ``_divisor_block`` in the same function."""
+    tree = ast.parse(src, filename=rel)
+    findings = []
+    for fn in _functions(tree):
+        legalized = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Call)
+                    and _call_name(node.value) == "_divisor_block"):
+                legalized.add(node.targets[0].id)
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and _call_name(node).endswith("_pallas")):
+                continue
+            for arg in ("block_k", "block_n"):
+                v = _kw(node, arg)
+                if v is None:
+                    continue
+                if isinstance(v, ast.Name) and v.id in legalized:
+                    continue
+                findings.append(Finding(
+                    PASS_ID, "kernel-divisor-block", rel, node.lineno,
+                    f"{fn.name}/{arg}",
+                    f"{_call_name(node)} receives {arg} not legalized "
+                    "through _divisor_block"))
+    return findings
+
+
+def _module_array_constants(tree: ast.Module) -> set:
+    """Module-level names bound to array literals, plus imported known
+    array constants (NF4_LEVELS)."""
+    consts = set()
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)
+                and _call_name(node.value) in ("array", "asarray")):
+            consts.add(node.targets[0].id)
+        if isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name == "NF4_LEVELS":
+                    consts.add(alias.asname or alias.name)
+    return consts
+
+
+def check_array_constant(rel: str, src: str) -> list:
+    """Flag loads of module-level array constants used as array
+    operands inside functions.  Iterating one (``for``/``enumerate``)
+    unrolls to python scalars at trace time and is the sanctioned
+    pattern (kernels/nf4_common.py)."""
+    tree = ast.parse(src, filename=rel)
+    consts = _module_array_constants(tree)
+    if not consts:
+        return []
+    allowed_loads = set()
+    for node in ast.walk(tree):
+        it = node.iter if isinstance(node, ast.For) else None
+        if isinstance(node, ast.Call) and _call_name(node) in (
+                "enumerate", "len", "float"):
+            it = node.args[0] if node.args else None
+        if isinstance(it, ast.Name) and it.id in consts:
+            allowed_loads.add(id(it))
+    findings = []
+    for fn in _functions(tree):
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Name) and node.id in consts
+                    and isinstance(node.ctx, ast.Load)
+                    and id(node) not in allowed_loads):
+                findings.append(Finding(
+                    PASS_ID, "kernel-array-constant", rel, node.lineno,
+                    f"{fn.name}/{node.id}",
+                    f"function {fn.name} uses array constant "
+                    f"{node.id} as an operand; unroll to scalars "
+                    "(for/enumerate) instead"))
+    return findings
+
+
+def _lambda_arity(lam: ast.Lambda) -> int:
+    a = lam.args
+    return len(a.posonlyargs) + len(a.args)
+
+
+def _resolve_grid(call: ast.Call, fn) -> int:
+    """Grid rank of a pallas_call / PrefetchScalarGridSpec, following
+    one level of local ``grid = (...)`` indirection; -1 if opaque."""
+    g = _kw(call, "grid")
+    if isinstance(g, ast.Name) and fn is not None:
+        gname = g.id
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == gname):
+                g = node.value
+    if isinstance(g, ast.Tuple):
+        return len(g.elts)
+    return -1
+
+
+def check_prefetch_arity(rel: str, src: str) -> list:
+    tree = ast.parse(src, filename=rel)
+    findings = []
+    for fn in _functions(tree):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            if name == "PrefetchScalarGridSpec":
+                nsp = _kw(node, "num_scalar_prefetch")
+                if not isinstance(nsp, ast.Constant):
+                    continue
+                want = _resolve_grid(node, fn)
+                if want < 0:
+                    continue
+                want += int(nsp.value)
+            elif name == "pallas_call" and _kw(node, "grid") is not None:
+                want = _resolve_grid(node, fn)
+                if want < 0:
+                    continue
+            else:
+                continue
+            for lam in ast.walk(node):
+                if not isinstance(lam, ast.Lambda):
+                    continue
+                got = _lambda_arity(lam)
+                if got != want:
+                    findings.append(Finding(
+                        PASS_ID, "kernel-prefetch-arity", rel,
+                        lam.lineno, f"{fn.name}:{lam.lineno}",
+                        f"index map takes {got} args, expected {want} "
+                        "(grid rank + num_scalar_prefetch)"))
+    return findings
+
+
+def check_nf4_dup(rel: str, src: str) -> list:
+    if rel.endswith("nf4_common.py") or "/kernels/" not in rel:
+        return []
+    tree = ast.parse(src, filename=rel)
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and node.id == "NF4_LEVELS":
+            findings.append(Finding(
+                PASS_ID, "kernel-nf4-dup", rel, node.lineno, rel,
+                "NF4 level decode belongs in kernels/nf4_common.py; "
+                "import its helpers instead"))
+        if isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name == "NF4_LEVELS":
+                    findings.append(Finding(
+                        PASS_ID, "kernel-nf4-dup", rel, node.lineno, rel,
+                        "NF4 level decode belongs in kernels/"
+                        "nf4_common.py; import its helpers instead"))
+    return findings
+
+
+def check_contract_registration(rel: str, src: str) -> list:
+    """Public functions that invoke pallas (directly or via a
+    ``*_pallas`` builder) must carry a contract-registering decorator
+    (``_batched_matmul`` or ``kernel_contract``)."""
+    tree = ast.parse(src, filename=rel)
+    findings = []
+    for node in tree.body:          # top-level defs only
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        if node.name.startswith("_") or node.name.endswith("_pallas"):
+            continue
+        calls = {_call_name(c) for c in ast.walk(node)
+                 if isinstance(c, ast.Call)}
+        if not ("pallas_call" in calls
+                or any(c.endswith("_pallas") for c in calls)):
+            continue
+        decos = {_call_name(d) if isinstance(d, ast.Call)
+                 else _attr_chain(d) for d in node.decorator_list}
+        if not decos & {"_batched_matmul", "kernel_contract"}:
+            findings.append(Finding(
+                PASS_ID, "kernel-contract-missing", rel, node.lineno,
+                node.name,
+                f"public pallas-backed wrapper {node.name} registers "
+                "no KernelContract"))
+    return findings
+
+
+# ---------------------------------------------------- cross-file rules
+
+def check_dup_helpers(files: dict) -> list:
+    """Identical top-level helper bodies (docstring-stripped, >= 3
+    statements) in two or more kernel files."""
+    seen: dict = {}
+    findings = []
+    for rel, src in sorted(files.items()):
+        tree = ast.parse(src, filename=rel)
+        for node in tree.body:
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            body = list(node.body)
+            if (body and isinstance(body[0], ast.Expr)
+                    and isinstance(body[0].value, ast.Constant)):
+                body = body[1:]
+            if len(body) < 3:
+                continue
+            sig = ast.dump(ast.Module(body=body, type_ignores=[]))
+            prev = seen.setdefault(sig, (rel, node))
+            if prev[0] != rel:
+                findings.append(Finding(
+                    PASS_ID, "kernel-dup-helper", rel, node.lineno,
+                    f"{prev[1].name}", f"helper {node.name} duplicates "
+                    f"{prev[1].name} from {prev[0]}; share it from a "
+                    "common module"))
+    return findings
+
+
+def check_custom_vjp(files: dict, contracts: dict) -> list:
+    """Over the dispatch modules: (a) every custom_vjp def has a
+    module-level ``defvjp`` whose bwd contains a ``jax.vjp`` call;
+    (b) every differentiable kernel contract invoked in these modules
+    is reachable from a custom_vjp primal (call graph follows bare
+    names and module-level dict indirection)."""
+    findings = []
+    served_ops = {n for n, c in contracts.items() if c.differentiable}
+    reachable_ops = set()
+    invoked_ops = set()
+    for rel, src in sorted(files.items()):
+        tree = ast.parse(src, filename=rel)
+        fns = {f.name: f for f in tree.body
+               if isinstance(f, ast.FunctionDef)}
+        # module-level dicts of function references count as edges
+        dict_targets: dict = {}
+        for node in tree.body:
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Dict)):
+                vals = [v.id for v in node.value.values
+                        if isinstance(v, ast.Name)]
+                if vals:
+                    dict_targets[node.targets[0].id] = vals
+
+        roots, defvjp = set(), {}
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef):
+                for d in node.decorator_list:
+                    target = d.func if isinstance(d, ast.Call) else d
+                    chain = _attr_chain(target)
+                    args = d.args if isinstance(d, ast.Call) else []
+                    if chain.endswith("custom_vjp") or any(
+                            isinstance(a, ast.Attribute)
+                            and a.attr == "custom_vjp" for a in args):
+                        roots.add(node.name)
+            if (isinstance(node, ast.Expr)
+                    and isinstance(node.value, ast.Call)
+                    and isinstance(node.value.func, ast.Attribute)
+                    and node.value.func.attr == "defvjp"):
+                owner = _attr_chain(node.value.func.value)
+                pair = [a.id for a in node.value.args
+                        if isinstance(a, ast.Name)]
+                defvjp[owner] = pair
+
+        for name in sorted(roots):
+            pair = defvjp.get(name)
+            if not pair or len(pair) != 2:
+                findings.append(Finding(
+                    PASS_ID, "kernel-custom-vjp", rel, fns[name].lineno,
+                    name, f"custom_vjp {name} has no module-level "
+                    "defvjp(fwd, bwd)"))
+                continue
+            bwd = fns.get(pair[1])
+            has_ref_vjp = bwd is not None and any(
+                isinstance(c, ast.Call)
+                and _attr_chain(c.func).endswith("jax.vjp")
+                for c in ast.walk(bwd))
+            if not has_ref_vjp:
+                findings.append(Finding(
+                    PASS_ID, "kernel-custom-vjp", rel,
+                    fns[name].lineno, name,
+                    f"backward {pair[1]} of {name} does not run "
+                    "jax.vjp over the reference path"))
+
+        # reachability: expand roots (+ their fwd halves) through the
+        # same-module call graph, dict values included
+        frontier = set(roots)
+        for name in roots:
+            frontier.update(defvjp.get(name, []))
+        seen = set()
+        while frontier:
+            name = frontier.pop()
+            if name in seen or name not in fns:
+                continue
+            seen.add(name)
+            for node in ast.walk(fns[name]):
+                if isinstance(node, ast.Call):
+                    cn = _call_name(node)
+                    if cn in fns:
+                        frontier.add(cn)
+                if isinstance(node, ast.Name):
+                    frontier.update(dict_targets.get(node.id, []))
+                    if node.id in fns:
+                        frontier.add(node.id)
+        for name in seen:
+            for node in ast.walk(fns[name]):
+                if (isinstance(node, ast.Call)
+                        and _call_name(node) in served_ops):
+                    reachable_ops.add(_call_name(node))
+        for fname, f in fns.items():
+            for node in ast.walk(f):
+                if (isinstance(node, ast.Call)
+                        and _call_name(node) in served_ops):
+                    invoked_ops.add((rel, fname, f.lineno,
+                                     _call_name(node)))
+
+    for rel, fname, lineno, op in sorted(invoked_ops):
+        if op not in reachable_ops:
+            findings.append(Finding(
+                PASS_ID, "kernel-custom-vjp", rel, lineno, op,
+                f"differentiable kernel {op} is called (in {fname}) "
+                "outside any custom-VJP-guarded path: its gradients "
+                "would differentiate through the Pallas kernel"))
+    return findings
+
+
+# ---------------------------------------------------------------- run
+
+_VJP_MODULES = ("src/repro/core/salr.py", "src/repro/models/moe.py")
+
+
+def run(root) -> list:
+    from repro.kernels import contract, ops  # noqa: F401 - registers
+    from repro.kernels import paged_attention, ring_attention  # noqa: F401
+
+    root = Path(root)
+    out = []
+    kernel_files = {}
+    for p in sorted((root / "src/repro/kernels").glob("*.py")):
+        rel = str(p.relative_to(root))
+        src = p.read_text()
+        kernel_files[rel] = src
+        out += check_compiler_params(rel, src)
+        out += check_divisor_block(rel, src)
+        out += check_array_constant(rel, src)
+        out += check_prefetch_arity(rel, src)
+        out += check_nf4_dup(rel, src)
+        out += check_contract_registration(rel, src)
+    out += check_dup_helpers(kernel_files)
+    vjp_files = {rel: (root / rel).read_text() for rel in _VJP_MODULES}
+    out += check_custom_vjp(vjp_files, contract.CONTRACTS)
+    return out

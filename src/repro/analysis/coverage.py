@@ -1,0 +1,129 @@
+"""Pass 3: leaf coverage over the registered architectures.
+
+Abstractly instantiates (``jax.eval_shape`` -- no FLOPs, no memory)
+every registered arch's param tree, dense slot cache, and paged slot
+cache, then checks each leaf against the two per-leaf registries:
+
+  coverage-sharding-param  distributed/sharding.param_rule lands on
+                           its ``"unmatched"`` catchall
+  coverage-sharding-cache  distributed/sharding.cache_rule lands on
+                           ``"unmatched"`` (new cache field without a
+                           placement decision)
+  coverage-ckpt-codec      checkpoint/ckpt.codec_supported rejects the
+                           leaf dtype (save would corrupt or restore
+                           would fail)
+
+Quantized KV variants (int8 / NF4, dense and paged) are swept on one
+representative arch -- the leaf KINDS they introduce (codes + scales)
+are arch-independent.
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import Finding
+
+PASS_ID = "coverage"
+
+_SHARDING_REL = "src/repro/distributed/sharding.py"
+_CKPT_REL = "src/repro/checkpoint/ckpt.py"
+
+# one representative arch for the kv_dtype sweep (leaf kinds are shared)
+_KV_SWEEP_ARCH = "smollm_135m"
+
+
+def _keystr(path) -> str:
+    import jax
+    return jax.tree_util.keystr(path)
+
+
+def _check_tree(tree, rule_fn, rule_name: str, arch: str,
+                what: str) -> list:
+    import jax
+
+    findings = []
+    seen = set()
+
+    def one(path, leaf):
+        rid, _ = rule_fn(path, leaf)
+        if rid == "unmatched":
+            key = f"{arch}:{what}{_keystr(path)}"
+            if key not in seen:
+                seen.add(key)
+                findings.append(Finding(
+                    PASS_ID, rule_name, _SHARDING_REL, 0, key,
+                    f"no sharding rule matches {what} leaf "
+                    f"{_keystr(path)} of {arch}"))
+
+    jax.tree_util.tree_map_with_path(one, tree)
+    return findings
+
+
+def _check_codec(tree, arch: str, what: str, codec_supported) -> list:
+    import jax
+
+    findings = []
+    bad_dtypes = {}
+
+    def one(path, leaf):
+        dt = getattr(leaf, "dtype", None)
+        if dt is not None and not codec_supported(dt):
+            bad_dtypes.setdefault(str(dt), _keystr(path))
+
+    jax.tree_util.tree_map_with_path(one, tree)
+    for dt, where in sorted(bad_dtypes.items()):
+        findings.append(Finding(
+            PASS_ID, "coverage-ckpt-codec", _CKPT_REL, 0,
+            f"{arch}:{what}:{dt}",
+            f"checkpoint codec cannot round-trip dtype {dt} "
+            f"({what} leaf {where} of {arch})"))
+    return findings
+
+
+def check_arch(name: str, *, param_rule=None, cache_rule=None,
+               codec_supported=None) -> list:
+    import jax
+
+    from repro.checkpoint import ckpt
+    from repro.configs import base as cfgs
+    from repro.distributed import sharding
+    from repro.models import model as mdl
+
+    param_rule = param_rule or sharding.param_rule
+    cache_rule = cache_rule or sharding.cache_rule
+    codec_supported = codec_supported or ckpt.codec_supported
+
+    cfg = cfgs.get(name, smoke=True)
+    findings = []
+
+    params = jax.eval_shape(
+        lambda: mdl.init_params(jax.random.PRNGKey(0), cfg))
+    findings += _check_tree(params, param_rule, "coverage-sharding-param",
+                            name, "param")
+    findings += _check_codec(params, name, "param", codec_supported)
+
+    kv_dtypes = [None]
+    if name == _KV_SWEEP_ARCH:
+        kv_dtypes += ["int8", "nf4"]
+    for dt in kv_dtypes:
+        cache = jax.eval_shape(
+            lambda dt=dt: mdl.init_slot_cache(cfg, 2, 64, kv_dtype=dt))
+        what = f"cache[{dt or 'default'}]"
+        findings += _check_tree(cache, cache_rule,
+                                "coverage-sharding-cache", name, what)
+        findings += _check_codec(cache, name, what, codec_supported)
+        paged = jax.eval_shape(
+            lambda dt=dt: mdl.init_paged_slot_cache(
+                cfg, 2, 64, page_size=16, n_pages=8, kv_dtype=dt))
+        what = f"paged[{dt or 'default'}]"
+        findings += _check_tree(paged, cache_rule,
+                                "coverage-sharding-cache", name, what)
+        findings += _check_codec(paged, name, what, codec_supported)
+    return findings
+
+
+def run(root=None) -> list:
+    from repro.configs import base as cfgs
+
+    out = []
+    for name in cfgs.names():
+        out += check_arch(name)
+    return out

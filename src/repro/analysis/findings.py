@@ -1,0 +1,97 @@
+"""Finding records, output formats, and the suppression baseline.
+
+A finding is identified by ``(rule, key)``: ``rule`` names the checker
+(docs/analysis.md catalogs them) and ``key`` the specific subject (a
+route combination, a kernel name, a pytree leaf path).  The baseline
+file suppresses exact (rule, key) pairs, each with a one-line
+justification; suppressions that no longer match anything are reported
+as ``baseline/baseline-stale`` warnings so the file cannot rot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    pass_id: str          # plan-space | kernel-contract | coverage | baseline
+    rule: str             # rule id within the pass
+    file: str             # repo-relative path the finding anchors to
+    line: int             # 1-based; 0 when the subject has no source line
+    key: str              # stable subject id, the baseline match key
+    message: str
+    severity: str = "error"   # error | warning
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def format_text(findings) -> str:
+    lines = []
+    for f in findings:
+        loc = f"{f.file}:{f.line}" if f.line else f.file
+        lines.append(f"{loc}: {f.severity}: [{f.pass_id}/{f.rule}] "
+                     f"{f.message} ({f.key})")
+    return "\n".join(lines)
+
+
+def format_json(findings) -> str:
+    return json.dumps({"version": 1,
+                       "findings": [f.as_dict() for f in findings]},
+                      indent=2, sort_keys=True)
+
+
+def format_github(findings) -> str:
+    """GitHub Actions workflow commands: annotate the PR diff inline."""
+    lines = []
+    for f in findings:
+        kind = "error" if f.severity == "error" else "warning"
+        title = f"{f.pass_id}/{f.rule}"
+        msg = f"{f.message} ({f.key})".replace("%", "%25") \
+            .replace("\r", "%0D").replace("\n", "%0A")
+        loc = f"file={f.file},line={max(f.line, 1)},title={title}"
+        lines.append(f"::{kind} {loc}::{msg}")
+    return "\n".join(lines)
+
+
+FORMATS = {"text": format_text, "json": format_json,
+           "github": format_github}
+
+
+def load_baseline(path) -> list:
+    """Read the suppression file: {"version": 1, "suppressions":
+    [{"rule", "key", "justification"}, ...]}."""
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("version") != 1:
+        raise ValueError(f"unsupported baseline version in {path}")
+    out = []
+    for s in data["suppressions"]:
+        if not s.get("justification", "").strip():
+            raise ValueError(
+                f"baseline entry {s.get('rule')}/{s.get('key')} "
+                "has no justification")
+        out.append((s["rule"], s["key"]))
+    return out
+
+
+def apply_baseline(findings, suppressions, baseline_file: str):
+    """Split findings into (live, suppressed) and append a
+    ``baseline-stale`` warning per suppression that matched nothing."""
+    table = set(suppressions)
+    live, suppressed, hit = [], [], set()
+    for f in findings:
+        if (f.rule, f.key) in table:
+            suppressed.append(f)
+            hit.add((f.rule, f.key))
+        else:
+            live.append(f)
+    for rule, key in suppressions:
+        if (rule, key) not in hit:
+            live.append(Finding(
+                pass_id="baseline", rule="baseline-stale",
+                file=baseline_file, line=0, key=f"{rule}/{key}",
+                message="suppression matches no finding; delete it",
+                severity="warning"))
+    return live, suppressed

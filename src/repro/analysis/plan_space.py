@@ -1,0 +1,416 @@
+"""Pass 1: plan-space closure.
+
+Enumerates the full route vocabulary exported by ``core/execplan.py``
+(every field of every :class:`PhaseRoute` is overridable per phase, so
+the reachable space IS the cross-product) and statically resolves each
+combination against three dispatch sites:
+
+  * ``core/salr.py``        ``_kernel_dispatch`` / ``_qkernel_dispatch``
+  * ``models/moe.py``       ``_grouped_linear`` / ``_decode_grid_linear``
+  * ``models/attention.py`` ``apply_gqa`` decode branch / ``apply_mla``
+
+Dispatch is extracted from the AST (isinstance-branch -> called ops),
+then cross-checked against the ``kernels/contract.py`` registry: the
+branch must exist AND a kernel called in it must advertise the combo's
+``serves`` token.  Combos that deliberately fall back to the reference
+path (value-dense bases, MLA quantized KV, ...) surface as findings and
+live in the committed baseline with a justification each.
+
+Rules:
+  plan-linear-kernel   SALR method has no fused native-repr kernel
+  plan-repr-twin       (method, quantized repr) streams no qbase twin
+  plan-moe-kernel      (route, method, repr) expert compute unserved
+  plan-kv-kernel       (kind, layout, kv_dtype) decode attention unserved
+  plan-error-budget    vocabulary entry missing in quant.ERROR_BUDGETS
+  plan-roofline-bytes  vocabulary entry the roofline byte models cannot
+                       price (kv_position_bytes / salr_weight_bytes)
+  plan-vocabulary      route_vocabulary out of sync with PhaseRoute
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.findings import Finding
+
+PASS_ID = "plan-space"
+
+
+# ------------------------------------------------- dispatch extraction
+
+def _load_ast(root: Path, rel: str) -> ast.Module:
+    return ast.parse((root / rel).read_text(), filename=rel)
+
+
+def _find_def(tree: ast.Module, name: str):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _called_names(nodes) -> set:
+    """All function names called anywhere under ``nodes`` (``ops.foo``
+    and bare ``foo`` both record ``foo``)."""
+    out = set()
+    for n in nodes:
+        for node in ast.walk(n):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute):
+                    out.add(f.attr)
+                elif isinstance(f, ast.Name):
+                    out.add(f.id)
+    return out
+
+
+def _isinstance_classes(test) -> tuple:
+    """Class names named by isinstance() checks inside a branch test."""
+    names = []
+    for node in ast.walk(test):
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "isinstance" and len(node.args) == 2):
+            cls = node.args[1]
+            elts = cls.elts if isinstance(cls, ast.Tuple) else [cls]
+            for e in elts:
+                if isinstance(e, ast.Attribute):
+                    names.append(e.attr)
+                elif isinstance(e, ast.Name):
+                    names.append(e.id)
+    return tuple(names)
+
+
+def dispatch_table(fn) -> dict:
+    """{class_name: called op names} over every isinstance-guarded
+    branch in ``fn``, depth-first; the final bare else of an
+    isinstance chain records under ``"<else>"``."""
+    table: dict = {}
+
+    def visit(body):
+        for stmt in body:
+            if not isinstance(stmt, ast.If):
+                continue
+            classes = _isinstance_classes(stmt.test)
+            if classes:
+                calls = _called_names(stmt.body)
+                for c in classes:
+                    table.setdefault(c, set()).update(calls)
+                # negated isinstance guards (``not isinstance``) also
+                # record: the table answers "is the class handled"
+                if stmt.orelse and all(not isinstance(s, ast.If)
+                                       for s in stmt.orelse):
+                    table.setdefault("<else>", set()).update(
+                        _called_names(stmt.orelse))
+                else:
+                    visit(stmt.orelse)
+            else:
+                visit(stmt.body)
+                visit(stmt.orelse)
+
+    visit(fn.body)
+    return table
+
+
+def _serves(contracts: dict, ops: set, token: str) -> bool:
+    return any(token in contracts[o].serves for o in ops if o in contracts)
+
+
+# --------------------------------------------------------- the checks
+
+# native base layout per SALR method (core/salr.compress_linear)
+_METHOD_BASE = {"bitmap": "TiledBitmapWeight",
+                "bitmap_nf4": "QTiledBitmapWeight",
+                "nm": "NMWeight"}
+# value-dense methods store a plain array: no fused kernel by design
+_DENSE_METHODS = ("dense", "mask")
+
+# quantized-repr twin per method (core/salr.attach_qbase): tiled bitmap
+# bases requantize to QTiledBitmapWeight, dense/mask arrays to
+# QDenseWeight; N:M and already-quantized bases have no twin
+_REPR_TWIN = {"bitmap": "QTiledBitmapWeight",
+              "dense": "QDenseWeight",
+              "mask": "QDenseWeight"}
+
+
+def check_linear(root: Path, contracts: dict, methods, reprs) -> list:
+    rel = "src/repro/core/salr.py"
+    tree = _load_ast(root, rel)
+    findings = []
+    for name, rule in (("_kernel_dispatch", "plan-linear-kernel"),
+                       ("_qkernel_dispatch", "plan-repr-twin")):
+        fn = _find_def(tree, name)
+        if fn is None:
+            findings.append(Finding(PASS_ID, rule, rel, 0, name,
+                                    f"dispatch function {name} not found"))
+            return findings
+    kfn = _find_def(tree, "_kernel_dispatch")
+    qfn = _find_def(tree, "_qkernel_dispatch")
+    ktable = dispatch_table(kfn)
+    qtable = dispatch_table(qfn)
+
+    for m in methods:
+        key = f"{m}/native"
+        base = _METHOD_BASE.get(m)
+        if base is None:
+            findings.append(Finding(
+                PASS_ID, "plan-linear-kernel", rel, kfn.lineno, key,
+                f"SALR method {m!r} has no fused native-repr kernel "
+                "(reference GEMM serves it)"))
+            continue
+        ops = ktable.get(base, set())
+        if not _serves(contracts, ops, f"linear:{key}"):
+            findings.append(Finding(
+                PASS_ID, "plan-linear-kernel", rel, kfn.lineno, key,
+                f"_kernel_dispatch maps {base} to no kernel whose "
+                f"contract serves linear:{key}"))
+
+    for m in methods:
+        for r in reprs:
+            if r == "native":
+                continue
+            key = f"{m}/{r}"
+            if m == "bitmap_nf4":
+                continue          # base already NF4: native IS the twin
+            twin = _REPR_TWIN.get(m)
+            if twin is None:
+                findings.append(Finding(
+                    PASS_ID, "plan-repr-twin", rel, qfn.lineno, key,
+                    f"SALR method {m!r} has no quantized twin: repr "
+                    f"{r!r} falls back to the native base"))
+                continue
+            ops = qtable.get(twin, set())
+            if not _serves(contracts, ops, f"linear:{key}"):
+                findings.append(Finding(
+                    PASS_ID, "plan-repr-twin", rel, qfn.lineno, key,
+                    f"_qkernel_dispatch maps {twin} to no kernel whose "
+                    f"contract serves linear:{key}"))
+    return findings
+
+
+def check_moe(root: Path, contracts: dict, moe_routes, methods,
+              reprs) -> list:
+    rel = "src/repro/models/moe.py"
+    tree = _load_ast(root, rel)
+    findings = []
+    fns = {"grouped": _find_def(tree, "_grouped_linear"),
+           "decode_grid": _find_def(tree, "_decode_grid_linear")}
+    for route in moe_routes:
+        if route == "dense_masked":
+            continue              # the reference oracle: serves everything
+        fn = fns.get(route)
+        if fn is None:
+            findings.append(Finding(
+                PASS_ID, "plan-moe-kernel", rel, 0, route,
+                f"no dispatch function for MoE route {route!r}"))
+            continue
+        table = dispatch_table(fn)
+        for m in methods:
+            for r in reprs:
+                key = f"{route}/{m}/{r}"
+                if r != "native":
+                    if m == "bitmap_nf4":
+                        continue  # base already NF4
+                    if m != "bitmap":
+                        # _repr_base only substitutes QTiledBitmapWeight
+                        # twins; value-dense / N:M stacks serve native
+                        findings.append(Finding(
+                            PASS_ID, "plan-moe-kernel", rel, fn.lineno,
+                            key, f"expert stacks of method {m!r} have "
+                            f"no quantized twin: repr {r!r} falls back "
+                            "to the native base"))
+                        continue
+                    ops = table.get("QTiledBitmapWeight", set())
+                elif m in _DENSE_METHODS:
+                    ops = table.get("<else>", set()) \
+                        | table.get("SALRLinear", set())
+                else:
+                    ops = table.get(_METHOD_BASE[m], set())
+                if not _serves(contracts, ops, f"moe:{key}"):
+                    findings.append(Finding(
+                        PASS_ID, "plan-moe-kernel", rel, fn.lineno, key,
+                        f"no kernel contract serves moe:{key} in "
+                        f"route {route!r}'s dispatch"))
+    return findings
+
+
+# expected decode-attention callee per (cache kind, layout, kv_dtype);
+# None marks the dense-native reference path (decode_attention)
+_KV_CACHE_CLASS = {
+    ("attn", "dense", "native"): None,
+    ("attn", "dense", "int8"): "QuantKVCache",
+    ("attn", "dense", "nf4"): "NF4KVCache",
+    ("attn", "paged", "native"): "PagedKVCache",
+    ("attn", "paged", "int8"): "PagedQuantKVCache",
+    ("attn", "paged", "nf4"): "PagedNF4KVCache",
+}
+
+
+def check_kv(root: Path, contracts: dict, kv_routes, kv_dtypes) -> list:
+    rel = "src/repro/models/attention.py"
+    tree = _load_ast(root, rel)
+    findings = []
+    gqa = _find_def(tree, "apply_gqa")
+    mla = _find_def(tree, "apply_mla")
+    if gqa is None or mla is None:
+        return [Finding(PASS_ID, "plan-kv-kernel", rel, 0, "apply_gqa",
+                        "attention entry points not found")]
+    table = dispatch_table(gqa)
+    for layout in kv_routes:
+        for dt in kv_dtypes:
+            key = f"attn/{layout}/{dt}"
+            cls = _KV_CACHE_CLASS.get(("attn", layout, dt), "<missing>")
+            if cls is None:
+                continue          # dense-native reference read path
+            ops = table.get(cls, set())
+            if not _serves(contracts, ops, f"kv:{layout}/{dt}"):
+                findings.append(Finding(
+                    PASS_ID, "plan-kv-kernel", rel, gqa.lineno, key,
+                    f"apply_gqa has no {cls} branch calling a kernel "
+                    f"whose contract serves kv:{layout}/{dt}"))
+    # MLA: latent caches carry no kv_dtype variants; paged-native must
+    # be kernel-served, quantized variants are open gaps
+    mla_calls = _called_names(mla.body)
+    if not _serves(contracts, mla_calls, "kv:paged/native"):
+        findings.append(Finding(
+            PASS_ID, "plan-kv-kernel", rel, mla.lineno, "mla/paged/native",
+            "apply_mla calls no kernel whose contract serves "
+            "kv:paged/native"))
+    for layout in kv_routes:
+        for dt in kv_dtypes:
+            if dt == "native":
+                continue
+            findings.append(Finding(
+                PASS_ID, "plan-kv-kernel", rel, mla.lineno,
+                f"mla/{layout}/{dt}",
+                f"MLA latent caches have no {dt} variant: plans "
+                "requesting quantized MLA KV serve native"))
+    return findings
+
+
+def check_budgets(methods, reprs, kv_dtypes, has_budget=None) -> list:
+    from repro.core.quant import has_budget as default_has_budget
+    has_budget = has_budget or default_has_budget
+    rel = "src/repro/core/quant.py"
+    findings = []
+    for kind, names in (("method", methods), ("repr", reprs),
+                        ("kv", kv_dtypes)):
+        for n in names:
+            if not has_budget(kind, n):
+                findings.append(Finding(
+                    PASS_ID, "plan-error-budget", rel, 0, f"{kind}:{n}",
+                    f"no ERROR_BUDGETS entry for {kind}:{n}"))
+    return findings
+
+
+def check_roofline(kv_dtypes, reprs) -> list:
+    """Probe the byte models over the vocabulary with a tiny config and
+    a tiny compressed layer; a vocabulary entry they cannot price (or
+    price nonsensically) is a finding."""
+    import jax
+
+    from repro.configs import base as cfgs
+    from repro.core import salr
+    from repro.roofline import analysis as roofline
+
+    rel = "src/repro/roofline/analysis.py"
+    findings = []
+    cfg = cfgs.get("smollm_135m", smoke=True)
+    per = {}
+    for dt in kv_dtypes:
+        try:
+            per[dt] = roofline.kv_position_bytes(
+                cfg, None if dt == "native" else dt)
+        except Exception as e:          # noqa: BLE001 - report, don't die
+            findings.append(Finding(
+                PASS_ID, "plan-roofline-bytes", rel, 0, f"kv:{dt}",
+                f"kv_position_bytes cannot price kv_dtype {dt!r}: {e}"))
+    for dt, b in per.items():
+        if b <= 0:
+            findings.append(Finding(
+                PASS_ID, "plan-roofline-bytes", rel, 0, f"kv:{dt}",
+                f"kv_position_bytes({dt!r}) = {b}"))
+        elif dt != "native" and "native" in per and b >= per["native"]:
+            findings.append(Finding(
+                PASS_ID, "plan-roofline-bytes", rel, 0, f"kv:{dt}",
+                f"quantized KV prices no cheaper than native "
+                f"({b} >= {per['native']})"))
+
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, 64), jnp_dtype())
+    scfg = salr.SALRConfig(method="bitmap", lora_rank=4, res_rank=4,
+                           dual_repr=True)
+    params = {"probe": salr.compress_linear(key, w, scfg)}
+    per_repr = {}
+    for r in reprs:
+        try:
+            dense, enc = roofline.salr_weight_bytes(params, r)
+            per_repr[r] = enc
+            if enc <= 0 or dense <= 0:
+                raise ValueError(f"non-positive bytes ({dense}, {enc})")
+        except Exception as e:          # noqa: BLE001
+            findings.append(Finding(
+                PASS_ID, "plan-roofline-bytes", rel, 0, f"repr:{r}",
+                f"salr_weight_bytes cannot price repr {r!r}: {e}"))
+    for r, b in per_repr.items():
+        if r != "native" and "native" in per_repr and b > per_repr["native"]:
+            findings.append(Finding(
+                PASS_ID, "plan-roofline-bytes", rel, 0, f"repr:{r}",
+                f"quantized repr prices above native ({b} > "
+                f"{per_repr['native']})"))
+    return findings
+
+
+def jnp_dtype():
+    import jax.numpy as jnp
+    return jnp.float32
+
+
+def check_vocabulary() -> list:
+    import dataclasses as dc
+
+    from repro.core import execplan as ep
+
+    rel = "src/repro/core/execplan.py"
+    findings = []
+    vocab = ep.route_vocabulary()
+    fields = tuple(f.name for f in dc.fields(ep.PhaseRoute))
+    if tuple(vocab) != fields:
+        findings.append(Finding(
+            PASS_ID, "plan-vocabulary", rel, 0, "fields",
+            f"route_vocabulary keys {tuple(vocab)} != PhaseRoute "
+            f"fields {fields}"))
+        return findings
+    n = 1
+    for v in vocab.values():
+        n *= len(v)
+    try:
+        routes = list(ep.enumerate_route_space())
+    except Exception as e:              # noqa: BLE001
+        return [Finding(PASS_ID, "plan-vocabulary", rel, 0, "enumerate",
+                        f"enumerate_route_space failed: {e}")]
+    if len(routes) != n:
+        findings.append(Finding(
+            PASS_ID, "plan-vocabulary", rel, 0, "closure",
+            f"enumerate_route_space yields {len(routes)} routes, "
+            f"vocabulary cross-product is {n} -- PhaseRoute rejects "
+            "part of the advertised space"))
+    return findings
+
+
+def run(root) -> list:
+    """All plan-space findings for the tree at ``root``."""
+    from repro.core import execplan as ep
+    from repro.kernels import contract, ops  # noqa: F401 - registers
+    from repro.kernels import paged_attention, ring_attention  # noqa: F401
+
+    root = Path(root)
+    contracts = contract.CONTRACTS
+    out = []
+    out += check_vocabulary()
+    out += check_linear(root, contracts, ep.SALR_METHODS, ep.REPR_ROUTES)
+    out += check_moe(root, contracts, ep.MOE_ROUTES, ep.SALR_METHODS,
+                     ep.REPR_ROUTES)
+    out += check_kv(root, contracts, ep.KV_ROUTES, ep.KV_DTYPES)
+    out += check_budgets(ep.SALR_METHODS, ep.REPR_ROUTES, ep.KV_DTYPES)
+    out += check_roofline(ep.KV_DTYPES, ep.REPR_ROUTES)
+    return out

@@ -19,6 +19,28 @@ import jax
 import numpy as np
 
 
+def codec_supported(dtype) -> bool:
+    """True when the npz codec round-trips ``dtype`` exactly.
+
+    Numpy-native numeric kinds are stored verbatim.  ml_dtypes extension
+    floats (bfloat16, float8_*) survive ``np.savez`` only as raw bytes
+    -- they load back as a fieldless void dtype, which ``restore`` bit-
+    casts back with a view (``astype`` has no cast from void).  Anything
+    else (object arrays, structured dtypes, strings) has no exact
+    round-trip here.  The static analyzer (``repro.analysis`` Pass 3)
+    runs this over every param / cache leaf dtype reachable from the
+    registered archs, so a new leaf dtype the codec would corrupt fails
+    CI instead of a restore."""
+    try:
+        dt = np.dtype(dtype)
+    except TypeError:
+        return False
+    if dt.kind in "fiubc":
+        return True
+    return (dt.kind == "V" and dt.fields is None
+            and dt.type.__module__ == "ml_dtypes")
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     keyed = {}
@@ -94,7 +116,16 @@ def restore(ckpt_dir: str, step: int, template):
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch at {key}: "
                              f"{arr.shape} vs {leaf.shape}")
-        arr = arr.astype(leaf.dtype)
+        want = np.dtype(leaf.dtype)
+        if arr.dtype.kind == "V" and arr.dtype.fields is None:
+            # extension floats (bfloat16, float8_*) come back from npz
+            # as raw bytes; bit-cast, there is no value cast from void
+            if arr.dtype.itemsize != want.itemsize:
+                raise ValueError(f"dtype mismatch at {key}: "
+                                 f"{arr.dtype} vs {want}")
+            arr = arr.view(want)
+        else:
+            arr = arr.astype(want)
         sharding = getattr(leaf, "sharding", None)
         if sharding is not None:
             return jax.device_put(arr, sharding)

@@ -65,6 +65,44 @@ REPR_ROUTES = ("native", "nf4", "bitmap_nf4")
 KV_DTYPES = ("native", "int8", "nf4")
 PHASES = ("prefill", "decode", "train")
 
+# the SALR base-representation methods of core/salr.compress_linear —
+# exported here (not in core/salr, which would drag jax into pure
+# plan-space tooling) so the route vocabulary lives in one module
+SALR_METHODS = ("dense", "mask", "bitmap", "nm", "bitmap_nf4")
+
+
+def route_vocabulary() -> dict:
+    """The full per-field route vocabulary, keyed by PhaseRoute field.
+
+    This is the machine-readable source the static analyzer
+    (``repro.analysis``) enumerates; extending any vocabulary tuple
+    above automatically widens both the analyzer's closure check and
+    ``enumerate_route_space``."""
+    return {
+        "linear": LINEAR_ROUTES,
+        "moe": MOE_ROUTES,
+        "kv": KV_ROUTES,
+        "repr": REPR_ROUTES,
+        "kv_dtype": KV_DTYPES,
+    }
+
+
+def enumerate_route_space():
+    """Yield every constructible :class:`PhaseRoute` (the full
+    cross-product of ``route_vocabulary``).
+
+    Because ``resolve_plan`` overrides may replace ANY field of ANY
+    phase's route, every combination that passes ``PhaseRoute``
+    validation is reachable at runtime — reachability and validity
+    coincide, which tests/test_analysis.py asserts against
+    ``resolve_plan`` directly."""
+    import itertools
+
+    vocab = route_vocabulary()
+    keys = tuple(vocab)
+    for combo in itertools.product(*(vocab[k] for k in keys)):
+        yield PhaseRoute(**dict(zip(keys, combo)))
+
 # characteristic token counts used when the caller does not know the
 # phase's real shape: prefill/train batches are large (grouped regime),
 # a decode tick advances one token per slot

@@ -113,3 +113,11 @@ def error_budget(kind: str, name: str) -> float:
     if name == "native":
         return ERROR_BUDGETS["method:dense"]
     return ERROR_BUDGETS[f"{kind}:{name}"]
+
+
+def has_budget(kind: str, name: str) -> bool:
+    """Whether ``error_budget(kind, name)`` resolves — the static
+    analyzer (``repro.analysis`` Pass 1) checks this over the full route
+    vocabulary so a new method/repr/kv_dtype without a committed error
+    budget is a CI finding."""
+    return name == "native" or f"{kind}:{name}" in ERROR_BUDGETS

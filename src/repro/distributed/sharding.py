@@ -42,9 +42,10 @@ _COL_PAR = {"wq", "wk", "wv", "gate", "up", "in_x", "in_gate", "uq", "uk",
 _ROW_PAR = {"wo", "down", "out"}
 
 
-def _linear_leaf_spec(names: list, leaf_name: str, ndim: int,
-                      shape) -> P:
-    """Spec for a leaf inside a (possibly SALR) linear param subtree.
+def _linear_leaf_rule(names: list, leaf_name: str, ndim: int,
+                      shape) -> tuple:
+    """(rule_id, spec) for a leaf inside a (possibly SALR) linear param
+    subtree.
 
     Rules address *trailing* dims only (scan-stacking prepends a layer
     axis, expert stacks an expert axis); leading axes are padded with
@@ -64,21 +65,22 @@ def _linear_leaf_spec(names: list, leaf_name: str, ndim: int,
         # storage; _shardable degrades to model-only when E doesn't
         # divide).  Spelled out to the leaf's rank so _fit_spec never
         # shifts the expert axis (tiled bases have 4D leaves).
-        return P(("data", "model"), *([None] * max(ndim - 1, 0)))
+        return ("expert-stack",
+                P(("data", "model"), *([None] * max(ndim - 1, 0))))
 
     # kernel-plan tiled leaves, model-stacked (4D+: stack, rows, n_tiles,
     # seg) -- storage rows live at dim -3.  Flat `codes`/`scales`
     # (QBitmapWeight's NF4 payload) are 1D/2D and never reach here.
     if (leaf_name in ("words", "values", "codes", "scales")
             and ndim >= 4):
-        return P(*([None] * (ndim - 3)), "model", None, None)
+        return ("tiled-rows", P(*([None] * (ndim - 3)), "model", None, None))
     if leaf_name in ("codes", "scales") and ndim == 3:
         # UNSTACKED tiled weight: shard the column-tile axis, matching
         # what _fit_spec produces for its 3D words/values below, so every
         # leaf of one weight partitions along the same axis (column-tile
         # parallelism; _shardable degrades to replication when n_tiles
         # doesn't divide the mesh axis).
-        return P(None, "model", None)
+        return ("tiled-coltile", P(None, "model", None))
 
     if leaf_name in ("words", "values", "base"):
         # flat bitmap / dense-base storage rows (dim -2) == the
@@ -88,20 +90,25 @@ def _linear_leaf_spec(names: list, leaf_name: str, ndim: int,
         # *tiled* leaf is also 3D and then shards n_tiles -- consistent
         # with the codes/scales rule above (model stacks are always 4D
         # and take the rows rule).
-        return P("model", None)
+        return ("flat-rows", P("model", None))
     if leaf_name == "w":
         if owner in _ROW_PAR:
-            return P("model", None)
+            return ("dense-row", P("model", None))
         if owner in _COL_PAR:
-            return P(None, "model")
-        return P(None, None)
+            return ("dense-col", P(None, "model"))
+        return ("dense-unowned", P(None, None))
     if leaf_name == "a":                # (d_in, r): shard the big dim.
         # AdamW moments are f32; replicating adapters across TP would cost
         # GBs/device at 100B scale.  The induced comms are rank-sized.
-        return P("model", None)
+        return ("adapter-a", P("model", None))
     if leaf_name == "b":                # (r, d_out)
-        return P(None, "model")
-    return P(*([None] * min(ndim, 2)))
+        return ("adapter-b", P(None, "model"))
+    if leaf_name in ("codes", "scales") and ndim <= 2:
+        # QBitmapWeight's occupied-slot NF4 payload: a flat stream
+        # indexed by the bitmap's rank order, not by matrix position --
+        # no axis aligns with the mesh, so it replicates.
+        return ("flat-quant-payload", P(*([None] * min(ndim, 2))))
+    return ("unmatched", P(*([None] * min(ndim, 2))))
 
 
 def _is_expert_stack(names: list) -> bool:
@@ -115,42 +122,47 @@ def _is_expert_stack(names: list) -> bool:
     return False
 
 
-def param_spec(path, leaf) -> P:
+def param_rule(path, leaf) -> tuple:
+    """(rule_id, PartitionSpec) for one parameter leaf.
+
+    The rule id names WHICH rule matched -- the static analyzer
+    (``repro.analysis`` Pass 3) walks every arch's param tree and flags
+    leaves that land on ``"unmatched"``, so adding a new leaf kind
+    without a sharding decision is a CI finding, not a silent
+    replication."""
     names = _path_names(path)
     ndim = np.ndim(leaf) if not hasattr(leaf, "shape") else len(leaf.shape)
     shape = getattr(leaf, "shape", ())
     if not names or ndim == 0:
-        return P()
+        return ("scalar", P())
     last = names[-1]
 
     # embeddings / lm head: vocab on model
     if "embed" in names and last == "table":
-        return P("model", None)
+        return ("embed-vocab", P("model", None))
     if "lm_head" in names and last == "w":
-        return P(None, "model")
+        return ("lm-head", P(None, "model"))
     if last == "table":
-        return P("model", None)
+        return ("table-vocab", P("model", None))
     # norms / scalars / small gate vectors: replicated
     if last in ("scale", "lam", "bias", "conv_w"):
-        return P(*([None] * ndim))
+        return ("small-replicated", P(*([None] * ndim)))
     if "router" in names and last == "w":
-        return P(*([None] * ndim))
+        return ("router-replicated", P(*([None] * ndim)))
     if last == "r":  # sLSTM block-diag recurrent (4, H, dh, dh)
-        return P(None, "model", None, None) if ndim == 4 else P(*([None] * ndim))
+        return (("slstm-recurrent", P(None, "model", None, None))
+                if ndim == 4 else
+                ("small-replicated", P(*([None] * ndim))))
     if "wif" in names:
-        return P(*([None] * ndim))
+        return ("wif-replicated", P(*([None] * ndim)))
     # scan-stacked layers add ONE leading layer axis; detect via ndim
     # heuristics handled by the leaf rules below operating on the last
     # dims -- prepend None for the stack axis.
-    spec = _linear_leaf_spec(names, last, ndim, shape)
-    return spec
+    return _linear_leaf_rule(names, last, ndim, shape)
 
 
-def _stack_aware(spec_fn):
-    """Wrap a rule so scan-stacked leaves (extra leading layer axis) get
-    a None prepended: we detect stacking by comparing rule arity to leaf
-    ndim at call time inside param_shardings."""
-    return spec_fn
+def param_spec(path, leaf) -> P:
+    return param_rule(path, leaf)[1]
 
 
 def _fit_spec(spec: P, ndim: int) -> P:
@@ -227,6 +239,34 @@ def batch_sharding(mesh: Mesh, tree):
 
 
 _CACHE_TIME_LEAVES = {"k", "v", "ckv", "krope", "k_scale", "v_scale"}
+# position-free cache state: batch-sharded only (no time axis to split)
+_CACHE_STATE_LEAVES = {"ring_pos", "page_table", "h", "c", "n", "m",
+                       "conv_tail"}
+
+
+def cache_rule(path, leaf) -> tuple:
+    """(rule_id, unsharded PartitionSpec) for one cache leaf.  Mirrors
+    ``cache_sharding``'s placement before mesh-degradation; the static
+    analyzer flags ``"unmatched"`` leaves (a new cache field with no
+    sharding decision)."""
+    ndim = len(getattr(leaf, "shape", ()))
+    names = _path_names(path)
+    # stacked cache leaves have a leading repeats axis; batch is axis 1
+    has_stack = "groups" in names
+    spec = [None] * ndim
+    b_ax = 1 if has_stack and ndim >= 2 else 0
+    if ndim > b_ax:
+        spec[b_ax] = ("data",)          # widened to data_axes at apply
+    last = names[-1] if names else ""
+    if last in _CACHE_TIME_LEAVES and "memory" not in names:
+        if ndim > b_ax + 1:
+            spec[b_ax + 1] = "model"
+        return ("cache-time", P(*spec))
+    if last == "memory":
+        return ("cache-memory", P(*spec))
+    if last in _CACHE_STATE_LEAVES:
+        return ("cache-state", P(*spec))
+    return ("unmatched", P(*spec))
 
 
 def cache_sharding(mesh: Mesh, tree):
@@ -239,19 +279,10 @@ def cache_sharding(mesh: Mesh, tree):
     axes = data_axes(mesh)
 
     def one(path, leaf):
-        ndim = len(leaf.shape)
-        names = _path_names(path)
-        # stacked cache leaves have a leading repeats axis; batch is axis 1
-        has_stack = "groups" in names
-        spec = [None] * ndim
-        b_ax = 1 if has_stack and ndim >= 2 else 0
-        if ndim > b_ax:
-            spec[b_ax] = axes
-        t_ax = b_ax + 1
-        if (names and names[-1] in _CACHE_TIME_LEAVES and ndim > t_ax
-                and "memory" not in names):
-            spec[t_ax] = "model"
-        spec = _shardable(leaf.shape, P(*spec), mesh)
+        _, spec = cache_rule(path, leaf)
+        # widen the rule's data placeholder to the mesh's batch axes
+        spec = P(*[axes if ax == ("data",) else ax for ax in spec])
+        spec = _shardable(leaf.shape, spec, mesh)
         return NamedSharding(mesh, spec)
     return jax.tree_util.tree_map_with_path(one, tree)
 

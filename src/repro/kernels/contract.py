@@ -1,0 +1,59 @@
+"""Machine-readable kernel contracts.
+
+Every public kernel-backed wrapper (the jit'd ops in ``kernels/ops.py``
+and the attention entry points in ``kernels/ring_attention.py`` /
+``kernels/paged_attention.py``) registers a :class:`KernelContract`
+describing what the wrapper is FOR, in the route vocabulary of
+``core/execplan.py``.  The static analyzer (``repro.analysis``) consumes
+the registry two ways:
+
+  * Pass 1 (plan-space closure) resolves every reachable route
+    combination to a contract ``serves`` token — a combination no
+    contract serves and no reference oracle covers is a finding.
+  * Pass 2 (kernel contracts) uses ``differentiable`` to decide which
+    wrappers must sit behind a custom-VJP pair (rule
+    ``kernel-custom-vjp``) and flags public pallas-backed wrappers with
+    no registration at all (rule ``kernel-contract-missing``).
+
+``serves`` tokens (see docs/analysis.md for the catalog):
+
+  ``linear:<method>/<repr>``        per-layer SALR forward
+  ``moe:<route>/<method>/<repr>``   expert-stacked MoE compute
+  ``kv:<layout>/<kv_dtype>``        decode attention over a KV cache
+  ``adapter``                       low-rank adapter path (composes with
+                                    a base op, serves no combo alone)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """Static contract for one kernel-backed wrapper."""
+    name: str            # public wrapper name (registry key)
+    kind: str            # linear | moe | attention
+    differentiable: bool  # advertises gradients -> needs a custom-VJP
+    #                       pairing with a reference backward
+    serves: tuple = ()   # route tokens (see module docstring)
+
+
+# name -> KernelContract; populated at import of the kernel modules
+CONTRACTS: dict = {}
+
+
+def kernel_contract(*, kind: str, differentiable: bool, serves=()):
+    """Decorator registering a wrapper's contract.  Works on plain
+    functions and on jit-wrapped callables (registration is by name; the
+    attribute set is best-effort)."""
+    def deco(fn):
+        c = KernelContract(name=fn.__name__, kind=kind,
+                           differentiable=differentiable,
+                           serves=tuple(serves))
+        CONTRACTS[fn.__name__] = c
+        try:
+            fn.__kernel_contract__ = c
+        except AttributeError:
+            pass                      # jit wrappers may reject attributes
+        return fn
+    return deco

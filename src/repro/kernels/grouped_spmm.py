@@ -48,8 +48,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quant import NF4_LEVELS
 from repro.kernels import compat
+from repro.kernels.nf4_common import dequant_nf4_segment
 
 
 def _zero_acc(acc_ref, k):
@@ -99,19 +99,6 @@ def _decode_bitmap(words, vals, cap_t: int, dtype):
     slot = jnp.minimum(jnp.cumsum(bi, axis=1) - bi, cap_t - 1)
     dense = jnp.take_along_axis(vals, slot, axis=1)
     return jnp.where(bits.astype(bool), dense, 0).astype(dtype)
-
-
-def _dequant_nf4(codes, scales, cap_t: int):
-    """(Bk, cap_t//2) uint8 + (Bk, 1) scales -> (Bk, cap_t) f32
-    (16-way select tree, no gather — same as qsalr_spmm)."""
-    bk = codes.shape[0]
-    lo = (codes & jnp.uint8(0x0F)).astype(jnp.int32)
-    hi = (codes >> 4).astype(jnp.int32)
-    idx = jnp.stack([lo, hi], axis=-1).reshape(bk, cap_t)
-    dec = jnp.zeros(idx.shape, jnp.float32)
-    for j in range(16):
-        dec = jnp.where(idx == j, float(NF4_LEVELS[j]), dec)
-    return dec * scales
 
 
 def _decode_nm(gbits, vals, n: int, m: int, dtype):
@@ -188,8 +175,8 @@ def _qsalr_kernel(te_ref, x_ref, *refs, cap_t: int, k_steps: int,
     x = x_ref[...]
     bk = x.shape[1]
     _accum_lora(x, a_ref, u_ref, ni, k)
-    vals = _dequant_nf4(codes_ref[...].reshape(bk, cap_t // 2),
-                        scales_ref[...].reshape(bk, 1), cap_t)
+    vals = dequant_nf4_segment(codes_ref[...].reshape(bk, cap_t // 2),
+                               scales_ref[...].reshape(bk, 1))
     wpt = words_ref.shape[-1]
     w_tile = _decode_bitmap(words_ref[...].reshape(bk, wpt), vals,
                             cap_t, x.dtype)
@@ -489,8 +476,8 @@ def _dgqsalr_kernel(re_ref, x_ref, *refs, cap_t: int, n_experts: int,
     x = x_ref[...] * mask
     bk = x.shape[1]
     _dg_accum_lora(x, a_ref, u_ref, ni, e, k)
-    vals = _dequant_nf4(codes_ref[...].reshape(bk, cap_t // 2),
-                        scales_ref[...].reshape(bk, 1), cap_t)
+    vals = dequant_nf4_segment(codes_ref[...].reshape(bk, cap_t // 2),
+                               scales_ref[...].reshape(bk, 1))
     wpt = words_ref.shape[-1]
     w_tile = _decode_bitmap(words_ref[...].reshape(bk, wpt), vals,
                             cap_t, x.dtype)

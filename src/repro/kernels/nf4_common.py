@@ -1,0 +1,73 @@
+"""Shared in-kernel NF4 decode helpers (the ONE copy of the where-chain).
+
+Every Pallas kernel that dequantizes NF4 payloads in-kernel goes through
+these helpers.  The codebook decode is a 16-way select tree over the
+scalar NF4 levels rather than a table gather: a gather from a (16,)
+table would close over an array constant, which Pallas TPU kernels
+reject ("captures constants ... pass them as inputs"), while scalar
+constants lower fine (checked by repro.analysis rule
+``kernel-array-constant``).  Keeping the chain in one module is itself
+a checked contract: rule ``kernel-nf4-dup`` flags any other kernels
+module that touches ``NF4_LEVELS`` directly.
+
+Two packing conventions exist and get one helper each:
+
+  ``nf4_interleaved_decode``  INTERLEAVED packing (the
+                              core.quant.quantize_nf4 order): byte ``i``
+                              holds elements ``2i`` (low nibble) and
+                              ``2i+1`` (high nibble).  Used by the
+                              weight kernels — nf4_spmm on full column
+                              tiles, qsalr_spmm / grouped_spmm on
+                              compact bitmap segments (via
+                              ``dequant_nf4_segment``, which folds the
+                              per-cell scale).
+  ``nf4_halves``              SPLIT packing (models.attention._qnf4):
+                              byte ``i`` of a head-dim row holds element
+                              ``i`` (low) and ``i + d/2`` (high), so the
+                              decode yields the two head-dim halves with
+                              no minor-axis interleave — used by the
+                              KV-cache attention kernels
+                              (ring_attention, paged_attention).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant import NF4_LEVELS
+
+
+def nf4_level_decode(idx):
+    """Elementwise NF4 codebook decode via a where-chain over the 16
+    scalar levels (int32 code indices -> f32 values)."""
+    out = jnp.zeros(idx.shape, jnp.float32)
+    for i, v in enumerate(NF4_LEVELS):
+        out = jnp.where(idx == i, jnp.float32(v), out)
+    return out
+
+
+def nf4_interleaved_decode(codes):
+    """Interleaved-packed decode: (Bk, C) uint8 -> (Bk, 2C) f32 values
+    (byte i unpacks to elements 2i and 2i+1), unscaled."""
+    bk = codes.shape[0]
+    lo = (codes & jnp.uint8(0x0F)).astype(jnp.int32)
+    hi = (codes >> 4).astype(jnp.int32)
+    idx = jnp.stack([lo, hi], axis=-1).reshape(bk, -1)
+    return nf4_level_decode(idx)
+
+
+def dequant_nf4_segment(codes, scales):
+    """Compact bitmap-segment decode: (Bk, cap_t//2) uint8 codes +
+    (Bk, 1) per-cell absmax scales -> (Bk, cap_t) f32."""
+    return nf4_interleaved_decode(codes) * scales
+
+
+def nf4_halves(codes, scale, out_dtype):
+    """Split-packed KV decode: (..., d/2) uint8 codes -> the two head-dim
+    halves (low nibbles -> [0, d/2), high nibbles -> [d/2, d)), each
+    scaled by the per-(position, head) absmax and rounded through the
+    model dtype (the attention._dq8 convention)."""
+    lo = nf4_level_decode((codes & jnp.uint8(0x0F)).astype(jnp.int32))
+    hi = nf4_level_decode((codes >> 4).astype(jnp.int32))
+    lo = (lo * scale[..., None]).astype(out_dtype).astype(jnp.float32)
+    hi = (hi * scale[..., None]).astype(out_dtype).astype(jnp.float32)
+    return lo, hi

@@ -17,8 +17,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import compat
-
-from repro.core.quant import NF4_LEVELS
+from repro.kernels.nf4_common import nf4_interleaved_decode
 
 QBLOCK = 64  # scale-block width along N
 
@@ -32,15 +31,8 @@ def _nf4_spmm_kernel(x_ref, codes_ref, scales_ref, o_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...]                                  # (Bm, Bk)
-    bk = x.shape[1]
     codes = codes_ref[...]                          # (Bk, Bn/2) uint8
-    lo = (codes & jnp.uint8(0x0F)).astype(jnp.int32)
-    hi = (codes >> 4).astype(jnp.int32)
-    idx = jnp.stack([lo, hi], axis=-1).reshape(bk, -1)   # (Bk, Bn)
-
-    dec = jnp.zeros(idx.shape, jnp.float32)
-    for j in range(16):                              # 16-way select tree
-        dec = dec + jnp.where(idx == j, jnp.float32(NF4_LEVELS[j]), 0.0)
+    dec = nf4_interleaved_decode(codes)             # (Bk, Bn)
 
     scales = scales_ref[...]                         # (Bk, Bn/QBLOCK)
     w_tile = dec * jnp.repeat(scales, QBLOCK, axis=1)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core import bitmap as bm
 from repro.core.quant import quantize_nf4
 from repro.kernels.bitmap_spmm import bitmap_spmm_pallas
+from repro.kernels.contract import kernel_contract
 from repro.kernels.fused_lora import fused_lora_pallas
 from repro.kernels.grouped_spmm import (decode_dense_spmm_pallas,
                                         decode_nm_spmm_pallas,
@@ -62,12 +63,19 @@ def _divisor_block(dim: int, block: int, mult: int = 1) -> int:
     return d
 
 
-def _batched_matmul(*static_argnames):
+def _batched_matmul(*static_argnames, kind: str = "linear",
+                    differentiable: bool = True, serves=()):
     """Decorator unifying the wrappers' boilerplate: jit with the given
     static names, flatten leading batch dims of x, pad M up to the block
     multiple (each body's own ``block_m`` default — 128 for the tiled
     GEMMs, 8 for the decode grid's single M tile), run the kernel body
-    on the 2D view, unpad."""
+    on the 2D view, unpad.
+
+    ``kind`` / ``differentiable`` / ``serves`` register the wrapper's
+    machine-readable :class:`repro.kernels.contract.KernelContract` —
+    the dispatch-closure source of truth the static analyzer
+    (``repro.analysis``) checks plan routes, custom-VJP pairing, and
+    error budgets against."""
     import inspect
 
     def deco(body):
@@ -80,7 +88,9 @@ def _batched_matmul(*static_argnames):
         op.__name__ = body.__name__
         op.__qualname__ = body.__qualname__
         op.__doc__ = body.__doc__
-        return jax.jit(op, static_argnames=("block_m",) + static_argnames)
+        jitted = jax.jit(op, static_argnames=("block_m",) + static_argnames)
+        return kernel_contract(kind=kind, differentiable=differentiable,
+                               serves=serves)(jitted)
     return deco
 
 
@@ -92,7 +102,8 @@ def _pad_bcat(b_cat: jax.Array, cols: int) -> jax.Array:
     return b_cat
 
 
-@_batched_matmul("block_k", "interpret")
+@_batched_matmul("block_k", "interpret",
+                 serves=("linear:bitmap/native",))
 def bitmap_matmul(x: jax.Array, tbw: bm.TiledBitmapWeight, *,
                   block_m: int = 128, block_k: int = 128,
                   interpret: bool = _INTERPRET) -> jax.Array:
@@ -103,7 +114,8 @@ def bitmap_matmul(x: jax.Array, tbw: bm.TiledBitmapWeight, *,
                               interpret=interpret)
 
 
-@_batched_matmul("block_n", "block_k", "interpret")
+@_batched_matmul("block_n", "block_k", "interpret",
+                 serves=("linear:nm/native",))
 def nm_matmul(x: jax.Array, nmw: bm.NMWeight, *,
               block_m: int = 128, block_n: int = 128, block_k: int = 128,
               interpret: bool = _INTERPRET) -> jax.Array:
@@ -115,7 +127,8 @@ def nm_matmul(x: jax.Array, nmw: bm.NMWeight, *,
                           interpret=interpret)
 
 
-@_batched_matmul("block_k", "interpret")
+@_batched_matmul("block_k", "interpret",
+                 serves=("linear:bitmap/native",))
 def salr_matmul(x: jax.Array, tbw: bm.TiledBitmapWeight,
                 a_cat: jax.Array, b_cat: jax.Array, *,
                 block_m: int = 128, block_k: int = 128,
@@ -129,7 +142,10 @@ def salr_matmul(x: jax.Array, tbw: bm.TiledBitmapWeight,
                             interpret=interpret)
 
 
-@_batched_matmul("block_k", "interpret")
+@_batched_matmul("block_k", "interpret",
+                 serves=("linear:bitmap_nf4/native",
+                         "linear:bitmap/nf4",
+                         "linear:bitmap/bitmap_nf4"))
 def qsalr_matmul(x: jax.Array, qtbw: bm.QTiledBitmapWeight,
                  a_cat: jax.Array, b_cat: jax.Array, *,
                  block_m: int = 128, block_k: int = 128,
@@ -149,7 +165,8 @@ def qsalr_matmul(x: jax.Array, qtbw: bm.QTiledBitmapWeight,
                              interpret=interpret)
 
 
-@_batched_matmul("block_n", "block_k", "interpret")
+@_batched_matmul("block_n", "block_k", "interpret",
+                 serves=("adapter",))
 def lora_matmul(x: jax.Array, a_cat: jax.Array, b_cat: jax.Array, *,
                 block_m: int = 128, block_n: int = 128, block_k: int = 128,
                 interpret: bool = _INTERPRET) -> jax.Array:
@@ -177,7 +194,9 @@ def _grouped_adapters(a_cat, b_cat, ncols: int):
     return a_cat, b_cat
 
 
-@_batched_matmul("block_n", "block_k", "interpret")
+@_batched_matmul("block_n", "block_k", "interpret", kind="moe",
+                 serves=("moe:grouped/dense/native",
+                         "moe:grouped/mask/native"))
 def grouped_dense_matmul(x, tile_expert: jax.Array, w: jax.Array,
                          a_cat=None, b_cat=None, *,
                          block_m: int = 128, block_n: int = 128,
@@ -194,7 +213,8 @@ def grouped_dense_matmul(x, tile_expert: jax.Array, w: jax.Array,
                                      block_k=bk, interpret=interpret)
 
 
-@_batched_matmul("block_k", "interpret")
+@_batched_matmul("block_k", "interpret", kind="moe",
+                 serves=("moe:grouped/bitmap/native",))
 def grouped_salr_matmul(x, tile_expert: jax.Array,
                         tbw: bm.TiledBitmapWeight, a_cat, b_cat, *,
                         block_m: int = 128, block_k: int = 128,
@@ -211,7 +231,10 @@ def grouped_salr_matmul(x, tile_expert: jax.Array,
                                     interpret=interpret)
 
 
-@_batched_matmul("block_k", "interpret")
+@_batched_matmul("block_k", "interpret", kind="moe",
+                 serves=("moe:grouped/bitmap_nf4/native",
+                         "moe:grouped/bitmap/nf4",
+                         "moe:grouped/bitmap/bitmap_nf4"))
 def grouped_qsalr_matmul(x, tile_expert: jax.Array,
                          qtbw: bm.QTiledBitmapWeight, a_cat, b_cat, *,
                          block_m: int = 128, block_k: int = 128,
@@ -229,7 +252,8 @@ def grouped_qsalr_matmul(x, tile_expert: jax.Array,
                                      interpret=interpret)
 
 
-@_batched_matmul("block_n", "block_k", "interpret")
+@_batched_matmul("block_n", "block_k", "interpret", kind="moe",
+                 serves=("moe:grouped/nm/native",))
 def grouped_nm_matmul(x, tile_expert: jax.Array, nmw: bm.NMWeight,
                       a_cat=None, b_cat=None, *,
                       block_m: int = 128, block_n: int = 128,
@@ -266,7 +290,9 @@ def _pad_row_expert(row_expert: jax.Array, mrows: int) -> jax.Array:
     return row_expert
 
 
-@_batched_matmul("block_n", "block_k", "interpret")
+@_batched_matmul("block_n", "block_k", "interpret", kind="moe",
+                 serves=("moe:decode_grid/dense/native",
+                         "moe:decode_grid/mask/native"))
 def decode_dense_matmul(x, row_expert: jax.Array, w: jax.Array,
                         a_cat=None, b_cat=None, *,
                         block_m: int = 8, block_n: int = 128,
@@ -284,7 +310,8 @@ def decode_dense_matmul(x, row_expert: jax.Array, w: jax.Array,
                                     interpret=interpret)
 
 
-@_batched_matmul("block_k", "interpret")
+@_batched_matmul("block_k", "interpret", kind="moe",
+                 serves=("moe:decode_grid/bitmap/native",))
 def decode_salr_matmul(x, row_expert: jax.Array,
                        tbw: bm.TiledBitmapWeight, a_cat, b_cat, *,
                        block_m: int = 8, block_k: int = 128,
@@ -301,7 +328,10 @@ def decode_salr_matmul(x, row_expert: jax.Array,
                                    block_k=bk, interpret=interpret)
 
 
-@_batched_matmul("block_k", "interpret")
+@_batched_matmul("block_k", "interpret", kind="moe",
+                 serves=("moe:decode_grid/bitmap_nf4/native",
+                         "moe:decode_grid/bitmap/nf4",
+                         "moe:decode_grid/bitmap/bitmap_nf4"))
 def decode_qsalr_matmul(x, row_expert: jax.Array,
                         qtbw: bm.QTiledBitmapWeight, a_cat, b_cat, *,
                         block_m: int = 8, block_k: int = 128,
@@ -319,7 +349,8 @@ def decode_qsalr_matmul(x, row_expert: jax.Array,
                                     interpret=interpret)
 
 
-@_batched_matmul("block_n", "block_k", "interpret")
+@_batched_matmul("block_n", "block_k", "interpret", kind="moe",
+                 serves=("moe:decode_grid/nm/native",))
 def decode_nm_matmul(x, row_expert: jax.Array, nmw: bm.NMWeight,
                      a_cat=None, b_cat=None, *,
                      block_m: int = 8, block_n: int = 128,
@@ -347,7 +378,11 @@ def nf4_encode_2d(w: jax.Array):
     return q.codes.reshape(kdim, n // 2), q.scales.reshape(kdim, n // QBLOCK)
 
 
-@_batched_matmul("block_n", "block_k", "interpret")
+@_batched_matmul("block_n", "block_k", "interpret",
+                 serves=("linear:dense/nf4",
+                         "linear:dense/bitmap_nf4",
+                         "linear:mask/nf4",
+                         "linear:mask/bitmap_nf4"))
 def nf4_matmul(x: jax.Array, codes: jax.Array, scales: jax.Array, *,
                block_m: int = 128, block_n: int = 128, block_k: int = 128,
                interpret: bool = _INTERPRET) -> jax.Array:

@@ -55,6 +55,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import compat
+from repro.kernels.contract import kernel_contract
 from repro.kernels.ops import _INTERPRET
 
 NEG_INF = -1e30
@@ -92,6 +93,8 @@ def _gqa_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, kg, vg, *,
         o_ref[0] = out.reshape(h, -1).astype(o_ref.dtype)
 
 
+@kernel_contract(kind="attention", differentiable=False,
+                 serves=("kv:paged/native",))
 def paged_gqa_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                         page_table: jax.Array, pos: jax.Array, *,
                         interpret: bool = _INTERPRET) -> jax.Array:
@@ -167,6 +170,8 @@ def _quant_gqa_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
         o_ref[0] = out.reshape(h, dv).astype(o_ref.dtype)
 
 
+@kernel_contract(kind="attention", differentiable=False,
+                 serves=("kv:paged/int8",))
 def paged_quant_gqa_attention(q: jax.Array, k_pool: jax.Array,
                               v_pool: jax.Array, ks_pool: jax.Array,
                               vs_pool: jax.Array, page_table: jax.Array,
@@ -218,7 +223,7 @@ def _nf4_gqa_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
                     o_ref, kg, vg, ksg, vsg, *, page_size: int,
                     n_pages: int, groups: int, out_dtype):
     del pt_ref
-    from repro.kernels.ring_attention import _nf4_halves
+    from repro.kernels.nf4_common import nf4_halves as _nf4_halves
     b, p = pl.program_id(0), pl.program_id(1)
     _gather_page(kg, k_ref, p, page_size)
     _gather_page(vg, v_ref, p, page_size)
@@ -249,6 +254,8 @@ def _nf4_gqa_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
         o_ref[0, :, dv2:] = out_hi.reshape(h, dv2).astype(o_ref.dtype)
 
 
+@kernel_contract(kind="attention", differentiable=False,
+                 serves=("kv:paged/nf4",))
 def paged_nf4_gqa_attention(q: jax.Array, k_pool: jax.Array,
                             v_pool: jax.Array, ks_pool: jax.Array,
                             vs_pool: jax.Array, page_table: jax.Array,
@@ -319,6 +326,8 @@ def _mla_kernel(pt_ref, pos_ref, ql_ref, qr_ref, ckv_ref, kr_ref, o_ref,
         o_ref[0] = jnp.einsum("hk,kr->hr", pr, cg[...].astype(jnp.float32))
 
 
+@kernel_contract(kind="attention", differentiable=False,
+                 serves=("kv:paged/native",))
 def paged_mla_attention(q_lat: jax.Array, q_rope: jax.Array,
                         ckv_pool: jax.Array, krope_pool: jax.Array,
                         page_table: jax.Array, pos: jax.Array, *,

@@ -29,20 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quant import NF4_LEVELS
 from repro.kernels import compat
-
-
-def _dequant_nf4(codes, scales, cap_t: int):
-    """(Bk, cap_t//2) uint8 codes + (Bk, 1) scales -> (Bk, cap_t) f32."""
-    bk = codes.shape[0]
-    lo = (codes & jnp.uint8(0x0F)).astype(jnp.int32)
-    hi = (codes >> 4).astype(jnp.int32)
-    idx = jnp.stack([lo, hi], axis=-1).reshape(bk, cap_t)
-    dec = jnp.zeros(idx.shape, jnp.float32)
-    for j in range(16):                         # 16-way select tree
-        dec = jnp.where(idx == j, float(NF4_LEVELS[j]), dec)
-    return dec * scales
+from repro.kernels.nf4_common import dequant_nf4_segment
 
 
 def _qsalr_spmm_kernel(x_ref, words_ref, codes_ref, scales_ref, a_ref,
@@ -71,7 +59,7 @@ def _qsalr_spmm_kernel(x_ref, words_ref, codes_ref, scales_ref, a_ref,
     # --- stage 0: NF4 dequant of the compact segment (VPU)
     codes = codes_ref[...].reshape(bk, cap_t // 2)
     scales = scales_ref[...].reshape(bk, 1)
-    vals = _dequant_nf4(codes, scales, cap_t)
+    vals = dequant_nf4_segment(codes, scales)
 
     # --- stage 1: bitmap decode (VPU)
     wpt = words_ref.shape[-1]

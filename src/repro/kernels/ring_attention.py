@@ -39,8 +39,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quant import NF4_LEVELS
 from repro.kernels import compat
+from repro.kernels.contract import kernel_contract
+from repro.kernels.nf4_common import nf4_halves as _nf4_halves
 from repro.kernels.ops import _INTERPRET
 
 NEG_INF = -1e30
@@ -71,6 +72,8 @@ def _ring_quant_kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
     o_ref[0] = out.reshape(h, dv).astype(o_ref.dtype)
 
 
+@kernel_contract(kind="attention", differentiable=False,
+                 serves=("kv:dense/int8",))
 def ring_quant_gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                              k_scale: jax.Array, v_scale: jax.Array,
                              pos: jax.Array, *,
@@ -108,29 +111,7 @@ def ring_quant_gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------- NF4 ring
-
-def _nf4_level_decode(idx):
-    """Elementwise NF4 codebook decode via a where-chain over the 16
-    scalar levels.  A gather from a (16,) table would close over an
-    array constant, which Pallas TPU kernels reject ("captures
-    constants ... pass them as inputs"); scalar constants lower fine."""
-    out = jnp.zeros(idx.shape, jnp.float32)
-    for i, v in enumerate(NF4_LEVELS):
-        out = jnp.where(idx == i, jnp.float32(v), out)
-    return out
-
-
-def _nf4_halves(codes, scale, out_dtype):
-    """Decode split-packed NF4 codes (w, kh, d/2) u8 into the two head-dim
-    halves (low nibbles -> [0, d/2), high nibbles -> [d/2, d)), each
-    scaled by the per-(position, head) absmax and rounded through the
-    model dtype (the _dq8 convention)."""
-    lo = _nf4_level_decode((codes & jnp.uint8(0x0F)).astype(jnp.int32))
-    hi = _nf4_level_decode((codes >> 4).astype(jnp.int32))
-    lo = (lo * scale[..., None]).astype(out_dtype).astype(jnp.float32)
-    hi = (hi * scale[..., None]).astype(out_dtype).astype(jnp.float32)
-    return lo, hi
-
+# (split-packed decode shared with paged_attention: kernels/nf4_common)
 
 def _ring_nf4_kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
                      o_ref, *, groups: int, out_dtype):
@@ -156,6 +137,8 @@ def _ring_nf4_kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
     o_ref[0, :, dv2:] = out_hi.reshape(h, dv2).astype(o_ref.dtype)
 
 
+@kernel_contract(kind="attention", differentiable=False,
+                 serves=("kv:dense/nf4",))
 def ring_nf4_gqa_attention(q: jax.Array, k_codes: jax.Array,
                            v_codes: jax.Array, k_scale: jax.Array,
                            v_scale: jax.Array, pos: jax.Array, *,

@@ -1,0 +1,387 @@
+"""Static analyzer (repro.analysis): each pass catches its seeded
+violation on synthetic input, the live tree is clean modulo the
+committed baseline (the CI gate's mirror), and the Pass 1 route
+enumeration agrees with ``resolve_plan`` over the full
+(cfg tier x override) grid."""
+import itertools
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro import configs
+from repro.analysis import check as acheck
+from repro.analysis import contracts as C
+from repro.analysis import coverage as cov
+from repro.analysis import findings as F
+from repro.analysis import plan_space as PS
+from repro.core import execplan
+from repro.kernels.contract import CONTRACTS, KernelContract
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def rules(findings):
+    return {(f.rule, f.key) for f in findings}
+
+
+# ------------------------------------------------------------ findings
+
+def test_finding_formats():
+    f = F.Finding("plan-space", "plan-linear-kernel", "src/x.py", 3,
+                  "dense/native", "no kernel")
+    assert "src/x.py:3" in F.format_text([f])
+    assert json.loads(F.format_json([f]))["findings"][0]["rule"] == \
+        "plan-linear-kernel"
+    gh = F.format_github([f])
+    assert gh.startswith("::error file=src/x.py,line=3,")
+
+
+def test_baseline_split_and_stale():
+    f1 = F.Finding("p", "r1", "a.py", 1, "k1", "m")
+    f2 = F.Finding("p", "r2", "a.py", 2, "k2", "m")
+    live, supp = F.apply_baseline([f1, f2], [("r1", "k1"), ("r9", "gone")],
+                                  "base.json")
+    assert supp == [f1]
+    assert {f.rule for f in live} == {"r2", "baseline-stale"}
+    stale = [f for f in live if f.rule == "baseline-stale"][0]
+    assert stale.severity == "warning"
+
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"version": 1, "suppressions":
+                             [{"rule": "r", "key": "k",
+                               "justification": " "}]}))
+    with pytest.raises(ValueError, match="justification"):
+        F.load_baseline(p)
+
+
+# -------------------------------------------------- pass 1: plan space
+
+def _fake_contracts(**by_name):
+    """name -> serves tokens; registry entries must carry the REAL
+    wrapper names, since Pass 1 ties tokens to AST callsites."""
+    return {n: KernelContract(n, "linear", True, tuple(ts))
+            for n, ts in by_name.items()}
+
+
+def test_plan_linear_catches_unserved_method():
+    # live _kernel_dispatch, but a registry where the bitmap kernel
+    # dropped its token -> bitmap/native must surface
+    got = PS.check_linear(
+        ROOT, _fake_contracts(nm_matmul=["linear:nm/native"]),
+        ("bitmap",), ("native",))
+    assert ("plan-linear-kernel", "bitmap/native") in rules(got)
+    got = PS.check_linear(
+        ROOT, _fake_contracts(bitmap_matmul=["linear:bitmap/native"]),
+        ("bitmap",), ("native",))
+    assert not rules(got)
+
+
+def test_plan_repr_twin_catches_missing_twin():
+    fake = _fake_contracts(qsalr_matmul=["linear:bitmap/nf4"],
+                           bitmap_matmul=["linear:bitmap/native"],
+                           salr_matmul=["linear:bitmap/native"])
+    got = PS.check_linear(ROOT, fake, ("bitmap", "nm"),
+                          ("native", "nf4"))
+    # nm has no twin at all; bitmap/nf4 is served by the fake registry
+    assert ("plan-repr-twin", "nm/nf4") in rules(got)
+    assert ("plan-repr-twin", "bitmap/nf4") not in rules(got)
+
+
+def test_plan_moe_catches_unserved_route():
+    got = PS.check_moe(
+        ROOT,
+        _fake_contracts(grouped_salr_matmul=["moe:grouped/bitmap/native"]),
+        ("grouped", "decode_grid"), ("bitmap",), ("native",))
+    assert ("plan-moe-kernel", "decode_grid/bitmap/native") in rules(got)
+    assert ("plan-moe-kernel", "grouped/bitmap/native") not in rules(got)
+
+
+def test_plan_kv_catches_unserved_layout():
+    fake = _fake_contracts(
+        ring_quant_gqa_attention=["kv:dense/int8"],
+        paged_mla_attention=["kv:paged/native"])
+    got = PS.check_kv(ROOT, fake, ("dense", "paged"),
+                      ("native", "int8"))
+    assert ("plan-kv-kernel", "attn/paged/int8") in rules(got)
+    assert ("plan-kv-kernel", "attn/dense/int8") not in rules(got)
+
+
+def test_plan_budget_catches_missing_entry():
+    got = PS.check_budgets(("bitmap", "newmethod"), (), (),
+                           has_budget=lambda k, n: n != "newmethod")
+    assert ("plan-error-budget", "method:newmethod") in rules(got)
+
+
+def test_live_tree_plan_space_is_baselined():
+    findings = PS.run(ROOT)
+    supp = set(F.load_baseline(
+        ROOT / "experiments/baselines/ANALYSIS_baseline.json"))
+    extra = rules(findings) - supp
+    assert not extra, f"unbaselined plan-space findings: {sorted(extra)}"
+
+
+def test_route_enumeration_matches_resolve_plan():
+    """Every route resolve_plan can produce under any (cfg tier,
+    override) must be in the Pass 1 enumeration, and every enumerated
+    field value must be reachable via some override."""
+    space = set(execplan.enumerate_route_space())
+    vocab = execplan.route_vocabulary()
+    seen = {k: set() for k in vocab}
+    single = [{}] + [{f: v} for f, vs in vocab.items() for v in vs]
+    for name in configs.names():
+        cfg = configs.get(name, smoke=True)
+        for backend, ov in itertools.product((None, "kernel",
+                                              "reference"), single):
+            plan = execplan.resolve_plan(
+                cfg, backend=backend,
+                overrides={p: ov for p in execplan.PHASES} if ov else None)
+            for phase in execplan.PHASES:
+                route = plan.route(phase)
+                assert route in space, (name, backend, ov, phase, route)
+                for k in vocab:
+                    seen[k].add(getattr(route, k))
+    for k, vs in vocab.items():
+        assert seen[k] == set(vs), f"unreachable {k} values: " \
+            f"{set(vs) - seen[k]}"
+
+
+# ------------------------------------------- pass 2: kernel contracts
+
+BAD_COMPILER_PARAMS = """
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+def kernel(o_ref):
+    o_ref[...] = 0.0
+
+def op(x):
+    return pl.pallas_call(
+        kernel, out_shape=x,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",)))()
+"""
+
+
+def test_contract_catches_raw_tpu_compiler_params():
+    got = C.check_compiler_params("src/repro/kernels/bad.py",
+                                  BAD_COMPILER_PARAMS)
+    assert len(got) == 2            # the name AND the bare pallas_call
+    assert all(f.rule == "kernel-compiler-params" for f in got)
+
+
+BAD_DIVISOR = """
+def my_matmul(x, w, block_k=128, block_n=128):
+    bk = _divisor_block(w.shape[0], block_k)
+    return my_spmm_pallas(x, w, block_k=bk, block_n=block_n)
+"""
+
+
+def test_contract_catches_unlegalized_block():
+    got = C.check_divisor_block("src/repro/kernels/bad.py", BAD_DIVISOR)
+    assert [(f.rule, f.key) for f in got] == \
+        [("kernel-divisor-block", "my_matmul/block_n")]
+
+
+BAD_ARRAY_CONST = """
+import numpy as np
+LEVELS = np.array([0.0, 1.0])
+
+def kernel(o_ref):
+    o_ref[...] = LEVELS[0] * 2.0
+
+def ok_kernel(o_ref):
+    acc = 0.0
+    for i, v in enumerate(LEVELS):
+        acc = acc + float(v)
+    o_ref[...] = acc
+"""
+
+
+def test_contract_catches_array_constant_operand():
+    got = C.check_array_constant("src/repro/kernels/bad.py",
+                                 BAD_ARRAY_CONST)
+    assert [(f.rule, f.key) for f in got] == \
+        [("kernel-array-constant", "kernel/LEVELS")]
+
+
+BAD_ARITY = """
+import functools
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+def op(x, pos):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((1, 8), lambda bi: (bi, 0))],
+        out_specs=pl.BlockSpec((1, 8), lambda bi, pv: (bi, 0)),
+    )
+    return grid_spec
+"""
+
+
+def test_contract_catches_prefetch_arity():
+    got = C.check_prefetch_arity("src/repro/kernels/bad.py", BAD_ARITY)
+    assert len(got) == 1
+    assert got[0].rule == "kernel-prefetch-arity"
+    assert "takes 1 args, expected 2" in got[0].message
+
+
+def test_contract_catches_nf4_dup():
+    src = "from repro.core.quant import NF4_LEVELS\n"
+    got = C.check_nf4_dup("src/repro/kernels/bad.py", src)
+    assert got and got[0].rule == "kernel-nf4-dup"
+    assert not C.check_nf4_dup("src/repro/kernels/nf4_common.py", src)
+
+
+DUP_A = """
+def _helper(x):
+    a = x + 1
+    b = a * 2
+    return b - 3
+"""
+DUP_B = """
+def _other_name(x):
+    a = x + 1
+    b = a * 2
+    return b - 3
+"""
+
+
+def test_contract_catches_duplicate_helpers():
+    got = C.check_dup_helpers({"src/repro/kernels/a.py": DUP_A,
+                               "src/repro/kernels/b.py": DUP_B})
+    assert got and got[0].rule == "kernel-dup-helper"
+
+
+BAD_UNREGISTERED = """
+from jax.experimental import pallas as pl
+
+def my_public_op(x):
+    return pl.pallas_call(lambda o: None, out_shape=x)()
+"""
+
+
+def test_contract_catches_missing_registration():
+    got = C.check_contract_registration("src/repro/kernels/bad.py",
+                                        BAD_UNREGISTERED)
+    assert [(f.rule, f.key) for f in got] == \
+        [("kernel-contract-missing", "my_public_op")]
+
+
+BAD_VJP = """
+import jax
+from repro.kernels import ops
+
+@jax.custom_vjp
+def guarded(x):
+    return ops.good_op(x)
+
+def _fwd(x):
+    return guarded(x), x
+
+def _bwd(res, g):
+    out, pull = jax.vjp(lambda x: x, res)
+    return (pull(g),)
+
+guarded.defvjp(_fwd, _bwd)
+
+@jax.custom_vjp
+def unpaired(x):
+    return x
+
+def naked(x):
+    return ops.bad_op(x)
+"""
+
+
+def test_contract_catches_vjp_violations():
+    contracts = {"good_op": KernelContract("good_op", "linear", True),
+                 "bad_op": KernelContract("bad_op", "linear", True)}
+    got = C.check_custom_vjp({"src/repro/core/bad.py": BAD_VJP},
+                             contracts)
+    got_rules = rules(got)
+    assert ("kernel-custom-vjp", "unpaired") in got_rules
+    assert ("kernel-custom-vjp", "bad_op") in got_rules
+    assert ("kernel-custom-vjp", "good_op") not in got_rules
+
+
+def test_live_tree_kernel_contracts_clean():
+    assert C.run(ROOT) == []
+
+
+# ------------------------------------------------- pass 3: coverage
+
+def test_coverage_catches_unmatched_leaves():
+    from repro.distributed import sharding
+
+    def bad_param_rule(path, leaf):
+        return ("unmatched", None)
+
+    got = cov.check_arch("smollm_135m", param_rule=bad_param_rule)
+    assert any(f.rule == "coverage-sharding-param" for f in got)
+
+    def bad_cache_rule(path, leaf):
+        return ("unmatched", None)
+
+    got = cov.check_arch("smollm_135m", cache_rule=bad_cache_rule)
+    assert any(f.rule == "coverage-sharding-cache" for f in got)
+
+    got = cov.check_arch("smollm_135m",
+                         codec_supported=lambda dt: False)
+    assert any(f.rule == "coverage-ckpt-codec" for f in got)
+
+
+def test_codec_supported_tracks_roundtrip(tmp_path):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import ckpt
+
+    assert ckpt.codec_supported(np.float32)
+    assert ckpt.codec_supported(jnp.bfloat16)
+    assert not ckpt.codec_supported(object)
+    # the claim behind the predicate: bf16 round-trips bit-exactly
+    tree = {"w": jnp.full((3,), 1.5, jnp.bfloat16)}
+    ckpt.save(str(tmp_path), 1, tree)
+    out = ckpt.restore(str(tmp_path), 1, tree)
+    assert out["w"].dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(out["w"]).view(np.uint16),
+                          np.asarray(tree["w"]).view(np.uint16))
+
+
+@pytest.mark.slow
+def test_live_tree_coverage_clean():
+    assert cov.run(ROOT) == []
+
+
+# ------------------------------------------------------- the CI gate
+
+def test_checker_cli_mirrors_ci_gate(tmp_path):
+    """The exact CI invocation: exit 0 on the committed tree, and a
+    summary file is written."""
+    summary = tmp_path / "summary.md"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.check",
+         "--format=github", "--summary", str(summary)],
+        capture_output=True, text=True, cwd=ROOT,
+        env={**__import__("os").environ,
+             "PYTHONPATH": str(ROOT / "src")})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "baselined" in proc.stderr
+    assert summary.exists()
+
+
+def test_checker_gates_on_unbaselined_finding(tmp_path):
+    """An empty baseline must flip the exit code to 1: the committed
+    suppressions are load-bearing, not cosmetic."""
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"version": 1, "suppressions": []}))
+    rc = acheck.main(["--baseline", str(empty), "--format", "json"])
+    assert rc == 1
