@@ -30,7 +30,7 @@ MODULES = [
 
 # fast, fine-tune-free subset exercised by CI (--smoke); gated against
 # experiments/baselines/BENCH_smoke.json by benchmarks/compare.py
-SMOKE = ("theory", "table4", "serve", "moe_grouped")
+SMOKE = ("theory", "table3", "table4", "serve", "moe_grouped")
 
 
 def _calibrate(iters: int = 10, batches: int = 5) -> float:

@@ -21,6 +21,9 @@ Rules:
   plan-repr-twin       (method, quantized repr) streams no qbase twin
   plan-moe-kernel      (route, method, repr) expert compute unserved
   plan-kv-kernel       (kind, layout, kv_dtype) decode attention unserved
+  plan-alloc-ragged    (method, repr) adapter dispatch not closed over
+                       heterogeneous (rank-padded) adapter ranks, or an
+                       adapter-serving contract not ragged_rank
   plan-error-budget    vocabulary entry missing in quant.ERROR_BUDGETS
   plan-roofline-bytes  vocabulary entry the roofline byte models cannot
                        price (kv_position_bytes / salr_weight_bytes)
@@ -184,6 +187,78 @@ def check_linear(root: Path, contracts: dict, methods, reprs) -> list:
                     PASS_ID, "plan-repr-twin", rel, qfn.lineno, key,
                     f"_qkernel_dispatch maps {twin} to no kernel whose "
                     f"contract serves linear:{key}"))
+    return findings
+
+
+def check_alloc(root: Path, contracts: dict, methods, reprs) -> list:
+    """Allocation closure (rule ``plan-alloc-ragged``): the budget
+    allocator emits rank-PADDED concat adapters (core/allocate.py), so
+    every adapter-carrying dispatch branch must land on a kernel whose
+    contract advertises ``ragged_rank`` — an arbitrary adapter rank axis.
+    Combos with no fused kernel at all (value-dense bases) or no
+    quantized twin (N:M) fall back to the reference GEMM, which is
+    rank-agnostic by construction; they surface here and live in the
+    baseline with a justification each."""
+    rel = "src/repro/core/salr.py"
+    tree = _load_ast(root, rel)
+    findings = []
+    kfn = _find_def(tree, "_kernel_dispatch")
+    qfn = _find_def(tree, "_qkernel_dispatch")
+    if kfn is None or qfn is None:
+        return [Finding(PASS_ID, "plan-alloc-ragged", rel, 0,
+                        "_kernel_dispatch",
+                        "dispatch functions not found")]
+    ktable = dispatch_table(kfn)
+    qtable = dispatch_table(qfn)
+
+    ops_rel = "src/repro/kernels/ops.py"
+    for name in sorted(contracts):
+        c = contracts[name]
+        if "adapter" in c.serves and not c.ragged_rank:
+            findings.append(Finding(
+                PASS_ID, "plan-alloc-ragged", ops_rel, 0,
+                f"contract:{name}",
+                f"{name} serves the adapter path but its contract does "
+                "not advertise ragged_rank"))
+
+    def ragged(op_names: set) -> bool:
+        return any(o in contracts and contracts[o].ragged_rank
+                   for o in op_names)
+
+    for m in methods:
+        key = f"{m}/native"
+        base = _METHOD_BASE.get(m)
+        if base is None:
+            findings.append(Finding(
+                PASS_ID, "plan-alloc-ragged", rel, kfn.lineno, key,
+                f"SALR method {m!r} has no fused kernel: heterogeneous-"
+                "rank adapters run the reference GEMM"))
+            continue
+        if not ragged(ktable.get(base, set())):
+            findings.append(Finding(
+                PASS_ID, "plan-alloc-ragged", rel, kfn.lineno, key,
+                f"_kernel_dispatch maps {base} to no ragged_rank kernel:"
+                f" rank-padded adapters cannot dispatch for {key}"))
+
+    for m in methods:
+        for r in reprs:
+            if r == "native" or m == "bitmap_nf4":
+                continue          # native handled above / native IS twin
+            key = f"{m}/{r}"
+            twin = _REPR_TWIN.get(m)
+            if twin is None:
+                findings.append(Finding(
+                    PASS_ID, "plan-alloc-ragged", rel, qfn.lineno, key,
+                    f"SALR method {m!r} has no quantized twin: repr "
+                    f"{r!r} serves ragged adapters via the native "
+                    "fallback"))
+                continue
+            if not ragged(qtable.get(twin, set())):
+                findings.append(Finding(
+                    PASS_ID, "plan-alloc-ragged", rel, qfn.lineno, key,
+                    f"_qkernel_dispatch maps {twin} to no ragged_rank "
+                    f"kernel: rank-padded adapters cannot dispatch for "
+                    f"{key}"))
     return findings
 
 
@@ -408,6 +483,7 @@ def run(root) -> list:
     out = []
     out += check_vocabulary()
     out += check_linear(root, contracts, ep.SALR_METHODS, ep.REPR_ROUTES)
+    out += check_alloc(root, contracts, ep.SALR_METHODS, ep.REPR_ROUTES)
     out += check_moe(root, contracts, ep.MOE_ROUTES, ep.SALR_METHODS,
                      ep.REPR_ROUTES)
     out += check_kv(root, contracts, ep.KV_ROUTES, ep.KV_DTYPES)

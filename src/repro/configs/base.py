@@ -22,6 +22,39 @@ class MLAConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class BudgetConfig:
+    """Layer-wise sparsity/rank budget tier (docs/finetuning.md).
+
+    When attached to ``SALRModelConfig.budget``, model compression stops
+    applying one global ``(sparsity, res_rank)`` and instead resolves a
+    per-layer allocation ONCE at compress time (``core/allocate.py``):
+    the sparsity side comes from a single global magnitude threshold
+    (``prune.global_masks``), the rank side from greedy
+    marginal-MSE-per-parameter allocation over each layer's residual
+    singular spectrum — the exact quantity the paper's truncated-SVD
+    bound ``(1 - r/min(d,k))`` prices.  This dataclass is pure static
+    configuration (no arrays) so the config registry stays jax-free.
+    """
+    # total residual-adapter parameter budget Σ_l r_l·(d_l + k_l); None
+    # derives the uniform-equivalent budget Σ_l res_rank·(d_l + k_l),
+    # i.e. exactly what today's global config spends
+    adapter_params: Optional[int] = None
+    # "global": one magnitude threshold across all allocatable layers
+    # (per-layer sparsities vary); "uniform": per-matrix masks at the
+    # global sparsity, today's behavior
+    sparsity_mode: str = "global"
+    # "greedy": marginal-MSE-per-parameter water-filling; "uniform":
+    # every layer gets the same rank (the largest affordable) — the
+    # bitwise-compatibility policy existing checkpoints rely on
+    policy: str = "greedy"
+    # ranks are allocated (and adapters padded) in units of this, so
+    # A_cat/B_cat widths stay block-aligned for the fused kernels
+    rank_align: int = 8
+    # optional per-layer rank ceiling (None: min(d, k))
+    max_rank: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class SALRModelConfig:
     """How SALR is applied across a model's linear layers."""
     enabled: bool = True
@@ -47,6 +80,10 @@ class SALRModelConfig:
     # "nf4"/"bitmap_nf4" serve decode from the qbase twin (implies
     # dual_repr emission is wanted).
     decode_repr: Optional[str] = None
+    # layer-wise sparsity/rank budget allocation, resolved once at
+    # compress time (core/allocate.py).  None keeps the global
+    # (sparsity, res_rank) above for every layer.
+    budget: Optional[BudgetConfig] = None
 
 
 @dataclasses.dataclass(frozen=True)

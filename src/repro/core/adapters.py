@@ -44,6 +44,25 @@ def init_lora(key: jax.Array, d_in: int, d_out: int, rank: int,
     return LoRAAdapter(a=a, b=b, scale=alpha / rank)
 
 
+def pad_rank(ad: LoRAAdapter, rank: int) -> LoRAAdapter:
+    """Zero-pad an adapter to a larger physical rank.
+
+    Appends zero columns to A and zero rows to B.  Exact in the fused
+    GEMM (zero columns contribute nothing) and gradient-frozen: each
+    factor's gradient flows through the other, zero, factor, so padded
+    ranks stay identically zero under any first-order optimizer whose
+    update vanishes at (g=0, m=0, v=0) — AdamW with decoupled weight
+    decay included.  Used by the budget allocator to keep scan-stacked
+    adapter leaves shape-uniform under heterogeneous logical ranks.
+    """
+    r = ad.rank
+    if rank <= r:
+        return ad
+    a = jnp.pad(ad.a, ((0, 0), (0, rank - r)))
+    b = jnp.pad(ad.b, ((0, rank - r), (0, 0)))
+    return LoRAAdapter(a=a, b=b, scale=ad.scale)
+
+
 def apply_adapter(x: jax.Array, ad: LoRAAdapter) -> jax.Array:
     """x: (..., d_in) -> (..., d_out)."""
     return (x @ ad.a) @ ad.b * ad.scale

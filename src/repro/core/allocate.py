@@ -1,0 +1,328 @@
+"""Layer-wise sparsity/rank budget allocation (docs/finetuning.md).
+
+The paper's truncated-SVD bound says the residual adapter of ONE layer
+cuts per-entry reconstruction MSE by ``(1 - r/min(d,k))`` — a per-layer
+quantity, and its exact finite form is the tail energy of the residual's
+singular spectrum: after keeping rank r, the remaining Frobenius error
+is ``Σ_{i>r} σ_i²``.  The marginal value of the (r+1)-th rank unit is
+therefore ``σ_{r+1}²`` and its cost is ``d + k`` stored (trainable)
+parameters, which makes rank allocation under a global adapter-parameter
+budget a classic water-filling problem: repeatedly give the next rank
+unit to the layer with the largest MSE reduction PER PARAMETER.  Since
+spectra are sorted descending, per-layer chunk gains are non-increasing,
+so the greedy order respects the prefix structure and — for equal-shape
+layers — selects exactly the globally largest σ² entries (optimal).
+
+The sparsity side uses one global magnitude threshold across all
+allocatable layers (:func:`repro.core.prune.global_masks`): layers whose
+weights matter less end up sparser, and their larger residual spectra
+then pull in more rank — the two sides of the budget trade against each
+other through the same signal.
+
+Heterogeneous ranks meet the scan-stacked model layout (and the fused
+concat-adapter kernels' preference for block-aligned widths) by RANK
+PADDING: every adapter in a scan stack is zero-padded to the stack's
+aligned maximum rank.  Zero columns of A_cat / zero rows of B_cat are
+exact in the GEMM, and their gradients are identically zero (each
+factor's gradient is a product through the other, zero, factor), so
+padded ranks stay frozen under AdamW and the budget is conserved under
+training, not just at compress time.
+
+This module is pure solver + compress-time planning; the model driver
+that threads decisions through ``init_linear`` lives in
+``models/model.py`` / ``models/layers.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import BudgetConfig  # noqa: F401 - re-export
+from repro.core import prune
+from repro.core.residual import singular_spectrum
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerStats:
+    """Per-layer allocation signal: the residual singular spectrum."""
+    name: str
+    d_in: int
+    d_out: int
+    spectrum: np.ndarray          # descending singular values of E_l
+    sparsity: float = 0.0         # actual mask sparsity (bookkeeping)
+
+    @property
+    def full_rank(self) -> int:
+        return min(self.d_in, self.d_out)
+
+    @property
+    def unit_cost(self) -> int:
+        """Trainable parameters per rank unit (one column of A + one
+        row of B)."""
+        return self.d_in + self.d_out
+
+
+@dataclasses.dataclass(frozen=True)
+class RankDecision:
+    """Solver output for one layer."""
+    name: str
+    res_rank: int
+    captured: float               # Σ_{i<=r} σ_i² (Frobenius energy kept)
+    tail: float                   # Σ_{i>r} σ_i²  (remaining error)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearDecision:
+    """Fully-resolved compress-time overrides for one model linear, in
+    the model's init traversal order (consumed by
+    ``models.layers.AllocationFeed``)."""
+    sparsity: float               # static sparsity for the layer's cfg
+    res_rank: int                 # logical (trainable) residual rank
+    pad_rank_to: int              # physical stored rank (stack-aligned)
+    mask: Optional[jax.Array]     # logical-orientation pruning mask
+    cap_t: Optional[int]          # tiled-capacity override (stack max)
+
+
+def layer_stats(name: str, e: jax.Array, *, d_in: Optional[int] = None,
+                d_out: Optional[int] = None,
+                sparsity: float = 0.0) -> LayerStats:
+    """Stats from a residual matrix E = W - W_hat (logical or store
+    orientation — singular values are transpose-invariant)."""
+    d, k = e.shape
+    s = np.asarray(singular_spectrum(e), np.float64)
+    return LayerStats(name=name, d_in=d_in if d_in is not None else d,
+                      d_out=d_out if d_out is not None else k,
+                      spectrum=s, sparsity=sparsity)
+
+
+def tail_mse(stat: LayerStats, rank: int) -> float:
+    """Per-entry reconstruction MSE left after a rank-``rank`` residual
+    adapter: ``Σ_{i>r} σ_i² / (d·k)`` (exact, Eckart–Young)."""
+    sq = stat.spectrum.astype(np.float64) ** 2
+    return float(np.sum(sq[rank:]) / (stat.d_in * stat.d_out))
+
+
+def uniform_equivalent_budget(stats: Sequence[LayerStats],
+                              res_rank: int) -> int:
+    """What today's global config spends: Σ_l res_rank·(d_l + k_l).
+    (The stored adapter is always ``res_rank`` wide — truncated_svd
+    zero-pads degenerate layers — so this is both the logical and the
+    physical uniform budget.)"""
+    return sum(res_rank * st.unit_cost for st in stats)
+
+
+def allocate_ranks(stats: Sequence[LayerStats], budget_params: int, *,
+                   align: int = 1, max_rank: Optional[int] = None,
+                   policy: str = "greedy") -> list[RankDecision]:
+    """Solve for per-layer residual ranks under a global parameter
+    budget.
+
+    ``policy="greedy"``: marginal-MSE-per-parameter water-filling in
+    chunks of ``align`` rank units (the final chunk of a layer may be
+    smaller so the full rank is exactly reachable).  Chunks with zero
+    gain (zero singular tail) are never allocated — rank that cannot
+    reduce error is left unspent.  Guarantees
+    ``Σ_l r_l·(d_l + k_l) <= budget_params``.
+
+    ``policy="uniform"``: every layer gets the single largest common
+    rank the budget affords (capped per layer at its full rank) — with
+    the uniform-equivalent budget this reproduces today's global
+    ``res_rank`` exactly, which the bitwise regression suite pins.
+    """
+    if align < 1:
+        raise ValueError(f"rank_align must be >= 1, got {align}")
+    if budget_params < 0:
+        raise ValueError(f"budget must be >= 0, got {budget_params}")
+    caps = [st.full_rank if max_rank is None else min(max_rank,
+                                                     st.full_rank)
+            for st in stats]
+    sq = [st.spectrum.astype(np.float64) ** 2 for st in stats]
+
+    if policy == "uniform":
+        total_at = lambda r: sum(min(r, c) * st.unit_cost
+                                 for c, st in zip(caps, stats))
+        r, best = 0, 0
+        while r < max(caps, default=0):
+            nxt = min(r + align, max(caps))
+            if total_at(nxt) > budget_params:
+                break
+            r = nxt
+            best = r
+        ranks = [min(best, c) for c in caps]
+    elif policy == "greedy":
+        ranks = [0] * len(stats)
+        remaining = budget_params
+        heap: list = []
+
+        def push(i: int) -> None:
+            r = ranks[i]
+            if r >= caps[i]:
+                return
+            step = min(align, caps[i] - r)
+            gain = float(np.sum(sq[i][r:r + step]))
+            if gain <= 0.0:
+                return
+            cost = step * stats[i].unit_cost
+            heapq.heappush(heap, (-gain / cost, i, r, step, cost))
+
+        for i in range(len(stats)):
+            push(i)
+        while heap:
+            _, i, r, step, cost = heapq.heappop(heap)
+            if ranks[i] != r:
+                continue              # stale entry
+            if cost > remaining:
+                continue              # a cheaper layer may still fit
+            ranks[i] = r + step
+            remaining -= cost
+            push(i)
+    else:
+        raise ValueError(f"unknown allocation policy {policy!r}")
+
+    out = []
+    for st, s2, r in zip(stats, sq, ranks):
+        out.append(RankDecision(name=st.name, res_rank=int(r),
+                                captured=float(np.sum(s2[:r])),
+                                tail=float(np.sum(s2[r:]))))
+    return out
+
+
+def spent_params(stats: Sequence[LayerStats],
+                 decisions: Sequence[RankDecision]) -> int:
+    """Trainable adapter parameters the allocation actually spends."""
+    return sum(d.res_rank * st.unit_cost
+               for st, d in zip(stats, decisions))
+
+
+# ---------------------------------------------------------------------------
+# model-level planning (consumed by models/model.init_params_allocated)
+# ---------------------------------------------------------------------------
+
+# methods whose pruning mask the global-threshold side may override;
+# N:M masks are structural and dense has no residual at all
+_MASKABLE = ("mask", "bitmap", "bitmap_nf4")
+
+
+def _survey_residual(w, transposed: bool, scfg, mask) -> jax.Array:
+    """The pruning residual the allocator prices.  This is the dominant
+    term of the residual compress_linear actually SVDs (which also folds
+    capacity spill and NF4 quantization error in); the small corrections
+    do not change the greedy order, and the committed adapter always
+    uses the true total residual."""
+    if mask is not None:
+        return prune.residual(w, mask)
+    if scfg.method == "nm":
+        n, m = scfg.nm
+        store = w.T if transposed else w
+        return prune.residual(store, prune.nm_mask(store, n=n, m=m))
+    return prune.residual(w, prune.magnitude_mask(w, scfg.sparsity))
+
+
+def plan_linear_allocation(entries, scfg, budget: BudgetConfig
+                           ) -> list[LinearDecision]:
+    """Resolve per-linear compress overrides for a surveyed model.
+
+    ``entries``: the traversal-ordered survey records, each with
+    ``.w`` (logical (d_in, d_out)), ``.transposed``, and ``.stack`` (a
+    hashable id grouping the repeats of one scan-stacked linear —
+    adapters within a stack are padded to a common physical rank and
+    tiled bitmap capacities pinned to the stack maximum, so stacked
+    leaves keep uniform shapes).  ``scfg`` is the model's base
+    :class:`repro.core.salr.SALRConfig`.
+    """
+    from repro.core import bitmap as bm
+
+    if budget.sparsity_mode not in ("global", "uniform"):
+        raise ValueError(
+            f"unknown sparsity_mode {budget.sparsity_mode!r}")
+    n = len(entries)
+    if n == 0:
+        return []
+    allocatable = scfg.method != "dense" and scfg.res_rank > 0
+
+    # pad_rank_to=0 when no residual adapter exists to pad: the
+    # unallocated path emits res=None there, and padding would create a
+    # spurious zero adapter (breaking the bitwise guarantee)
+    passthrough = [LinearDecision(sparsity=scfg.sparsity,
+                                  res_rank=scfg.res_rank,
+                                  pad_rank_to=(scfg.res_rank if allocatable
+                                               else 0),
+                                  mask=None, cap_t=None)
+                   for _ in entries]
+    if not allocatable:
+        return passthrough
+    if (budget.adapter_params is None and budget.policy == "uniform"
+            and budget.sparsity_mode == "uniform"):
+        # budget equal to today's global (sparsity, r): exact
+        # passthrough, so compress_linear output is BITWISE identical
+        # to the unallocated path (existing checkpoints stay valid)
+        return passthrough
+
+    masks: list = [None] * n
+    if budget.sparsity_mode == "global" and scfg.method in _MASKABLE:
+        masks = prune.global_masks([e.w for e in entries], scfg.sparsity)
+
+    stats = []
+    sparsities = []
+    for e, mask in zip(entries, masks):
+        sp = (float(1.0 - np.asarray(mask, np.float32).mean())
+              if mask is not None else
+              (1.0 - scfg.nm[0] / scfg.nm[1] if scfg.method == "nm"
+               else scfg.sparsity))
+        sparsities.append(sp)
+        resid = _survey_residual(e.w, e.transposed, scfg, mask)
+        stats.append(layer_stats(str(e.stack), resid,
+                                 d_in=e.w.shape[0], d_out=e.w.shape[1],
+                                 sparsity=sp))
+
+    budget_params = budget.adapter_params
+    if budget_params is None:
+        budget_params = uniform_equivalent_budget(stats, scfg.res_rank)
+    if budget.adapter_params is None and budget.policy == "uniform":
+        # uniform policy at the uniform-equivalent budget: today's
+        # global rank exactly (independent of rank_align stepping)
+        ranks = [RankDecision(name=st.name, res_rank=scfg.res_rank,
+                              captured=float(
+                                  np.sum(st.spectrum[:scfg.res_rank]
+                                         .astype(np.float64) ** 2)),
+                              tail=float(
+                                  np.sum(st.spectrum[scfg.res_rank:]
+                                         .astype(np.float64) ** 2)))
+                 for st in stats]
+    else:
+        ranks = allocate_ranks(stats, budget_params,
+                               align=budget.rank_align,
+                               max_rank=budget.max_rank,
+                               policy=budget.policy)
+
+    # stack uniformity: shared physical rank and tiled capacity
+    by_stack: dict = {}
+    for i, e in enumerate(entries):
+        by_stack.setdefault(e.stack, []).append(i)
+    pad_of, cap_of = {}, {}
+    kernel_tiled = (scfg.backend == "kernel"
+                    and scfg.method in ("bitmap", "bitmap_nf4"))
+    for sid, idxs in by_stack.items():
+        pad_of[sid] = max(ranks[i].res_rank for i in idxs)
+        cap_of[sid] = None
+        if kernel_tiled and any(masks[i] is not None for i in idxs):
+            d_out = entries[idxs[0]].w.shape[1]
+            tile = bm.default_tile(d_out)
+            cap_of[sid] = bm.tiled_capacity(
+                tile, min(sparsities[i] for i in idxs))
+
+    out = []
+    for i, e in enumerate(entries):
+        out.append(LinearDecision(
+            sparsity=sparsities[i], res_rank=ranks[i].res_rank,
+            pad_rank_to=pad_of[e.stack], mask=masks[i],
+            cap_t=cap_of[e.stack]))
+    return out

@@ -40,7 +40,7 @@ import jax.numpy as jnp
 
 from repro.core import bitmap as bm
 from repro.core import prune
-from repro.core.adapters import LoRAAdapter, init_lora
+from repro.core.adapters import LoRAAdapter, init_lora, pad_rank
 from repro.core.quant import (NF4_LEVELS, NF4Tensor, dequantize_nf4,
                               quantize_nf4)
 from repro.core.residual import truncated_svd_adapter
@@ -417,13 +417,34 @@ def effective_weight(layer: SALRLinear) -> jax.Array:
 
 def compress_linear(key: jax.Array, w: jax.Array, cfg: SALRConfig,
                     bias: Optional[jax.Array] = None,
-                    transposed: bool = False) -> SALRLinear:
+                    transposed: bool = False, *,
+                    mask: Optional[jax.Array] = None,
+                    cap_t: Optional[int] = None,
+                    pad_rank_to: Optional[int] = None) -> SALRLinear:
     """Compress a dense weight W (d_in, d_out) into a SALRLinear.
 
     Pipeline (paper Fig. 2a): magnitude-prune -> encode base (bitmap/NM/
     NF4) -> truncated-SVD the total residual (pruned entries + capacity
     spill [+ quantization error]) into the trainable ``res`` adapter ->
     fresh LoRA adapter.
+
+    The keyword-only overrides are the budget allocator's hooks
+    (core/allocate.py), all defaulting to today's behavior:
+
+    - ``mask``: pruning mask in the LOGICAL (d_in, d_out) orientation
+      (e.g. one slice of ``prune.global_masks``), replacing the
+      per-matrix magnitude mask for the maskable methods (mask /
+      bitmap / bitmap_nf4; N:M masks are structural and dense takes
+      none).  Capacity spill past static capacities folds into the
+      residual adapter exactly, as always.
+    - ``cap_t``: tiled-capacity override so every member of a scan
+      stack encodes with the stack's (maximum) capacity and stacked
+      leaves stay shape-uniform.
+    - ``pad_rank_to``: physical residual-adapter rank; the trainable
+      rank-``cfg.res_rank`` adapter is zero-padded to this width
+      (``adapters.pad_rank`` — exact in the GEMM, gradient-frozen).
+      Layers allocated rank 0 inside a rank>0 stack store an all-zero
+      adapter of this width.
 
     With ``cfg.backend == "kernel"`` the bitmap-family bases are emitted
     directly in the kernel-native tiled layout (logical orientation, so
@@ -437,6 +458,9 @@ def compress_linear(key: jax.Array, w: jax.Array, cfg: SALRConfig,
     """
     d_in, d_out = w.shape
     store = w.T if transposed else w
+    # override masks arrive in the logical orientation; flat store-
+    # orientation paths encode the transposed view
+    store_mask = None if mask is None else (mask.T if transposed else mask)
     dtype = jnp.dtype(cfg.dtype)
     kernel_ready = cfg.backend == "kernel"
     res_ad = None
@@ -445,18 +469,21 @@ def compress_linear(key: jax.Array, w: jax.Array, cfg: SALRConfig,
     if cfg.method == "dense":
         base = store.astype(dtype)
     elif cfg.method == "mask":
-        mask = prune.magnitude_mask(store, cfg.sparsity)
-        base = prune.apply_mask(store, mask).astype(dtype)
-        e = prune.residual(store, mask)
+        m_ = (store_mask if store_mask is not None
+              else prune.magnitude_mask(store, cfg.sparsity))
+        base = prune.apply_mask(store, m_).astype(dtype)
+        e = prune.residual(store, m_)
         res_ad = _res_adapter(e, cfg, transposed, dtype)
     elif cfg.method == "bitmap":
         if kernel_ready:
-            base, e = _tiled_bitmap_base(w, cfg, dtype)
+            base, e = _tiled_bitmap_base(w, cfg, dtype, mask=mask,
+                                         cap_t=cap_t)
             res_ad = _res_adapter(e, cfg, False, dtype)
             out_transposed = False
         else:
             bw, e = bm.encode_from_dense(store.astype(dtype), cfg.sparsity,
-                                         cap=cfg.capacity(store.shape[1]))
+                                         cap=cfg.capacity(store.shape[1]),
+                                         mask=store_mask)
             base = bw
             res_ad = _res_adapter(e, cfg, transposed, dtype)
     elif cfg.method == "nm":
@@ -471,7 +498,8 @@ def compress_linear(key: jax.Array, w: jax.Array, cfg: SALRConfig,
             res_ad = _res_adapter(e, cfg, transposed, dtype)
     elif cfg.method == "bitmap_nf4":
         if kernel_ready:
-            tbw, e = _tiled_encode(w.astype(jnp.float32), cfg)
+            tbw, e = _tiled_encode(w.astype(jnp.float32), cfg, mask=mask,
+                                   cap_t=cap_t)
             q, qerr = bm.tile_quantize_nf4(tbw)
             e = e + qerr[:, :d_out]
             base = q
@@ -480,7 +508,8 @@ def compress_linear(key: jax.Array, w: jax.Array, cfg: SALRConfig,
         else:
             bw, e = bm.encode_from_dense(store.astype(jnp.float32),
                                          cfg.sparsity,
-                                         cap=cfg.capacity(store.shape[1]))
+                                         cap=cfg.capacity(store.shape[1]),
+                                         mask=store_mask)
             q = quantize_nf4(bw.values)
             # quantization error of kept values joins the residual too
             qerr_vals = bw.values - dequantize_nf4(q)
@@ -492,6 +521,14 @@ def compress_linear(key: jax.Array, w: jax.Array, cfg: SALRConfig,
             res_ad = _res_adapter(e, cfg, transposed, dtype)
     else:
         raise ValueError(f"unknown SALR method {cfg.method!r}")
+
+    if pad_rank_to is not None and pad_rank_to > 0:
+        if res_ad is None:
+            res_ad = LoRAAdapter(a=jnp.zeros((d_in, pad_rank_to), dtype),
+                                 b=jnp.zeros((pad_rank_to, d_out), dtype),
+                                 scale=1.0)
+        else:
+            res_ad = pad_rank(res_ad, pad_rank_to)
 
     lora = init_lora(key, d_in, d_out, cfg.lora_rank, dtype=dtype)
     layer = SALRLinear(base=base, lora=lora, res=res_ad,
@@ -555,8 +592,10 @@ def _tiled_encode(w: jax.Array, cfg: SALRConfig,
     return tbw, e + spill[:, :d_out]
 
 
-def _tiled_bitmap_base(w: jax.Array, cfg: SALRConfig, dtype):
-    return _tiled_encode(w.astype(dtype), cfg)
+def _tiled_bitmap_base(w: jax.Array, cfg: SALRConfig, dtype,
+                       mask: Optional[jax.Array] = None,
+                       cap_t: Optional[int] = None):
+    return _tiled_encode(w.astype(dtype), cfg, mask=mask, cap_t=cap_t)
 
 
 def _tiled_nm_base(w: jax.Array, cfg: SALRConfig, dtype):

@@ -36,20 +36,28 @@ class KernelContract:
     differentiable: bool  # advertises gradients -> needs a custom-VJP
     #                       pairing with a reference backward
     serves: tuple = ()   # route tokens (see module docstring)
+    # the wrapper takes the concat-adapter pair with an ARBITRARY rank
+    # axis (the budget allocator's rank-padded A_cat/B_cat dispatch
+    # through it unchanged).  Pass 1's allocation-closure check
+    # (plan-alloc-ragged) requires every adapter-carrying dispatch
+    # branch to land on a ragged contract.
+    ragged_rank: bool = False
 
 
 # name -> KernelContract; populated at import of the kernel modules
 CONTRACTS: dict = {}
 
 
-def kernel_contract(*, kind: str, differentiable: bool, serves=()):
+def kernel_contract(*, kind: str, differentiable: bool, serves=(),
+                    ragged_rank: bool = False):
     """Decorator registering a wrapper's contract.  Works on plain
     functions and on jit-wrapped callables (registration is by name; the
     attribute set is best-effort)."""
     def deco(fn):
         c = KernelContract(name=fn.__name__, kind=kind,
                            differentiable=differentiable,
-                           serves=tuple(serves))
+                           serves=tuple(serves),
+                           ragged_rank=ragged_rank)
         CONTRACTS[fn.__name__] = c
         try:
             fn.__kernel_contract__ = c

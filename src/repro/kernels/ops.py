@@ -64,7 +64,8 @@ def _divisor_block(dim: int, block: int, mult: int = 1) -> int:
 
 
 def _batched_matmul(*static_argnames, kind: str = "linear",
-                    differentiable: bool = True, serves=()):
+                    differentiable: bool = True, serves=(),
+                    ragged_rank: bool = False):
     """Decorator unifying the wrappers' boilerplate: jit with the given
     static names, flatten leading batch dims of x, pad M up to the block
     multiple (each body's own ``block_m`` default — 128 for the tiled
@@ -90,7 +91,8 @@ def _batched_matmul(*static_argnames, kind: str = "linear",
         op.__doc__ = body.__doc__
         jitted = jax.jit(op, static_argnames=("block_m",) + static_argnames)
         return kernel_contract(kind=kind, differentiable=differentiable,
-                               serves=serves)(jitted)
+                               serves=serves,
+                               ragged_rank=ragged_rank)(jitted)
     return deco
 
 
@@ -128,7 +130,7 @@ def nm_matmul(x: jax.Array, nmw: bm.NMWeight, *,
 
 
 @_batched_matmul("block_k", "interpret",
-                 serves=("linear:bitmap/native",))
+                 serves=("linear:bitmap/native",), ragged_rank=True)
 def salr_matmul(x: jax.Array, tbw: bm.TiledBitmapWeight,
                 a_cat: jax.Array, b_cat: jax.Array, *,
                 block_m: int = 128, block_k: int = 128,
@@ -145,7 +147,8 @@ def salr_matmul(x: jax.Array, tbw: bm.TiledBitmapWeight,
 @_batched_matmul("block_k", "interpret",
                  serves=("linear:bitmap_nf4/native",
                          "linear:bitmap/nf4",
-                         "linear:bitmap/bitmap_nf4"))
+                         "linear:bitmap/bitmap_nf4"),
+                 ragged_rank=True)
 def qsalr_matmul(x: jax.Array, qtbw: bm.QTiledBitmapWeight,
                  a_cat: jax.Array, b_cat: jax.Array, *,
                  block_m: int = 128, block_k: int = 128,
@@ -166,7 +169,7 @@ def qsalr_matmul(x: jax.Array, qtbw: bm.QTiledBitmapWeight,
 
 
 @_batched_matmul("block_n", "block_k", "interpret",
-                 serves=("adapter",))
+                 serves=("adapter",), ragged_rank=True)
 def lora_matmul(x: jax.Array, a_cat: jax.Array, b_cat: jax.Array, *,
                 block_m: int = 128, block_n: int = 128, block_k: int = 128,
                 interpret: bool = _INTERPRET) -> jax.Array:
@@ -196,7 +199,8 @@ def _grouped_adapters(a_cat, b_cat, ncols: int):
 
 @_batched_matmul("block_n", "block_k", "interpret", kind="moe",
                  serves=("moe:grouped/dense/native",
-                         "moe:grouped/mask/native"))
+                         "moe:grouped/mask/native"),
+                 ragged_rank=True)
 def grouped_dense_matmul(x, tile_expert: jax.Array, w: jax.Array,
                          a_cat=None, b_cat=None, *,
                          block_m: int = 128, block_n: int = 128,
@@ -214,7 +218,7 @@ def grouped_dense_matmul(x, tile_expert: jax.Array, w: jax.Array,
 
 
 @_batched_matmul("block_k", "interpret", kind="moe",
-                 serves=("moe:grouped/bitmap/native",))
+                 serves=("moe:grouped/bitmap/native",), ragged_rank=True)
 def grouped_salr_matmul(x, tile_expert: jax.Array,
                         tbw: bm.TiledBitmapWeight, a_cat, b_cat, *,
                         block_m: int = 128, block_k: int = 128,
@@ -234,7 +238,8 @@ def grouped_salr_matmul(x, tile_expert: jax.Array,
 @_batched_matmul("block_k", "interpret", kind="moe",
                  serves=("moe:grouped/bitmap_nf4/native",
                          "moe:grouped/bitmap/nf4",
-                         "moe:grouped/bitmap/bitmap_nf4"))
+                         "moe:grouped/bitmap/bitmap_nf4"),
+                 ragged_rank=True)
 def grouped_qsalr_matmul(x, tile_expert: jax.Array,
                          qtbw: bm.QTiledBitmapWeight, a_cat, b_cat, *,
                          block_m: int = 128, block_k: int = 128,
@@ -253,7 +258,7 @@ def grouped_qsalr_matmul(x, tile_expert: jax.Array,
 
 
 @_batched_matmul("block_n", "block_k", "interpret", kind="moe",
-                 serves=("moe:grouped/nm/native",))
+                 serves=("moe:grouped/nm/native",), ragged_rank=True)
 def grouped_nm_matmul(x, tile_expert: jax.Array, nmw: bm.NMWeight,
                       a_cat=None, b_cat=None, *,
                       block_m: int = 128, block_n: int = 128,
@@ -292,7 +297,8 @@ def _pad_row_expert(row_expert: jax.Array, mrows: int) -> jax.Array:
 
 @_batched_matmul("block_n", "block_k", "interpret", kind="moe",
                  serves=("moe:decode_grid/dense/native",
-                         "moe:decode_grid/mask/native"))
+                         "moe:decode_grid/mask/native"),
+                 ragged_rank=True)
 def decode_dense_matmul(x, row_expert: jax.Array, w: jax.Array,
                         a_cat=None, b_cat=None, *,
                         block_m: int = 8, block_n: int = 128,
@@ -311,7 +317,8 @@ def decode_dense_matmul(x, row_expert: jax.Array, w: jax.Array,
 
 
 @_batched_matmul("block_k", "interpret", kind="moe",
-                 serves=("moe:decode_grid/bitmap/native",))
+                 serves=("moe:decode_grid/bitmap/native",),
+                 ragged_rank=True)
 def decode_salr_matmul(x, row_expert: jax.Array,
                        tbw: bm.TiledBitmapWeight, a_cat, b_cat, *,
                        block_m: int = 8, block_k: int = 128,
@@ -331,7 +338,8 @@ def decode_salr_matmul(x, row_expert: jax.Array,
 @_batched_matmul("block_k", "interpret", kind="moe",
                  serves=("moe:decode_grid/bitmap_nf4/native",
                          "moe:decode_grid/bitmap/nf4",
-                         "moe:decode_grid/bitmap/bitmap_nf4"))
+                         "moe:decode_grid/bitmap/bitmap_nf4"),
+                 ragged_rank=True)
 def decode_qsalr_matmul(x, row_expert: jax.Array,
                         qtbw: bm.QTiledBitmapWeight, a_cat, b_cat, *,
                         block_m: int = 8, block_k: int = 128,
@@ -350,7 +358,7 @@ def decode_qsalr_matmul(x, row_expert: jax.Array,
 
 
 @_batched_matmul("block_n", "block_k", "interpret", kind="moe",
-                 serves=("moe:decode_grid/nm/native",))
+                 serves=("moe:decode_grid/nm/native",), ragged_rank=True)
 def decode_nm_matmul(x, row_expert: jax.Array, nmw: bm.NMWeight,
                      a_cat=None, b_cat=None, *,
                      block_m: int = 8, block_n: int = 128,

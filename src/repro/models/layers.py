@@ -9,6 +9,9 @@ encoded row axis is the tensor-parallel-sharded dimension
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -18,6 +21,99 @@ from repro.core.salr import SALRConfig, SALRLinear, apply_salr, compress_linear
 
 def _dtype(cfg: ArchConfig):
     return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------- budget allocation
+# Two-pass compress-time allocation (core/allocate.py): a SURVEY init
+# pass records every compressible weight (init_linear returns dense
+# placeholders), the allocator resolves per-layer decisions, then a
+# COMMIT pass re-runs the identical traversal consuming the decisions in
+# order.  Both passes use the same PRNG keys, so the commit pass is
+# bit-identical to an unallocated init wherever a decision matches the
+# global config.
+
+@dataclasses.dataclass
+class SurveyEntry:
+    w: jax.Array                  # logical (d_in, d_out) weight
+    transposed: bool
+    target: str
+    stack: tuple                  # groups the repeats of one scan stack
+
+
+class AllocationSurvey:
+    """Records compressible linears during the survey init pass."""
+
+    def __init__(self):
+        self.entries: list[SurveyEntry] = []
+        self._repeat_key: tuple = ("root",)
+        self._pos = 0
+        self._tag = 0
+
+    def new_tag(self) -> int:
+        self._tag += 1
+        return self._tag
+
+    def begin_repeat(self, key: tuple) -> None:
+        """Mark the start of one repeat of a scan stack (or one
+        standalone module).  Linears recorded at the same position
+        across repeats of the same stack share a stack id — their
+        adapters must stay shape-uniform for ``jnp.stack``."""
+        self._repeat_key = key
+        self._pos = 0
+
+    def record(self, w, transposed: bool, target: str) -> None:
+        self.entries.append(SurveyEntry(
+            w=w, transposed=transposed, target=target,
+            stack=(self._repeat_key, self._pos)))
+        self._pos += 1
+
+
+class AllocationFeed:
+    """Replays allocator decisions during the commit init pass, in the
+    exact traversal order the survey recorded them."""
+
+    def __init__(self, decisions):
+        self.decisions = list(decisions)
+        self._i = 0
+
+    def begin_repeat(self, key: tuple) -> None:
+        pass                      # traversal-order replay needs no keys
+
+    def new_tag(self) -> int:
+        return 0                  # unused during replay
+
+    def next(self):
+        d = self.decisions[self._i]
+        self._i += 1
+        return d
+
+
+_ALLOC_CTX: list = []
+
+
+@contextlib.contextmanager
+def allocation_scope(ctx):
+    """Activate a survey/feed for init_linear calls in this scope."""
+    _ALLOC_CTX.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _ALLOC_CTX.pop()
+
+
+def current_allocation():
+    return _ALLOC_CTX[-1] if _ALLOC_CTX else None
+
+
+def begin_repeat(key: tuple) -> None:
+    ctx = current_allocation()
+    if ctx is not None:
+        ctx.begin_repeat(key)
+
+
+def new_stack_tag() -> int:
+    ctx = current_allocation()
+    return ctx.new_tag() if ctx is not None else 0
 
 
 def salr_cfg_for(cfg: ArchConfig) -> SALRConfig:
@@ -36,11 +132,28 @@ def salr_cfg_for(cfg: ArchConfig) -> SALRConfig:
 
 def init_linear(key: jax.Array, d_in: int, d_out: int, cfg: ArchConfig,
                 target: str = "attn", transposed: bool = False):
-    """A model linear: SALR-compressed when the target family is enabled."""
+    """A model linear: SALR-compressed when the target family is enabled.
+
+    Under an active :func:`allocation_scope`, a survey pass records the
+    weight and returns a dense placeholder; a feed pass compresses with
+    the allocator's per-layer decision (sparsity/rank/mask/padding)
+    instead of the global config."""
     dt = _dtype(cfg)
     w = jax.random.normal(key, (d_in, d_out), jnp.float32) / jnp.sqrt(d_in)
     if cfg.salr.enabled and target in cfg.salr.targets:
-        return compress_linear(key, w, salr_cfg_for(cfg), transposed=transposed)
+        ctx = current_allocation()
+        if isinstance(ctx, AllocationSurvey):
+            ctx.record(w, transposed, target)
+            return {"w": w.astype(dt)}       # placeholder, discarded
+        scfg = salr_cfg_for(cfg)
+        if isinstance(ctx, AllocationFeed):
+            dec = ctx.next()
+            scfg = dataclasses.replace(scfg, sparsity=dec.sparsity,
+                                       res_rank=dec.res_rank)
+            return compress_linear(key, w, scfg, transposed=transposed,
+                                   mask=dec.mask, cap_t=dec.cap_t,
+                                   pad_rank_to=dec.pad_rank_to)
+        return compress_linear(key, w, scfg, transposed=transposed)
     return {"w": w.astype(dt)}
 
 

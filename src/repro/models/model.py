@@ -16,6 +16,7 @@ from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import recurrent as rec
 from repro.models import xlstm as xl
+from repro.models import layers as L
 from repro.models.layers import (apply_embedding, apply_lm_head, apply_mlp,
                                  apply_rmsnorm, init_embedding, init_lm_head,
                                  init_mlp, init_rmsnorm)
@@ -61,17 +62,36 @@ def init_layer(key: jax.Array, cfg: ArchConfig, kind: str, mlp_kind: str,
 
 def init_group(key: jax.Array, cfg: ArchConfig, group: LayerGroup,
                cross: bool = False):
-    """Per pattern position: params stacked over ``repeats`` (scan axis)."""
+    """Per pattern position: params stacked over ``repeats`` (scan axis).
+
+    Under an active allocation scope (budgeted compression), per-repeat
+    static shapes may differ before padding, so the repeats are
+    initialized in a Python loop from the SAME per-repeat keys the vmap
+    would use and tree-stacked afterwards — the allocator's per-stack
+    rank padding and capacity pinning guarantee uniform leaf shapes."""
     mlp_kind = _group_mlp(cfg, group)
     out = []
+    alloc = L.current_allocation() is not None
     for pi, kind in enumerate(group.pattern):
         keys = jax.random.split(jax.random.fold_in(key, pi), group.repeats)
-        out.append(jax.vmap(
-            lambda k: init_layer(k, cfg, kind, mlp_kind, cross))(keys))
+        if alloc:
+            tag = L.new_stack_tag()
+            per = []
+            for ri in range(group.repeats):
+                L.begin_repeat((tag, pi))
+                per.append(init_layer(keys[ri], cfg, kind, mlp_kind,
+                                      cross))
+            out.append(jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *per))
+        else:
+            out.append(jax.vmap(
+                lambda k: init_layer(k, cfg, kind, mlp_kind, cross))(keys))
     return out
 
 
 def init_params(key: jax.Array, cfg: ArchConfig):
+    if cfg.salr.budget is not None and L.current_allocation() is None:
+        return init_params_allocated(key, cfg)
     ks = jax.random.split(key, 8)
     is_encdec = bool(cfg.encoder_groups)
     params = {
@@ -89,6 +109,29 @@ def init_params(key: jax.Array, cfg: ArchConfig):
             "final_norm": init_rmsnorm(cfg.d_model, cfg),
         }
     return params
+
+
+def init_params_allocated(key: jax.Array, cfg: ArchConfig):
+    """Budget-allocated model compression (cfg.salr.budget; DESIGN.md §8).
+
+    Two passes over the IDENTICAL init traversal with the identical PRNG
+    keys: a survey pass records every compressible weight (placeholder
+    params, discarded), ``core.allocate`` resolves per-layer
+    (sparsity, rank) decisions under the global budget, and a commit
+    pass re-initializes consuming the decisions in traversal order.
+    MoE expert stacks compress inside ``init_moe``'s own vmap and keep
+    the global config (uniform within the expert stack)."""
+    from repro.core import allocate
+    from repro.models.layers import salr_cfg_for
+
+    survey = L.AllocationSurvey()
+    with L.allocation_scope(survey):
+        init_params(key, cfg)                  # placeholders, discarded
+    decisions = allocate.plan_linear_allocation(
+        survey.entries, salr_cfg_for(cfg), cfg.salr.budget)
+    feed = L.AllocationFeed(decisions)
+    with L.allocation_scope(feed):
+        return init_params(key, cfg)
 
 
 # ----------------------------------------------------------------- apply

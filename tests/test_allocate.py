@@ -1,0 +1,300 @@
+"""Budget allocator suite (core/allocate.py).
+
+Solver properties (budget conservation, spectrum monotonicity, align
+stepping, degenerate budgets) run through the hypothesis shim on
+synthetic spectra.  The compress-time planning layer is pinned by a
+BITWISE regression: the uniform-equivalent budget must reproduce the
+unallocated compress output exactly — at the plan level, the
+single-layer level, and the full scan-stacked model level — so turning
+the allocator on with today's global ``(sparsity, r)`` budget changes
+nothing for existing checkpoints.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis_compat import given, settings, st
+
+from repro.configs.base import BudgetConfig
+from repro.core import allocate
+from repro.core.salr import SALRConfig, apply_salr, compress_linear, layer_nbytes
+
+
+def _spectrum(rng, n, scale=1.0):
+    s = np.sort(rng.uniform(0.0, scale, size=n))[::-1]
+    return np.ascontiguousarray(s)
+
+
+def _stats(seed, n_layers, d=32, k=40, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return [allocate.LayerStats(name=f"l{i}", d_in=d, d_out=k,
+                                spectrum=_spectrum(rng, min(d, k), scale))
+            for i in range(n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# solver properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_layers=st.integers(1, 6),
+       budget=st.integers(0, 20_000), align=st.integers(1, 8))
+def test_budget_conservation(seed, n_layers, budget, align):
+    """Spent params never exceed the budget; every rank is align-stepped
+    (the final, smaller chunk makes full rank exactly reachable) and
+    capped at the layer's full rank."""
+    stats = _stats(seed, n_layers)
+    dec = allocate.allocate_ranks(stats, budget, align=align)
+    assert allocate.spent_params(stats, dec) <= budget
+    for st_, d in zip(stats, dec):
+        assert 0 <= d.res_rank <= st_.full_rank
+        assert d.res_rank % align == 0 or d.res_rank == st_.full_rank
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), budget=st.integers(0, 4_000),
+       align=st.integers(1, 4))
+def test_monotonicity_in_spectrum(seed, budget, align):
+    """A layer whose spectrum dominates another elementwise (same shape)
+    never receives a smaller rank: its marginal gains are larger at
+    every rank for the same cost."""
+    rng = np.random.default_rng(seed)
+    base = _spectrum(rng, 32)
+    big = allocate.LayerStats("big", 32, 40, spectrum=2.0 * base + 1.0)
+    small = allocate.LayerStats("small", 32, 40, spectrum=base)
+    dec = allocate.allocate_ranks([big, small], budget, align=align)
+    assert dec[0].res_rank >= dec[1].res_rank
+
+
+def test_degenerate_budgets():
+    stats = _stats(0, 3)
+    # zero budget -> zero ranks everywhere
+    for d in allocate.allocate_ranks(stats, 0):
+        assert d.res_rank == 0
+    # budget covering every layer at full rank -> full rank everywhere
+    # (strictly positive spectra, so no zero-gain chunk is skipped)
+    full = sum(st_.full_rank * st_.unit_cost for st_ in stats)
+    for st_, d in zip(stats, allocate.allocate_ranks(stats, 10 * full,
+                                                     align=5)):
+        assert d.res_rank == st_.full_rank
+        assert d.tail == 0.0
+    # an all-zero spectrum never spends budget, whatever the budget
+    dead = [allocate.LayerStats("z", 32, 40, spectrum=np.zeros(32))]
+    assert allocate.allocate_ranks(dead, 10 ** 9)[0].res_rank == 0
+
+
+def test_single_layer_exhausts_or_caps():
+    """One layer: greedy gives the largest affordable align-stepped
+    rank."""
+    stats = _stats(1, 1)
+    (d,) = allocate.allocate_ranks(stats, 11 * stats[0].unit_cost,
+                                   align=4)
+    assert d.res_rank == 8          # chunks of 4; 12 units unaffordable
+    (d,) = allocate.allocate_ranks(stats, 10 ** 9, align=4)
+    assert d.res_rank == stats[0].full_rank
+
+
+def test_max_rank_caps_allocation():
+    stats = _stats(2, 2)
+    for d in allocate.allocate_ranks(stats, 10 ** 9, align=4, max_rank=8):
+        assert d.res_rank == 8
+
+
+def test_uniform_policy_reproduces_global_rank():
+    """The uniform-equivalent budget under the uniform policy returns
+    exactly today's global rank (align=1)."""
+    stats = _stats(3, 4)
+    budget = allocate.uniform_equivalent_budget(stats, 6)
+    for d in allocate.allocate_ranks(stats, budget, policy="uniform"):
+        assert d.res_rank == 6
+
+
+def test_greedy_not_worse_than_uniform():
+    """Equal-shape layers: greedy selects the globally largest sigma^2
+    entries, so its total tail MSE is <= the uniform split at the same
+    budget."""
+    stats = _stats(4, 5)
+    budget = allocate.uniform_equivalent_budget(stats, 8)
+    greedy = allocate.allocate_ranks(stats, budget, align=1)
+    uniform = allocate.allocate_ranks(stats, budget, policy="uniform")
+    mse = lambda dec: sum(allocate.tail_mse(st_, d.res_rank)
+                          for st_, d in zip(stats, dec))
+    assert allocate.spent_params(stats, greedy) <= budget
+    assert mse(greedy) <= mse(uniform) + 1e-12
+
+
+def test_solver_input_validation():
+    stats = _stats(5, 1)
+    for bad in (dict(align=0), dict(budget_params=-1),
+                dict(policy="nope")):
+        kw = dict(budget_params=100)
+        kw.update(bad)
+        budget = kw.pop("budget_params")
+        try:
+            allocate.allocate_ranks(stats, budget, **kw)
+        except ValueError:
+            continue
+        raise AssertionError(f"accepted {bad}")
+
+
+# ---------------------------------------------------------------------------
+# plan-level: passthrough, global masks, stack uniformity
+# ---------------------------------------------------------------------------
+
+def _entries(seed, shapes, stacks=None):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, (d, k) in enumerate(shapes):
+        w = jnp.asarray(rng.normal(size=(d, k)) / np.sqrt(d), jnp.float32)
+        out.append(SimpleNamespace(
+            w=w, transposed=False,
+            stack=(stacks[i] if stacks is not None else i)))
+    return out
+
+
+def test_plan_passthrough_is_exact():
+    """adapter_params=None + uniform policy + uniform sparsity is the
+    documented no-op: every decision repeats the global config with no
+    mask/capacity overrides (the bitwise guarantee)."""
+    scfg = SALRConfig(sparsity=0.5, method="bitmap", res_rank=8,
+                      cap_align=8)
+    dec = allocate.plan_linear_allocation(
+        _entries(0, [(32, 40)] * 3), scfg,
+        BudgetConfig(policy="uniform", sparsity_mode="uniform"))
+    for d in dec:
+        assert d == allocate.LinearDecision(
+            sparsity=0.5, res_rank=8, pad_rank_to=8, mask=None,
+            cap_t=None)
+
+
+def test_plan_global_masks_trade_sparsity():
+    """Global-threshold sparsity: one shared magnitude threshold, so a
+    small-magnitude layer ends up sparser than a large-magnitude one
+    while the AVERAGE density matches the configured sparsity."""
+    scfg = SALRConfig(sparsity=0.5, method="bitmap", res_rank=4,
+                      cap_align=8, backend="reference")
+    entries = _entries(1, [(32, 40), (32, 40)])
+    entries[1].w = entries[1].w * 4.0      # uniformly larger magnitudes
+    dec = allocate.plan_linear_allocation(
+        entries, scfg, BudgetConfig(policy="greedy", rank_align=2))
+    assert dec[0].sparsity > 0.5 > dec[1].sparsity
+    kept = sum(float(np.asarray(d.mask).sum()) for d in dec)
+    total = sum(e.w.size for e in entries)
+    np.testing.assert_allclose(kept / total, 0.5, atol=0.02)
+    # the sparser layer's larger residual pulls in at least as much rank
+    assert dec[0].res_rank >= dec[1].res_rank
+
+
+def test_plan_stack_uniformity():
+    """Layers sharing a scan stack share one physical pad rank (the
+    stack max) and, for tiled kernel methods, one capacity (sized for
+    the stack's minimum sparsity)."""
+    scfg = SALRConfig(sparsity=0.5, method="bitmap", res_rank=4,
+                      cap_align=8, backend="kernel")
+    entries = _entries(2, [(32, 40)] * 4, stacks=["s0", "s0", "s1", "s1"])
+    entries[0].w = entries[0].w * 3.0
+    dec = allocate.plan_linear_allocation(
+        entries, scfg, BudgetConfig(policy="greedy", rank_align=2))
+    assert dec[0].pad_rank_to == dec[1].pad_rank_to == max(
+        dec[0].res_rank, dec[1].res_rank)
+    assert dec[2].pad_rank_to == dec[3].pad_rank_to == max(
+        dec[2].res_rank, dec[3].res_rank)
+    assert dec[0].cap_t == dec[1].cap_t is not None
+    assert dec[2].cap_t == dec[3].cap_t is not None
+    # physical params across a stack are uniform; logical may differ
+    spent = sum(d.res_rank * (32 + 40) for d in dec)
+    budget = allocate.uniform_equivalent_budget(
+        [allocate.layer_stats("x", e.w) for e in entries], 4)
+    assert spent <= budget
+
+
+# ---------------------------------------------------------------------------
+# bitwise uniform regression + pricing
+# ---------------------------------------------------------------------------
+
+def test_uniform_budget_reproduces_compress_linear_bitwise():
+    """Feeding the passthrough decision back through compress_linear's
+    override hooks is byte-identical to the unallocated call, for every
+    method and both orientations."""
+    budget = BudgetConfig(policy="uniform", sparsity_mode="uniform")
+    for method in ("dense", "mask", "bitmap", "nm", "bitmap_nf4"):
+        for transposed in (False, True):
+            key = jax.random.PRNGKey(7)
+            w = jax.random.normal(key, (48, 56)) / np.sqrt(48)
+            scfg = SALRConfig(sparsity=0.5, method=method, lora_rank=4,
+                              res_rank=4, cap_align=8)
+            (dec,) = allocate.plan_linear_allocation(
+                [SimpleNamespace(w=w, transposed=transposed, stack=0)],
+                scfg, budget)
+            plain = compress_linear(key, w, scfg, transposed=transposed)
+            fed = compress_linear(
+                key, w,
+                dataclasses.replace(scfg, sparsity=dec.sparsity,
+                                    res_rank=dec.res_rank),
+                transposed=transposed, mask=dec.mask, cap_t=dec.cap_t,
+                pad_rank_to=dec.pad_rank_to)
+            la = jax.tree_util.tree_leaves(plain)
+            lb = jax.tree_util.tree_leaves(fed)
+            assert len(la) == len(lb)
+            for a, b in zip(la, lb):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+
+
+def test_uniform_budget_reproduces_model_bitwise():
+    """Model-level regression: a budget equal to today's global
+    (sparsity, r) reproduces init_params output BITWISE through the
+    survey/commit two-pass init (identical PRNG traversal)."""
+    from repro import configs
+    from repro.models.model import init_params
+
+    cfg = configs.get("smollm_135m", smoke=True)
+    p0 = init_params(jax.random.PRNGKey(0), cfg)
+    cfg_b = cfg.with_(salr=dataclasses.replace(
+        cfg.salr, budget=BudgetConfig(policy="uniform",
+                                      sparsity_mode="uniform")))
+    p1 = init_params(jax.random.PRNGKey(0), cfg_b)
+    d0 = jax.tree_util.tree_structure(p0)
+    d1 = jax.tree_util.tree_structure(p1)
+    assert d0 == d1
+    for a, b in zip(jax.tree_util.tree_leaves(p0),
+                    jax.tree_util.tree_leaves(p1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_allocated_model_init_and_forward():
+    """Greedy global allocation on the smoke model: init succeeds,
+    ranks stay stack-uniform physically, forward is finite."""
+    from repro import configs
+    from repro.models.model import forward_hidden, init_params
+
+    cfg = configs.get("smollm_135m", smoke=True)
+    cfg_b = cfg.with_(salr=dataclasses.replace(
+        cfg.salr, budget=BudgetConfig(policy="greedy", rank_align=4)))
+    p = init_params(jax.random.PRNGKey(0), cfg_b)
+    tokens = jnp.zeros((1, 8), jnp.int32)
+    h = forward_hidden(p, cfg_b, tokens, None)
+    assert np.all(np.isfinite(np.asarray(h)))
+
+
+def test_layer_nbytes_prices_padded_rank():
+    """The roofline prices the PHYSICAL (padded) adapter layout: a
+    layer padded from r=3 to r=16 streams (d_in+d_out)*13 extra
+    elements."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (48, 56)) / np.sqrt(48)
+    scfg = SALRConfig(sparsity=0.5, method="bitmap", lora_rank=4,
+                      res_rank=3, cap_align=8)
+    plain = compress_linear(key, w, scfg)
+    padded = compress_linear(key, w, scfg, pad_rank_to=16)
+    itemsize = np.dtype(np.float32).itemsize
+    assert (layer_nbytes(padded) - layer_nbytes(plain)
+            == (48 + 56) * (16 - 3) * itemsize)
+    # and the padded bytes buy nothing: forwards agree
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 48)) / 4
+    np.testing.assert_allclose(
+        np.asarray(apply_salr(x, padded, backend="reference")),
+        np.asarray(apply_salr(x, plain, backend="reference")),
+        rtol=0, atol=1e-6)

@@ -92,6 +92,31 @@ def test_plan_repr_twin_catches_missing_twin():
     assert ("plan-repr-twin", "bitmap/nf4") not in rules(got)
 
 
+def test_plan_alloc_catches_unragged_dispatch():
+    # a registry where the fused bitmap op does NOT advertise
+    # ragged_rank: rank-padded adapters can't dispatch -> finding; and
+    # an adapter-serving contract without the flag surfaces by name
+    fake = {"salr_matmul": KernelContract(
+                "salr_matmul", "linear", True, ("linear:bitmap/native",)),
+            "lora_matmul": KernelContract(
+                "lora_matmul", "linear", True, ("adapter",))}
+    got = PS.check_alloc(ROOT, fake, ("bitmap",), ("native",))
+    assert ("plan-alloc-ragged", "bitmap/native") in rules(got)
+    assert ("plan-alloc-ragged", "contract:lora_matmul") in rules(got)
+
+    # flipping ragged_rank on clears both, including the quantized twin
+    fake = {"salr_matmul": KernelContract(
+                "salr_matmul", "linear", True, ("linear:bitmap/native",),
+                True),
+            "qsalr_matmul": KernelContract(
+                "qsalr_matmul", "linear", True, ("linear:bitmap/nf4",),
+                True),
+            "lora_matmul": KernelContract(
+                "lora_matmul", "linear", True, ("adapter",), True)}
+    got = PS.check_alloc(ROOT, fake, ("bitmap",), ("native", "nf4"))
+    assert not rules(got)
+
+
 def test_plan_moe_catches_unserved_route():
     got = PS.check_moe(
         ROOT,

@@ -141,6 +141,100 @@ def test_kernel_forward_grads_match_reference():
 
 
 # ---------------------------------------------------------------------------
+# heterogeneous-rank (budget-allocated) adapters — rank padding is exact
+# ---------------------------------------------------------------------------
+
+# (logical res_rank, physical stack-padded rank) pairs the allocator emits
+PAD_CASES = [(0, 8), (3, 8), (8, 8), (13, 16)]
+
+
+def _padded_layer(method, res_rank, pad_to, transposed=False, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (96, 104)) / np.sqrt(96)
+    cfg = SALRConfig(sparsity=0.5, method=method, lora_rank=8,
+                     res_rank=res_rank, cap_align=8, backend="kernel")
+    return compress_linear(key, w, cfg, transposed=transposed,
+                           pad_rank_to=pad_to)
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("res_rank,pad_to", PAD_CASES)
+def test_heterogeneous_rank_kernel_parity(method, res_rank, pad_to):
+    """Rank-padded adapters (the allocator's scan-stack layout) keep
+    kernel-vs-reference parity within the per-method budget for every
+    base representation."""
+    layer = _padded_layer(method, res_rank, pad_to)
+    assert layer.res is not None and layer.res.rank == pad_to
+    x = jax.random.normal(jax.random.PRNGKey(6), (5, layer.d_in)) / 4
+    y_ref = apply_salr(x, layer, backend="reference")
+    y_ker = apply_salr(x, layer, backend="kernel")
+    assert y_ker.shape == y_ref.shape == (5, layer.d_out)
+    assert _rel(y_ker, y_ref) <= error_budget("method", method), \
+        (method, res_rank, pad_to)
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("backend", ["reference", "kernel"])
+def test_rank_padding_preserves_forward(method, backend):
+    """Zero columns of A_cat / zero rows of B_cat contribute exact
+    zeros to the GEMM: the padded layer computes the unpadded layer's
+    forward."""
+    base = _padded_layer(method, 3, None)
+    padded = _padded_layer(method, 3, 8)
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, base.d_in)) / 4
+    y0 = np.asarray(apply_salr(x, base, backend=backend))
+    y1 = np.asarray(apply_salr(x, padded, backend=backend))
+    np.testing.assert_allclose(y1, y0, rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["bitmap", "nm"])
+def test_padded_ranks_stay_frozen(method):
+    """Gradients through padded adapter columns/rows are identically
+    zero (each factor's grad flows through the other, zero, factor) —
+    the allocator's parameter budget holds under training, not just at
+    compress time."""
+    r, pad = 3, 8
+    layer = _padded_layer(method, r, pad)
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, layer.d_in)) / 4
+    train, frozen = split_trainable(layer)
+
+    def loss(tp):
+        return jnp.sum(apply_salr(x, combine(tp, frozen),
+                                  backend="kernel") ** 2)
+
+    g = jax.grad(loss)(train)
+    ga, gb = np.asarray(g.res.a), np.asarray(g.res.b)
+    assert np.all(ga[:, r:] == 0) and np.any(ga[:, :r] != 0)
+    assert np.all(gb[r:, :] == 0) and np.any(gb[:r, :] != 0)
+
+
+def test_allocated_model_loss_fn_grad_smoke():
+    """make_loss_fn over a greedily budget-allocated model (mixed
+    per-layer ranks, global-threshold masks): finite loss, finite
+    adapter grads, frozen base untouched by the grad tree."""
+    from repro import configs
+    from repro.configs.base import BudgetConfig
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models.model import init_params
+    from repro.train.step import make_loss_fn
+
+    cfg = configs.get("smollm_135m", smoke=True)
+    cfg = cfg.with_(salr=dataclasses.replace(
+        cfg.salr, budget=BudgetConfig(policy="greedy", rank_align=4)))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    train, frozen = split_trainable(params)
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                global_batch=2, seed=3))
+    loss, grads = jax.value_and_grad(make_loss_fn(cfg))(
+        train, frozen, ds.batch_at(0))
+    assert np.isfinite(float(loss))
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert leaves
+    for l in leaves:
+        assert np.all(np.isfinite(np.asarray(l)))
+
+
+# ---------------------------------------------------------------------------
 # grouped MoE expert dispatch (ragged grouped GEMM, kernels/grouped_spmm.py)
 # ---------------------------------------------------------------------------
 
